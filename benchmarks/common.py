@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: CSV emission + roofline shortcuts."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Iterable
+
+import jax
+
+from repro.core import roofline as R
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def header():
+    print("name,us_per_call,derived")
+
+
+def wallclock_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def mem_s(bytes_: float) -> float:
+    return bytes_ / R.HBM_BW
+
+
+def comp_s(flops: float) -> float:
+    return flops / R.PEAK_FLOPS

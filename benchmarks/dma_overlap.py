@@ -1,0 +1,62 @@
+"""§IV reproduction: measured chunked transfer/compute overlap.
+
+Unlike the roofline figures this one is a *real wall-clock measurement* on
+this host: the ChunkScheduler runs the advection kernel over chunks with
+serial staging vs overlapped staging (JAX async dispatch = the paper's
+non-blocking DMA + kernel pool). On a single CPU device overlap is partial;
+on a real accelerator the transfer/compute overlap is full — the analytic
+§IV model for the TPU case is printed alongside.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.chunking import ChunkScheduler, overlap_model
+from repro.kernels.advection.ref import default_params, pw_advect_ref
+
+
+def run() -> None:
+    X, Y, Z = 16, 64, 64
+    p = default_params(Z)
+    kernel = jax.jit(lambda u, v, w: pw_advect_ref(u, v, w, p)[0])
+    rng = np.random.default_rng(0)
+    chunks = [tuple(rng.normal(size=(X, Y, Z)).astype(np.float32)
+                    for _ in range(3)) for _ in range(16)]
+    sched = ChunkScheduler(kernel, depth=4)
+    t = sched.time_both(chunks)
+    emit("dma.measured_serial", t.serial_s * 1e6, "")
+    emit("dma.measured_overlapped", t.overlapped_s * 1e6,
+         f"speedup={t.speedup:.2f};note=cpu_device_put_is_zero_copy")
+
+    # host-side data PREPARATION overlapped with device compute — the part of
+    # §IV that IS measurable on one CPU device (numpy releases the GIL):
+    import time
+    from repro.core.dataflow import Pipeline, Stage
+    rng2 = np.random.default_rng(1)
+    prep = lambda i: tuple(rng2.normal(size=(X, Y, Z)).astype(np.float32)
+                           for _ in range(3))
+    n = 12
+    t0 = time.perf_counter()
+    for i in range(n):
+        jax.block_until_ready(kernel(*prep(i)))
+    serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pipe = Pipeline([Stage("prep", prep),
+                     Stage("compute", lambda c: np.asarray(kernel(*c)))])
+    pipe.run(list(range(n)))
+    overlapped = time.perf_counter() - t0
+    emit("dma.prep_overlap_serial", serial * 1e6, "")
+    emit("dma.prep_overlap_pipelined", overlapped * 1e6,
+         f"speedup={serial/overlapped:.2f}")
+    # §IV analytic model at paper scale (12.88 GB moved for 268M points)
+    m = overlap_model(12.88e9, 0.2, 100e9, 64)
+    emit("dma.model_268M", m["overlapped_s"] * 1e6,
+         f"serial_overhead={m['dma_overhead_serial']*100:.0f}%;"
+         f"overlapped_overhead={m['dma_overhead_overlapped']*100:.0f}%;"
+         f"paper=71%->42%")
+
+
+if __name__ == "__main__":
+    run()

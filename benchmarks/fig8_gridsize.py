@@ -1,0 +1,62 @@
+"""Fig. 8 + Fig. 9 reproduction: runtime and GFLOP/s vs grid size, with the
+host-transfer (DMA) overhead split out.
+
+The paper: 1M..268M grid points; FPGA kernel-only time beats 18-core
+Broadwell at every size, but host<->card DMA overhead grows from 2% to >40%
+of total runtime; chunked overlap (§IV) hides most but not all of it
+(first/last chunks are exposed). TPU analogue: host->HBM staging over PCIe
+(~100 GB/s effective), overlapped per the same chunk model; kernel time from
+the v5e roofline at the dataflow+wide rung.
+
+Fig. 9's numbers derive directly: GFLOP/s = FLOPs / time.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import comp_s, emit, mem_s, wallclock_us
+from repro.core.chunking import overlap_model
+from repro.kernels.advection.advection import hbm_bytes_model
+from repro.kernels.advection.ref import default_params, flops_per_cell, pw_advect_ref
+from repro.stencil.advection import PAPER_GRIDS, stratus_fields
+
+PCIE_BW = 100e9        # host->HBM staging bandwidth (bytes/s)
+N_CHUNKS = 64
+ITEM = 4
+
+
+def run() -> None:
+    print("# fig8: total/kernel/DMA time vs grid size; fig9: GFLOP/s")
+    for name, (X, Y, Z) in PAPER_GRIDS.items():
+        cells = X * Y * Z
+        flops = cells * flops_per_cell()
+        kern_s = max(comp_s(flops),
+                     mem_s(hbm_bytes_model(X, Y, Z, ITEM, "wide")))
+        io_bytes = 2 * 3 * cells * ITEM          # 3 fields in + 3 out
+        m = overlap_model(io_bytes, kern_s, PCIE_BW, N_CHUNKS)
+        gf_kernel = flops / kern_s / 1e9
+        gf_total = flops / m["overlapped_s"] / 1e9
+        emit(f"fig8.{name}.staged", m["overlapped_s"] * 1e6,
+             f"kernel_us={kern_s*1e6:.0f};dma_overhead="
+             f"{m['dma_overhead_overlapped']*100:.0f}%")
+        # hardware adaptation: the v5e kernel is ~75x faster than the KU115's,
+        # so per-step host staging (the paper's regime) is PCIe-dominated at
+        # EVERY size. The TPU-native deployment keeps fields HBM-resident
+        # across timesteps (they fit: 268M pts x 6 fields x 4B = 6.4 GB);
+        # then the paper's DMA problem disappears entirely in steady state.
+        emit(f"fig8.{name}.resident", kern_s * 1e6, "dma_overhead=0%")
+        emit(f"fig9.{name}.gflops", 0.0,
+             f"kernel={gf_kernel:.0f};staged_total={gf_total:.0f}")
+
+    # CPU baseline wall-clock (reduced grid, the paper's CPU comparison)
+    X, Y, Z = 64, 128, 64
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    fn = jax.jit(lambda a, b, c: pw_advect_ref(a, b, c, p))
+    us = wallclock_us(fn, u, v, w)
+    cpu_gflops = (X * Y * Z * flops_per_cell()) / (us / 1e6) / 1e9
+    emit("fig8.cpu_reference", us, f"cpu_gflops={cpu_gflops:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Beyond-paper benchmark: the 40-cell roofline table from the dry-run JSONs.
+
+Prints one row per (arch x shape) single-pod cell: the three terms,
+bottleneck, MFU. Reads experiments/dryrun/*.json (run the dry-run first).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run() -> None:
+    if not DRYRUN.exists():
+        emit("roofline.missing", 0.0, "run python -m repro.launch.dryrun --all")
+        return
+    for f in sorted(DRYRUN.glob("*__16x16.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped") or "roofline" not in rec:
+            continue
+        r = rec.get("roofline_kernel_adjusted", rec["roofline"])
+        emit(f"roofline.{rec['arch']}.{rec['shape']}",
+             r["step_time_s"] * 1e6,
+             f"bound={r['bound']};mfu={r['mfu']:.3f};"
+             f"c={r['compute_s']:.2f}s;m={r['memory_s']:.2f}s;"
+             f"n={r['collective_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    run()

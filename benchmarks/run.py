@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import common
+
+
+def main() -> None:
+    from benchmarks import (dma_overlap, fig3_ladder, fig5_scaling,
+                            fig7_compare, fig8_gridsize, roofline_table)
+    common.header()
+    failures = []
+    for mod in (fig3_ladder, fig5_scaling, fig7_compare, fig8_gridsize,
+                dma_overlap, roofline_table):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Quickstart: train a tiny qwen3-family model for 30 steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_smoke_config
+from repro.launch.train import train_loop
+from repro.training.optimizer import OptConfig
+
+
+def main():
+    cfg = get_smoke_config("qwen3-32b")
+    _, history, _ = train_loop(
+        cfg, steps=30, batch=4, seq=64,
+        opt=OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=30))
+    print(f"loss: {history[0]:.3f} -> {history[-1]:.3f}")
+    assert history[-1] < history[0]
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

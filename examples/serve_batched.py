@@ -1,0 +1,43 @@
+"""Batched serving: continuous-batching engine over a tiny model.
+
+Requests arrive into a fixed decode batch; finished slots are immediately
+re-primed with queued requests while other slots keep decoding — the
+paper's §IV chunk/kernel-pool overlap, applied to inference serving.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import jax
+import numpy as np
+
+from repro import pspec
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = get_smoke_config("qwen3-32b")
+    layout = M.make_layout(cfg, tp=1)
+    params = pspec.init_params(M.param_specs(cfg, layout), jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, batch_size=3, max_len=96)
+
+    rng = np.random.default_rng(7)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, rng.integers(4, 24)).astype(np.int32),
+                    max_new_tokens=int(rng.integers(4, 12)))
+            for i in range(8)]
+    done = engine.run(reqs)
+    assert set(done) == {r.uid for r in reqs}
+    for uid in sorted(done):
+        print(f"req {uid}: {len(done[uid])} tokens -> {done[uid][:8]}...")
+
+    # determinism: rerunning the same request stream gives identical outputs
+    reqs2 = [Request(uid=r.uid, prompt=r.prompt, max_new_tokens=r.max_new_tokens)
+             for r in reqs]
+    again = ServingEngine(cfg, params, batch_size=3, max_len=96).run(reqs2)
+    assert again == done, "greedy decode must be deterministic"
+    print("serve_batched OK (deterministic greedy, continuous batching)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Chunked transfer/compute overlap — the paper's §IV on TPU/JAX.
+
+The paper splits host->PCIe field data into chunks, starts an advection
+kernel the moment *its* chunk lands, and copies results back while other
+kernels still run ("effectively ... CUDA streams", Fig. 6). On a JAX device
+the same structure is:
+
+  host chunk -> device_put (async) -> jit kernel (async dispatch) -> fetch
+
+`ChunkScheduler.run_overlapped` drives a pool of in-flight chunks, bounded by
+`depth` (the paper's kernel pool). JAX's async dispatch gives real
+transfer/compute overlap on a real device; on this CPU container the overlap
+is partial but measurable. `run_serial` is the paper's baseline ("transfer
+everything, then compute, then copy back"). The analytic model
+`overlap_model` reproduces Fig. 8's DMA-overhead fractions for TPU-scale
+bandwidth numbers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclass
+class ChunkTiming:
+    serial_s: float
+    overlapped_s: float
+
+    @property
+    def speedup(self) -> float:
+        return self.serial_s / max(self.overlapped_s, 1e-12)
+
+
+class ChunkScheduler:
+    """Overlap host->device transfer with per-chunk kernel compute."""
+
+    def __init__(self, kernel: Callable, *, depth: int = 4,
+                 device=None):
+        self.kernel = kernel          # jitted fn: chunk arrays -> result
+        self.depth = depth            # in-flight chunks (kernel pool size)
+        self.device = device or jax.devices()[0]
+
+    def _put(self, chunk):
+        return jax.tree.map(
+            lambda a: jax.device_put(a, self.device), chunk)
+
+    def run_serial(self, chunks: Sequence) -> List[np.ndarray]:
+        """Paper baseline: all transfers, then all compute, then all fetch."""
+        dev = [self._put(c) for c in chunks]
+        jax.block_until_ready(dev)
+        outs = [self.kernel(*c) if isinstance(c, tuple) else self.kernel(c)
+                for c in dev]
+        jax.block_until_ready(outs)
+        return [np.asarray(o) for o in outs]
+
+    def run_overlapped(self, chunks: Sequence) -> List[np.ndarray]:
+        """§IV: issue transfer i+depth while chunk i computes; fetch eagerly.
+
+        JAX dispatch is async: device_put and the kernel call return
+        immediately, so the host thread races ahead issuing work `depth`
+        chunks deep, exactly like the paper's non-blocking DMA + kernel pool.
+        """
+        results: List = [None] * len(chunks)
+        inflight: List = []
+        for i, c in enumerate(chunks):
+            d = self._put(c)
+            out = self.kernel(*d) if isinstance(d, tuple) else self.kernel(d)
+            inflight.append((i, out))
+            if len(inflight) >= self.depth:
+                j, o = inflight.pop(0)
+                results[j] = np.asarray(o)     # blocks only on the oldest
+        for j, o in inflight:
+            results[j] = np.asarray(o)
+        return results
+
+    def time_both(self, chunks, *, warmup: bool = True) -> ChunkTiming:
+        if warmup:
+            self.run_serial(chunks[:1])
+        t0 = time.perf_counter()
+        self.run_serial(chunks)
+        t1 = time.perf_counter()
+        self.run_overlapped(chunks)
+        t2 = time.perf_counter()
+        return ChunkTiming(t1 - t0, t2 - t1)
+
+
+def overlap_model(total_bytes: float, compute_s: float, bw: float,
+                  n_chunks: int) -> dict:
+    """Analytic §IV model: transfer T=total_bytes/bw against compute C.
+
+    serial      = T_in + C + T_out
+    overlapped  = max(C, T) + first-chunk-in + last-chunk-out
+    (the paper: "the first few input chunks and last few result chunks will
+    need to be waited on regardless").
+    """
+    t_in = total_bytes / bw
+    t_out = total_bytes / bw
+    serial = t_in + compute_s + t_out
+    chunk_in = t_in / n_chunks
+    chunk_out = t_out / n_chunks
+    overlapped = chunk_in + max(compute_s, t_in + t_out - chunk_in - chunk_out) + chunk_out
+    return {"serial_s": serial, "overlapped_s": overlapped,
+            "dma_overhead_serial": (t_in + t_out) / serial,
+            "dma_overhead_overlapped": max(overlapped - compute_s, 0.0) / overlapped,
+            "speedup": serial / overlapped}

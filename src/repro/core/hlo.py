@@ -1,0 +1,170 @@
+"""HLO-text analysis: collective inventory + phase attribution.
+
+This is the TPU analogue of the paper's profiler IP block: Vivado HLS gave
+the authors no way to see where DRAM time went, so they built a counter that
+attributed cycles to code blocks. XLA's `cost_analysis()` similarly reports
+only program totals, so this module walks the compiled HLO text and
+attributes *bytes on the wire* to each collective op (kind, shape, mesh
+group) — the numbers the roofline's collective term is built from.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-reduce.1 = (f32[128,64]{1,0}, f32[16]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    name: str
+    kind: str
+    out_bytes: int          # output shape bytes (per participant)
+    group_size: int         # participants per replica group
+    group_span: str         # "ici" | "dcn" | "unknown"
+    wire_bytes: float = 0.0  # est. bytes crossing each chip's links (ring algo)
+
+
+def _group_info(line: str, pod_size: int) -> Tuple[int, str]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs, total = int(m.group(1)), int(m.group(2)), int(m.group(3))
+        # iota groups [ng,gs]<=[total]: contiguous strided groups; a group is
+        # intra-pod iff its index span stays below pod_size
+        span = "ici"
+        if pod_size and gs > 1:
+            stride = total // (ng * gs) if ng * gs <= total else 1
+            if gs * max(stride, 1) > pod_size:
+                span = "dcn"
+        return gs, span
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        ids = [int(x) for x in first.split(",") if x.strip().isdigit()]
+        gs = max(len(ids), 1)
+        span = "ici"
+        if pod_size and ids and (max(ids) // pod_size != min(ids) // pod_size):
+            span = "dcn"
+        return gs, span
+    return 1, "unknown"
+
+
+def parse_collectives(hlo_text: str, *, pod_size: int = 0) -> List[CollectiveOp]:
+    """Inventory of collective ops with per-chip wire-byte estimates.
+
+    Ring-algorithm accounting (per participating chip):
+      all-reduce      2 * (n-1)/n * bytes
+      all-gather      (n-1)/n * bytes_out
+      reduce-scatter  (n-1)/n * bytes_in  (~= (n-1) * bytes_out)
+      all-to-all      (n-1)/n * bytes
+      collective-permute  bytes
+    """
+    seen = set()
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind = m.group(1), m.group(2), m.group(3)
+        base = name.split(".")[0]
+        if name in seen:
+            continue
+        seen.add(name)
+        if "-done" in line.split("=")[1][:60] and kind + "-done" in line:
+            continue  # -done carries no new bytes; -start counted
+        out_b = _shape_bytes(type_str)
+        gs, span = _group_info(line, pod_size)
+        n = max(gs, 1)
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / n * out_b
+        elif kind == "all-gather":
+            wire = (n - 1) / n * out_b
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * out_b  # in_bytes ~= n * out_bytes
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * out_b
+        else:  # collective-permute
+            wire = float(out_b)
+        ops.append(CollectiveOp(name, kind, out_b, n, span, wire))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "wire_bytes": 0.0})
+    for op in ops:
+        key = f"{op.kind}/{op.group_span}"
+        out[key]["count"] += 1
+        out[key]["wire_bytes"] += op.wire_bytes
+    return dict(out)
+
+
+def total_wire_bytes(ops: List[CollectiveOp], span: Optional[str] = None) -> float:
+    return sum(o.wire_bytes for o in ops if span is None or o.group_span == span)
+
+
+# ---------------------------------------------------------------------------
+# Phase attribution ("profiler blocks"): classify ops into load/compute/store
+# ---------------------------------------------------------------------------
+
+_DOT_RE = re.compile(r"=\s*\(?[^=]*?\)?\s*(dot|convolution)\(")
+_FUSION_RE = re.compile(r"=\s*[^=]*?fusion\(")
+_COPY_RE = re.compile(r"=\s*[^=]*?(copy|transpose|reshape|bitcast)\(")
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Rough census: how many dots / fusions / layout-change ops the program has.
+
+    Layout-change ops between sharded ops are the HLO signature of the paper's
+    "non-contiguous access" regression (Fig. 3 row 4) — they show data being
+    reshuffled rather than streamed.
+    """
+    census = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if _DOT_RE.search(line):
+            census["dot"] += 1
+        elif _FUSION_RE.search(line):
+            census["fusion"] += 1
+        elif _COPY_RE.search(line):
+            census["layout_change"] += 1
+        for k in _COLLECTIVE_KINDS:
+            if f" {k}(" in line or f" {k}-start(" in line:
+                census[k] += 1
+    return dict(census)

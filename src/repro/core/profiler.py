@@ -1,0 +1,85 @@
+"""Phase-attributing profiler over compiled XLA artifacts.
+
+"If you can't measure it you can't improve it" (§III-A). Vivado HLS gave the
+authors no on-device profiling, so they attached a counter IP block that
+attributed cycles to code blocks. XLA gives us program *totals*
+(`cost_analysis`) but no phase attribution, so this profiler recovers it the
+same way the paper did — by instrumenting variants:
+
+  * `profile(fn, args)`       — totals: flops, bytes, collectives, census
+  * `attribute(variants)`     — skip-block differentials: cost(full) minus
+                                cost(without block) = the block's share
+  * `wallclock(fn, args)`     — CPU wall time (the paper's gettimeofday
+                                cross-check of its cycle counters)
+
+Used by the dry-run (attention/scan core attribution) and the Fig. 3
+benchmark ladder.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core import hlo as H
+
+
+@dataclass
+class PhaseCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    census: Dict[str, int] = field(default_factory=dict)
+
+    def minus(self, other: "PhaseCost") -> "PhaseCost":
+        return PhaseCost(
+            max(self.flops - other.flops, 0.0),
+            max(self.bytes - other.bytes, 0.0),
+            max(self.ici_bytes - other.ici_bytes, 0.0),
+            max(self.dcn_bytes - other.dcn_bytes, 0.0),
+        )
+
+
+def profile(fn: Callable, *args, jit_kwargs: Optional[dict] = None,
+            pod_size: int = 0) -> PhaseCost:
+    """Lower+compile fn on abstract args and return its cost totals."""
+    jfn = jax.jit(fn, **(jit_kwargs or {}))
+    compiled = jfn.lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    ops = H.parse_collectives(text, pod_size=pod_size)
+    return PhaseCost(
+        flops=float(ca.get("flops", 0.0) or 0.0),
+        bytes=float(ca.get("bytes accessed", 0.0) or 0.0),
+        ici_bytes=H.total_wire_bytes(ops, "ici") + H.total_wire_bytes(ops, "unknown"),
+        dcn_bytes=H.total_wire_bytes(ops, "dcn"),
+        census=H.op_census(text),
+    )
+
+
+def attribute(full: PhaseCost, without: Dict[str, PhaseCost]) -> Dict[str, PhaseCost]:
+    """Differential phase attribution: share of each skipped block."""
+    out = {"total": full}
+    for name, w in without.items():
+        out[name] = full.minus(w)
+    rest = full
+    for name, w in without.items():
+        rest = rest.minus(out[name])
+    out["rest"] = rest
+    return out
+
+
+def wallclock(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time of a jitted callable on real inputs (seconds)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

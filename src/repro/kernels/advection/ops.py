@@ -1,0 +1,36 @@
+"""Jit'd public wrappers for the PW-advection kernel ladder.
+
+`pw_advect(..., variant=...)` selects the Fig. 3 rung; `interpret` toggles
+Pallas interpret mode (CPU validation) vs compiled TPU execution.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+
+from repro.kernels.advection import advection as K
+from repro.kernels.advection import ref as REF
+
+VARIANTS = {
+    "reference": None,
+    "blocked": K.advect_blocked,
+    "dataflow": K.advect_dataflow,
+    "wide": K.advect_wide,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def pw_advect(u, v, w, params: REF.AdvectParams, *, variant: str = "dataflow",
+              interpret: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    if variant == "reference":
+        return REF.pw_advect_ref(u, v, w, params)
+    fn = VARIANTS[variant]
+    return fn(u, v, w, params, interpret=interpret)
+
+
+def traffic_model(shape, itemsize: int, variant: str) -> int:
+    X, Y, Z = shape
+    return K.hbm_bytes_model(X, Y, Z, itemsize,
+                             "pointwise" if variant == "reference" else variant)

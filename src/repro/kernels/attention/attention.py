@@ -1,0 +1,110 @@
+"""Flash attention as a Pallas TPU kernel — the paper's dataflow discipline
+applied to the transformer hot spot.
+
+The KV stream through VMEM is the direct analogue of the paper's z-y slice
+window through BRAM: Q tiles stay resident (the paper's "current slices"),
+K/V tiles stream in HBM-burst-sized, lane-aligned blocks, and the online
+softmax statistics (m, l) play the role of the FIFO-decoupled accumulators.
+The S^2 logits never touch HBM — that is the entire point (cf. the dry-run
+roofline, where XLA-level attention charges dominate the memory term).
+
+GQA is handled in the *index map*: kv block index = q_head // group, so
+shared KV heads are fetched once per group rather than expanded in HBM.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks), kv innermost (sequential
+accumulation in VMEM scratch; Pallas double-buffers the next KV block
+against the current tile's compute — load/compute overlap, Fig. 4 style).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (Bq, Bk)
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot(p, v)
+    m_sc[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q (B,H,Sq,D); k,v (B,Hkv,Skv,D), H % Hkv == 0. Returns (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    group = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = scale or D ** -0.5
+
+    grid = (B, H, nq, nk)
+    q_spec = pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, D),
+                           lambda b, h, iq, ik: (b, h // group, ik, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0))
+
+    fn = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, n_kv=nk),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v)
+
+
+def vmem_bytes(block_q: int, block_k: int, D: int, itemsize: int = 2) -> int:
+    """VMEM working set of one program (for BlockSpec tuning)."""
+    io = (block_q * D + 2 * block_k * D) * itemsize + block_q * D * itemsize
+    scratch = (2 * block_q + block_q * D) * 4
+    logits = block_q * block_k * 4
+    return 2 * io + scratch + logits  # x2: double-buffered pipeline

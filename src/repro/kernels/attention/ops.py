@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the flash-attention Pallas kernel.
+
+`mha(q, k, v, ...)` takes (B, H, S, D)/(B, Hkv, S, D) tensors;
+`gqa_layout_attention` adapts the model's (B, S, K, G, D) layout so the
+kernel drops into `attention_apply` when `attention_impl="pallas"` on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.attention import flash_attention
+from repro.kernels.attention.ref import mha_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def mha(q, k, v, *, causal: bool = True, block_q: int = 128,
+        block_k: int = 128, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)
+
+
+def gqa_layout_attention(q5, k4, v4, *, causal: bool = True,
+                         interpret: bool = True):
+    """(B,S,K,G,D) q / (B,S,K,D) kv -> (B,S,K,G,D), via the Pallas kernel."""
+    B, S, K, G, D = q5.shape
+    q = q5.transpose(0, 2, 3, 1, 4).reshape(B, K * G, S, D)
+    k = k4.transpose(0, 2, 1, 3)
+    v = v4.transpose(0, 2, 1, 3)
+    o = mha(q, k, v, causal=causal, interpret=interpret)
+    return o.reshape(B, K, G, S, D).transpose(0, 3, 1, 2, 4)
+
+
+__all__ = ["mha", "gqa_layout_attention", "mha_ref"]

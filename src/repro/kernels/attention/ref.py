@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q (B,H,Sq,D); k,v (B,Hkv,Skv,D) with H % Hkv == 0. f32 softmax."""
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale or D ** -0.5
+    qg = q.reshape(B, Hkv, g, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), Skv - Sq)
+        s = jnp.where(mask, s, -2.0 ** 30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

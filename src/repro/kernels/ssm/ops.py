@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the selective-scan kernel + block-size guidance."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm.ssm import selective_scan, vmem_bytes
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan(xc, dt, Bmat, Cmat, A, h0, *, chunk: int = 128,
+               interpret: bool = True):
+    return selective_scan(xc, dt, Bmat, Cmat, A, h0, chunk=chunk,
+                          interpret=interpret)
+
+
+def pick_chunk(D: int, N: int, budget: int = 12 * 2**20) -> int:
+    """Largest power-of-two chunk whose working set fits the VMEM budget."""
+    c = 1024
+    while c > 8 and vmem_bytes(c, D, N) > budget:
+        c //= 2
+    return c

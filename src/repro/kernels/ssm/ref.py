@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the selective-scan (Mamba-1) chunk kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(xc, dt, Bmat, Cmat, A, h0):
+    """Sequential oracle.
+
+    xc   (B, S, D)   post-conv activations
+    dt   (B, S, D)   softplus'd timestep
+    Bmat (B, S, N)   input projection
+    Cmat (B, S, N)   output projection
+    A    (D, N)      negative state matrix
+    h0   (B, D, N)   initial state
+    Returns (y (B, S, D), h_final (B, D, N)), all f32.
+    """
+    xc, dt, Bmat, Cmat, A, h0 = (t.astype(jnp.float32)
+                                 for t in (xc, dt, Bmat, Cmat, A, h0))
+    B, S, D = xc.shape
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a = jnp.exp(dt_t[..., None] * A)                 # (B, D, N)
+        bu = (dt_t * x_t)[..., None] * b_t[:, None, :]   # (B, D, N)
+        h = a * h + bu
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    inputs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dt, 1, 0),
+              jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0))
+    h, ys = jax.lax.scan(step, h0, inputs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,97 @@
+"""Selective-scan (Mamba-1) as a Pallas TPU kernel.
+
+The paper's BRAM slice window in SSM form: the (chunk, D, N) discretised
+state tensors never leave VMEM — only the chunk inputs (x, dt, B, C) stream
+in and (y, inter-chunk state) stream out. Grid = (batch, n_chunks); the
+chunk axis is sequential with the running state h carried in VMEM scratch,
+exactly like the advection kernel's slice shift-register.
+
+Inside a chunk the recurrence is evaluated with an associative (Blelloch)
+scan over log2(chunk) rounds — MXU/VPU-friendly tree form rather than a
+length-`chunk` sequential loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_body(x, dt, b, c, A, h0):
+    """One chunk, fully in registers/VMEM. Shapes: x/dt (C,D); b/c (C,N);
+    A (D,N); h0 (D,N). Returns (y (C,D), h_final (D,N))."""
+    C = x.shape[0]
+    a = jnp.exp(dt[..., None] * A)                  # (C, D, N)
+    bu = (dt * x)[..., None] * b[:, None, :]        # (C, D, N)
+
+    # associative scan (prefix composition of h -> a*h + bu), log2(C) rounds
+    def combine(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+    pa, pb = jax.lax.associative_scan(combine, (a, bu), axis=0)
+    h_all = pa * h0[None] + pb                      # (C, D, N)
+    y = jnp.einsum("cdn,cn->cd", h_all, c)
+    return y, h_all[-1]
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
+            y_ref, hout_ref, h_sc, *, n_chunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_sc[...] = h0_ref[0].astype(jnp.float32)
+
+    y, h = _chunk_body(x_ref[0].astype(jnp.float32),
+                       dt_ref[0].astype(jnp.float32),
+                       b_ref[0].astype(jnp.float32),
+                       c_ref[0].astype(jnp.float32),
+                       a_ref[...].astype(jnp.float32),
+                       h_sc[...])
+    h_sc[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == n_chunks - 1)
+    def _final():
+        hout_ref[0] = h_sc[...].astype(hout_ref.dtype)
+
+
+def selective_scan(xc, dt, Bmat, Cmat, A, h0, *, chunk: int = 128,
+                   interpret: bool = True):
+    """xc/dt (B,S,D); Bmat/Cmat (B,S,N); A (D,N); h0 (B,D,N).
+
+    Returns (y (B,S,D) f32, h_final (B,D,N) f32)."""
+    B, S, D = xc.shape
+    N = Bmat.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    grid = (B, n)
+    seq_spec = lambda width: pl.BlockSpec((1, chunk, width),
+                                          lambda b, j: (b, j, 0))
+    a_spec = pl.BlockSpec((D, N), lambda b, j: (0, 0))
+    h_spec = pl.BlockSpec((1, D, N), lambda b, j: (b, 0, 0))
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n),
+        grid=grid,
+        in_specs=[seq_spec(D), seq_spec(D), seq_spec(N), seq_spec(N),
+                  a_spec, h_spec],
+        out_specs=[seq_spec(D), h_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, D, N), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((D, N), jnp.float32)],
+        interpret=interpret,
+    )
+    return tuple(fn(xc, dt, Bmat, Cmat, A, h0))
+
+
+def vmem_bytes(chunk: int, D: int, N: int, itemsize: int = 2) -> int:
+    """Working set of one program: chunk IO + (chunk, D, N) scan tensors."""
+    io = (2 * chunk * D + 2 * chunk * N) * itemsize + chunk * D * 4
+    scan = 2 * chunk * D * N * 4          # a, bu in f32
+    state = D * N * 4
+    return 2 * io + scan + state

@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * proof of shardability: `.lower().compile()` on the production mesh
+    (16x16 single-pod and 2x16x16 multi-pod) succeeds,
+  * `memory_analysis()` (bytes per device — does it fit 16 GiB HBM),
+  * roofline terms: per-device FLOPs / HBM bytes from `cost_analysis()` and
+    per-chip collective wire bytes parsed from the HLO, using *differential
+    costing* (1-layer vs 2-layer unrolled lowerings; scan bodies are costed
+    once by XLA, so the scanned full compile cannot be used for FLOPs).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
+  python -m repro.launch.dryrun --all --skip-cost        # shardability only
+Outputs JSON records under experiments/dryrun/.
+"""
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import pspec
+from repro.config import ALL_SHAPES, SHAPES, ArchConfig, RunShape, supports
+from repro.configs import ARCH_IDS, get_config
+from repro.core import hlo as H
+from repro.core import roofline as R
+from repro.distributed.sharding import make_rules, sharding_for
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh, tp_degree
+from repro.models import model as M
+from repro.training import step as TS
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _divisor_near(n: int, target: int) -> int:
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and abs(d - target) < abs(best - target):
+            best = d
+    return best
+
+
+def exec_policy(cfg: ArchConfig, shape: RunShape, *, for_cost: bool = False,
+                overrides: dict | None = None) -> ArchConfig:
+    """Execution knobs for the production dry-run (documented in DESIGN.md)."""
+    kw: dict = {}
+    uniform = len(set(M.layer_kinds(cfg))) <= 1 and cfg.family != "encdec"
+    if shape.kind == "train":
+        kw["remat"] = "full"
+        kw["seq_parallel"] = True
+        if cfg.scan_layers and uniform:
+            kw["scan_group"] = _divisor_near(cfg.n_layers,
+                                             int(math.sqrt(cfg.n_layers)) + 2)
+        elif not uniform:
+            kw["scan_group"] = 3  # enables pattern-grouped scan (hybrid/moe)
+    else:
+        kw["remat"] = "none"
+        kw["seq_parallel"] = shape.kind == "prefill"
+    kw["attention_impl"] = "chunked"
+    if for_cost:
+        kw["scan_layers"] = False
+        kw["scan_group"] = 0
+        kw["attention_impl"] = "dense"  # exact-FLOP logits (chunked == dense math)
+    if overrides:
+        kw.update(overrides)
+    if "expert_fsdp" in kw:  # nested MoE knob
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, expert_fsdp=bool(kw.pop("expert_fsdp"))))
+    return cfg.replace(**kw)
+
+
+def _cost_cfg(cfg: ArchConfig, n: int) -> ArchConfig:
+    """Reduced-layer config for differential costing (n pattern-groups)."""
+    if cfg.family == "encdec":
+        e = dataclasses.replace(cfg.encdec, enc_layers=n, dec_layers=n)
+        return cfg.replace(encdec=e)
+    if cfg.family == "hybrid":
+        return cfg.replace(n_layers=3 * n)  # n pattern-groups of (rec,rec,attn)
+    if cfg.family == "moe" and cfg.moe.moe_every > 1:
+        return cfg.replace(n_layers=cfg.moe.moe_every * n)
+    return cfg.replace(n_layers=n)
+
+
+def _layer_multiplier(cfg: ArchConfig) -> float:
+    """How many differential units the full config has."""
+    if cfg.family == "encdec":
+        return float(cfg.encdec.enc_layers)  # enc+dec pairs (equal counts)
+    if cfg.family == "hybrid":
+        return cfg.n_layers / 3.0
+    if cfg.family == "moe" and cfg.moe.moe_every > 1:
+        return cfg.n_layers / cfg.moe.moe_every
+    return float(cfg.n_layers)
+
+
+def build_cell(cfg: ArchConfig, shape: RunShape, mesh, *, unroll=False):
+    """Build (fn, args_abstract, in_shardings, out_shardings, donate)."""
+    tp = tp_degree(mesh)
+    multi = "pod" in mesh.shape
+    layout = M.make_layout(cfg, tp)
+    rules = make_rules(multi_pod=multi, shape_kind=shape.kind,
+                       seq_parallel=cfg.seq_parallel)
+    ispecs, _ = SP.input_specs(cfg, shape)
+    bshard = SP.batch_shardings(cfg, shape, rules, mesh)
+
+    if shape.kind == "train":
+        state_sp = TS.state_specs(cfg, layout)
+        st_abs = pspec.abstract_params(state_sp)
+        st_sh = pspec.param_shardings(state_sp, rules, mesh)
+        fn = TS.make_train_step(cfg, layout, rules, mesh, unroll=unroll)
+        return (fn, (st_abs, ispecs), (st_sh, bshard), (st_sh, None), (0,))
+    if shape.kind == "prefill":
+        p_sp = M.param_specs(cfg, layout)
+        p_abs = pspec.abstract_params(p_sp)
+        p_sh = pspec.param_shardings(p_sp, rules, mesh)
+        fn = TS.make_prefill_step(cfg, layout, rules, mesh, unroll=unroll)
+        return (fn, (p_abs, ispecs), (p_sh, bshard), None, ())
+    # decode
+    p_sp = M.param_specs(cfg, layout)
+    p_abs = pspec.abstract_params(p_sp)
+    p_sh = pspec.param_shardings(p_sp, rules, mesh)
+    c_sp = M.cache_specs(cfg, layout, shape.global_batch, shape.seq_len)
+    c_abs = pspec.abstract_params(c_sp)
+    c_sh = pspec.param_shardings(c_sp, rules, mesh)
+    fn = TS.make_serve_step(cfg, layout, rules, mesh)
+    return (fn, (p_abs, c_abs, ispecs), (p_sh, c_sh, bshard), (None, c_sh), (1,))
+
+
+def lower_compile(cfg, shape, mesh, *, unroll=False):
+    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh, unroll=unroll)
+    with mesh:
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def mem_record(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    rec = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        rec[k] = getattr(ma, k, None)
+    args_b = rec.get("argument_size_in_bytes") or 0
+    alias_b = rec.get("alias_size_in_bytes") or 0
+    temp_b = rec.get("temp_size_in_bytes") or 0
+    out_b = rec.get("output_size_in_bytes") or 0
+    rec["resident_bytes_per_dev"] = args_b + temp_b + max(out_b - alias_b, 0)
+    rec["fits_16g"] = rec["resident_bytes_per_dev"] <= R.HBM_PER_CHIP
+    return rec
+
+
+def _one_cost_lowering(cfg, shape, mesh, pod) -> dict:
+    lowered, compiled = lower_compile(cfg, shape, mesh, unroll=True)
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    ops = H.parse_collectives(text, pod_size=pod)
+    rec = {
+        "flops": float(ca.get("flops", 0.0) or 0.0),
+        "bytes": float(ca.get("bytes accessed", 0.0) or 0.0),
+        "ici": H.total_wire_bytes(ops, "ici") + H.total_wire_bytes(ops, "unknown"),
+        "dcn": H.total_wire_bytes(ops, "dcn"),
+        "census": H.op_census(text),
+    }
+    del lowered, compiled, text
+    return rec
+
+
+def cost_record(cfg, shape, mesh, *, attribute_core: bool = True,
+                overrides=None) -> dict:
+    """Differential costing: unrolled 1-unit vs 2-unit lowerings, plus a
+    skip-core pair that attributes bytes/FLOPs to the S^2/scan cores (the
+    paper's profiler-block methodology applied to HLO)."""
+    pod = mesh.shape.get("data", 16) * mesh.shape.get("model", 16)
+    recs, skips = {}, {}
+    for n in (1, 2):
+        c = exec_policy(_cost_cfg(cfg, n), shape, for_cost=True,
+                        overrides=overrides)
+        recs[n] = _one_cost_lowering(c, shape, mesh, pod)
+        if attribute_core:
+            cs = c.replace(attention_impl="skip_core")
+            skips[n] = _one_cost_lowering(cs, shape, mesh, pod)
+    mult = _layer_multiplier(cfg)
+    out = {}
+    for key in ("flops", "bytes", "ici", "dcn"):
+        out[key] = R.differential(recs[1], recs[2], mult, key)
+    out["per_layer"] = {k: recs[2][k] - recs[1][k]
+                        for k in ("flops", "bytes", "ici", "dcn")}
+    out["const"] = {k: max(recs[1][k] - out["per_layer"][k], 0.0)
+                    for k in ("flops", "bytes", "ici", "dcn")}
+    out["census_2l"] = recs[2]["census"]
+    if skips:
+        out["core"] = {}
+        for key in ("flops", "bytes"):
+            total_skip = R.differential(skips[1], skips[2], mult, key)
+            out["core"][key] = max(out[key] - total_skip, 0.0)
+            out["core"][f"{key}_rest"] = total_skip
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             skip_cost: bool = False, overrides=None,
+             tag: str = "") -> dict:
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supports(cfg0, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.shape.values())
+    cfg = exec_policy(cfg0, shape, overrides=overrides)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(str(v) for v in mesh.shape.values()),
+           "multi_pod": multi_pod, "n_chips": n_chips, "tag": tag,
+           "exec": {"remat": cfg.remat, "scan_group": cfg.scan_group,
+                    "seq_parallel": cfg.seq_parallel,
+                    "attention_impl": cfg.attention_impl,
+                    "param_dtype": cfg.param_dtype,
+                    "opt_dtype": cfg.opt_dtype}}
+    t0 = time.time()
+    lowered, compiled = lower_compile(cfg, shape, mesh)
+    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["memory"] = mem_record(compiled)
+    full_text = compiled.as_text()
+    pod = mesh.shape.get("data", 16) * mesh.shape.get("model", 16)
+    rec["census_full"] = H.op_census(full_text)
+    ops = H.parse_collectives(full_text, pod_size=pod)
+    rec["collectives_full_unscaled"] = H.collective_summary(ops)
+    del full_text, lowered, compiled
+
+    if not skip_cost and not multi_pod:
+        cost = cost_record(cfg0, shape, mesh, overrides=overrides)
+        terms = R.RooflineTerms(
+            flops_per_dev=cost["flops"],
+            hbm_bytes_per_dev=cost["bytes"],
+            ici_wire_bytes=cost["ici"],
+            dcn_wire_bytes=cost["dcn"],
+            n_chips=n_chips,
+            model_flops_global=R.model_flops(cfg0, shape),
+        )
+        rec["cost"] = cost
+        rec["roofline"] = terms.as_dict()
+        if "core" in cost:
+            layout = M.make_layout(cfg0, tp_degree(mesh))
+            core_io = R.kernel_core_io_bytes(cfg0, shape, layout,
+                                             dict(mesh.shape))
+            adj_bytes = cost["bytes"] - cost["core"]["bytes"] + core_io
+            adj = dataclasses.replace(terms, hbm_bytes_per_dev=adj_bytes)
+            rec["core_io_bytes"] = core_io
+            rec["roofline_kernel_adjusted"] = adj.as_dict()
+            # fused-TPU streaming estimate (third bracket; see roofline.py)
+            stream_bytes = R.streaming_memory_bytes(
+                cfg, shape,
+                args_bytes_per_dev=rec["memory"]["argument_size_in_bytes"] or 0,
+                core_io_bytes=core_io, mesh_shape=dict(mesh.shape))
+            stream = dataclasses.replace(terms, hbm_bytes_per_dev=stream_bytes)
+            rec["roofline_streaming"] = stream.as_dict()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--singlepod-only", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--override", action="append", default=[],
+                    help="exec override key=value (e.g. param_dtype=bfloat16)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = []
+    if not args.multipod_only:
+        meshes.append(False)
+    if not args.singlepod_only:
+        meshes.append(True)
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                cell = f"{arch}/{shape}/{'2x16x16' if multi else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, multi_pod=multi,
+                                   skip_cost=args.skip_cost,
+                                   overrides=overrides or None, tag=args.tag)
+                    status = ("SKIP" if rec.get("skipped") else
+                              f"ok compile={rec.get('compile_s')}s "
+                              f"resident={rec.get('memory', {}).get('resident_bytes_per_dev', 0)/2**30:.2f}GiB"
+                              + (f" bound={rec['roofline']['bound']}"
+                                 if "roofline" in rec else ""))
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append(cell)
+                    rec = {"arch": arch, "shape": shape, "multi_pod": multi,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:],
+                           "tag": args.tag}
+                    status = f"FAIL {type(e).__name__}: {str(e)[:120]}"
+                name = f"{arch}__{shape}__{'2x16x16' if multi else '16x16'}"
+                if args.tag != "baseline":
+                    name += f"__{args.tag}"
+                (OUT_DIR / f"{name}.json").write_text(json.dumps(rec, indent=1))
+                print(f"[dryrun] {cell:60s} {status}", flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

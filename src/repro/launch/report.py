@@ -1,0 +1,144 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--tag baseline]
+prints markdown; use `--write` to refresh the §Dry-run/§Roofline sections
+inside EXPERIMENTS.md between the AUTO-GENERATED markers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def _gb(x) -> str:
+    return f"{(x or 0)/2**30:.2f}"
+
+
+def load(tag: str = "baseline"):
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag", "baseline") != tag:
+            continue
+        r["_file"] = f.name
+        recs.append(r)
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | mesh | compile s | resident GiB/dev | fits 16G | collectives (full program) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                       f"SKIP: {r['reason']} |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                       f"| - | - | - | ERROR {r['error'][:60]} |")
+            continue
+        m = r["memory"]
+        cc = r.get("census_full", {})
+        coll = ",".join(f"{k}:{v}" for k, v in sorted(cc.items())
+                        if k in ("all-gather", "all-reduce", "reduce-scatter",
+                                 "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+            f"| {_gb(m['resident_bytes_per_dev'])} "
+            f"| {'Y' if m['fits_16g'] else 'N'} | {coll} |")
+    return "\n".join(out)
+
+
+def _streaming(r):
+    """Fused-TPU streaming memory term (backfilled for older records)."""
+    if "roofline_streaming" in r:
+        return r["roofline_streaming"]
+    if "roofline" not in r or "core_io_bytes" not in r:
+        return None
+    import dataclasses
+    from repro.config import SHAPES
+    from repro.configs import get_config
+    from repro.core import roofline as R
+    from repro.launch.dryrun import exec_policy
+    cfg = exec_policy(get_config(r["arch"]), SHAPES[r["shape"]])
+    a = r["roofline"]
+    terms = R.RooflineTerms(
+        flops_per_dev=a["flops_per_dev"], hbm_bytes_per_dev=0.0,
+        ici_wire_bytes=a["ici_wire_bytes"], dcn_wire_bytes=a["dcn_wire_bytes"],
+        n_chips=a["n_chips"], model_flops_global=a["model_flops_global"])
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16} if r.get("multi_pod")
+                  else {"data": 16, "model": 16})
+    b = R.streaming_memory_bytes(
+        cfg, SHAPES[r["shape"]],
+        args_bytes_per_dev=r["memory"].get("argument_size_in_bytes") or 0,
+        core_io_bytes=r["core_io_bytes"], mesh_shape=mesh_shape)
+    return dataclasses.replace(terms, hbm_bytes_per_dev=b).as_dict()
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | shape | compute s | memory s raw→kernel-adj→streaming | "
+           "collective s | bound* | step* s | MFU* | useful-FLOPs |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("skipped") or "roofline" not in r:
+            continue
+        if r.get("multi_pod"):
+            continue
+        a = r["roofline"]
+        k = r.get("roofline_kernel_adjusted", a)
+        s = _streaming(r) or k
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {k['compute_s']:.3f} "
+            f"| {a['memory_s']:.2f}→{k['memory_s']:.3f}→{s['memory_s']:.3f} "
+            f"| {k['collective_s']:.3f} | {s['bound']} "
+            f"| {s['step_time_s']:.3f} | {s['mfu']:.3f} "
+            f"| {k['useful_flops_ratio']:.2f} |")
+    out.append("")
+    out.append("(*) bound/step/MFU at the fused-TPU streaming memory estimate;"
+               " raw & kernel-adjusted columns bracket it (core/roofline.py).")
+    return "\n".join(out)
+
+
+def summary(recs) -> str:
+    cells = [r for r in recs if not r.get("skipped") and "error" not in r]
+    skips = [r for r in recs if r.get("skipped")]
+    errs = [r for r in recs if "error" in r]
+    sp = [r for r in cells if not r.get("multi_pod")]
+    mp = [r for r in cells if r.get("multi_pod")]
+    fits = sum(1 for r in cells if r.get("memory", {}).get("fits_16g"))
+    return (f"cells compiled: {len(cells)} (single-pod {len(sp)}, "
+            f"multi-pod {len(mp)}), skipped-by-rule: {len(skips)}, "
+            f"errors: {len(errs)}; fit in 16 GiB/dev: {fits}/{len(cells)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.tag)
+    md = (f"### Summary ({args.tag})\n\n{summary(recs)}\n\n"
+          f"### Dry-run table\n\n{dryrun_table(recs)}\n\n"
+          f"### Roofline table (single-pod 16x16, kernel-adjusted)\n\n"
+          f"{roofline_table(recs)}\n")
+    if args.write:
+        path = ROOT / "EXPERIMENTS.md"
+        text = path.read_text() if path.exists() else ""
+        start, end = "<!-- AUTO-DRYRUN-START -->", "<!-- AUTO-DRYRUN-END -->"
+        if start in text:
+            pre = text.split(start)[0]
+            post = text.split(end)[1]
+            path.write_text(pre + start + "\n" + md + "\n" + end + post)
+        else:
+            path.write_text(text + "\n" + start + "\n" + md + "\n" + end + "\n")
+        print(f"wrote {path}")
+    else:
+        print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Abstract input specs per (architecture x run shape).
+
+ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no allocation) for
+every model input, plus the matching logical axes used to derive shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, RunShape
+from repro.distributed.sharding import HeadLayout, Rules, sharding_for
+from repro.models import model as M
+
+Specs = Dict[str, jax.ShapeDtypeStruct]
+Axes = Dict[str, Tuple]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: RunShape) -> Tuple[Specs, Axes]:
+    """Returns ({name: ShapeDtypeStruct}, {name: logical axes})."""
+    B, S = shape.global_batch, shape.seq_len
+    E = cfg.d_model
+    cd = cfg.compute_dtype
+
+    if shape.kind in ("train", "prefill"):
+        specs: Specs = {}
+        axes: Axes = {}
+        if cfg.family == "encdec":
+            Td = cfg.encdec.dec_len
+            specs["enc_embeds"] = _sds((B, S, E), cd)
+            axes["enc_embeds"] = ("batch", None, None)
+            specs["dec_inputs"] = _sds((B, Td), "int32")
+            axes["dec_inputs"] = ("batch", None)
+            if shape.kind == "train":
+                specs["targets"] = _sds((B, Td), "int32")
+                axes["targets"] = ("batch", None)
+            return specs, axes
+        if cfg.embeds_input:
+            specs["embeds"] = _sds((B, S, E), cd)
+            axes["embeds"] = ("batch", None, None)
+            if cfg.pos == "mrope":
+                specs["positions"] = _sds((B, S, 3), "int32")
+                axes["positions"] = ("batch", None, None)
+        else:
+            specs["inputs"] = _sds((B, S), "int32")
+            axes["inputs"] = ("batch", None)
+        if shape.kind == "train":
+            specs["targets"] = _sds((B, S), "int32")
+            axes["targets"] = ("batch", None)
+        return specs, axes
+
+    # decode: one new token against a seq_len cache
+    specs = {"token": _sds((B,), "int32"), "pos": _sds((B,), "int32")}
+    axes = {"token": ("batch",), "pos": ("batch",)}
+    if cfg.embeds_input and cfg.family != "encdec":
+        specs["embeds"] = _sds((B, 1, E), cd)
+        axes["embeds"] = ("batch", None, None)
+    return specs, axes
+
+
+def batch_shardings(cfg: ArchConfig, shape: RunShape, rules: Rules, mesh):
+    specs, axes = input_specs(cfg, shape)
+    return {k: sharding_for(specs[k].shape, axes[k], rules, mesh)
+            for k in specs}
+
+
+def decode_cache_abstract(cfg: ArchConfig, layout: HeadLayout,
+                          shape: RunShape):
+    """Abstract cache tree for a decode shape (cache length = seq_len)."""
+    from repro import pspec
+    specs = M.cache_specs(cfg, layout, shape.global_batch, shape.seq_len)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, shape: RunShape, rng=None, batch=None, seq=None):
+    """Materialise a random batch matching input_specs (smoke/examples)."""
+    import numpy as np
+    rng = rng or np.random.default_rng(0)
+    sh = shape
+    if batch or seq:
+        import dataclasses
+        sh = dataclasses.replace(shape,
+                                 global_batch=batch or shape.global_batch,
+                                 seq_len=seq or shape.seq_len)
+    specs, _ = input_specs(cfg, sh)
+    out = {}
+    for k, s in specs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = cfg.vocab_size if k in ("inputs", "targets", "dec_inputs", "token") else max(sh.seq_len, 4)
+            out[k] = jnp.asarray(rng.integers(0, hi, s.shape), s.dtype)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape), jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,578 @@
+"""Per-family layer blocks: param specs + apply fns.
+
+Each block kind provides ``<kind>_specs(cfg, layout) -> pytree[ParamSpec]``
+and an apply function operating on (params, x, ctx).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.distributed.sharding import HeadLayout, Rules, constrain
+from repro.models import layers as L
+from repro.pspec import ParamSpec
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class Ctx:
+    """Per-call context: positions, mode, sharding, cache slot."""
+    cfg: ArchConfig
+    layout: HeadLayout
+    rules: Optional[Rules] = None
+    mesh: Any = None
+    positions: Any = None        # (B,S) or (B,S,3) for mrope
+    mode: str = "train"          # train | prefill | decode
+    cache: Any = None            # layer cache dict at decode
+    pos: Any = None              # (B,) decode position
+    causal: bool = True
+    unroll: bool = False         # unroll inner scans for exact-FLOP costing
+    new_cache: Any = None        # out: updated layer cache
+
+    def con(self, x, axes):
+        return constrain(x, axes, self.rules, self.mesh) if self.rules else x
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ArchConfig, layout: HeadLayout, dt: str) -> Params:
+    E, D = cfg.d_model, cfg.head_dim
+    Hs, Ks = layout.n_q_stored, layout.n_kv_stored
+    p: Params = {
+        "wq": ParamSpec((E, Hs, D), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamSpec((E, Ks, D), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": ParamSpec((E, Ks, D), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": ParamSpec((Hs, D, E), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((Hs, D), ("heads", "head_dim"), dt, "zeros")
+        p["bk"] = ParamSpec((Ks, D), ("kv_heads", "head_dim"), dt, "zeros")
+        p["bv"] = ParamSpec((Ks, D), ("kv_heads", "head_dim"), dt, "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((D,), (None,), dt, "ones")
+        p["k_norm"] = ParamSpec((D,), (None,), dt, "ones")
+    return p
+
+
+def _q_head_mask(layout: HeadLayout, dtype):
+    if layout.n_q_stored == layout.n_q:
+        return None
+    return jnp.asarray(layout.q_head_mask(), dtype).reshape(
+        layout.n_kv_stored, layout.q_per_group)
+
+
+def attention_apply(p: Params, x, ctx: Ctx, *, kv_x=None, window: int = 0,
+                    use_rope: Optional[bool] = None,
+                    is_cross: bool = False) -> jax.Array:
+    """x: (B, S, E). kv_x: cross-attention source (B, Skv, E) if given."""
+    cfg, lo = ctx.cfg, ctx.layout
+    B, S, E = x.shape
+    D = cfg.head_dim
+    kv_src = x if kv_x is None else kv_x
+    Skv = kv_src.shape[1]
+
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, S, lo.n_kv_stored, lo.q_per_group, D)
+    q = ctx.con(q, ("batch", "seq", "act_kv_heads", None, None))
+
+    use_rope = cfg.pos in ("rope", "mrope") if use_rope is None else use_rope
+
+    if ctx.mode == "decode" and not is_cross:
+        # self-attention against cache
+        k_new = jnp.einsum("bse,ehd->bshd", x, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bse,ehd->bshd", x, p["wv"].astype(x.dtype))
+        if "bk" in p:
+            k_new, v_new = k_new + p["bk"].astype(x.dtype), v_new + p["bv"].astype(x.dtype)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k_new = L.rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+        if use_rope:
+            pos_q = ctx.pos[:, None]  # (B,1)
+            if cfg.pos == "mrope":
+                pos_q = jnp.broadcast_to(pos_q[..., None], (B, 1, 3))
+            q = L.apply_rope(q, pos_q, cfg.rope_theta, cfg.pos == "mrope")
+            k_new = L.apply_rope(k_new, pos_q, cfg.rope_theta, cfg.pos == "mrope")
+        kc, vc = ctx.cache["k"], ctx.cache["v"]
+        Lc = kc.shape[1]
+        slot = (ctx.pos % Lc) if window else ctx.pos
+        kc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+            kc, k_new.astype(kc.dtype), slot)
+        vc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+            vc, v_new.astype(vc.dtype), slot)
+        ctx.new_cache = {"k": kc, "v": vc}
+        if window:
+            # ring buffer: valid entries are pos-window+1..pos at slot (idx%Lc)
+            idx = jnp.arange(Lc)
+            age = (slot[:, None] - idx[None, :]) % Lc
+            mask = age[:, :] < jnp.minimum(ctx.pos + 1, window)[:, None]
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                                kc.astype(jnp.float32)) / math.sqrt(D)
+            logits = jnp.where(mask[:, None, None, None, :], logits, L.NEG_INF)
+            pr = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bkgqs,bskd->bqkgd", pr, vc.astype(jnp.float32)).astype(x.dtype)
+        else:
+            out = L.attn_decode(q, kc, vc, pos=ctx.pos, scale=1.0 / math.sqrt(D))
+    elif ctx.mode == "decode":
+        # cross-attention at decode: cached projected enc K/V, all positions valid
+        kc, vc = ctx.cache["ck"], ctx.cache["cv"]
+        if cfg.qk_norm:
+            q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        pos_full = jnp.full((B,), kc.shape[1] - 1, jnp.int32)
+        out = L.attn_decode(q, kc, vc, pos=pos_full, scale=1.0 / math.sqrt(D))
+    else:
+        k = jnp.einsum("bse,ehd->bshd", kv_src, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bse,ehd->bshd", kv_src, p["wv"].astype(x.dtype))
+        if "bk" in p:
+            k, v = k + p["bk"].astype(x.dtype), v + p["bv"].astype(x.dtype)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+        k = ctx.con(k, ("batch", "seq", "act_kv_heads", None))
+        if use_rope and kv_x is None:
+            q = L.apply_rope(q, ctx.positions, cfg.rope_theta, cfg.pos == "mrope")
+            k = L.apply_rope(k, ctx.positions, cfg.rope_theta, cfg.pos == "mrope")
+        scale = 1.0 / math.sqrt(D)
+        q_pos = kv_pos = jnp.arange(S)
+        if kv_x is not None:
+            kv_pos = jnp.arange(Skv)
+        impl = cfg.attention_impl
+        if ctx.mode == "prefill":
+            ctx.new_cache = {"k": k, "v": v}
+        if impl == "skip_core":
+            # phase-attribution lowering: keep projections, drop the S^2 core
+            vv = v if Skv == S else v[:, :S]
+            out = jnp.broadcast_to(
+                vv[:, :, :, None, :],
+                (B, S, lo.n_kv_stored, lo.q_per_group, D)).astype(q.dtype)
+            out = out + 0.0 * q
+        elif window:
+            out = L.attn_local(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                               scale=scale, window=window)
+        elif impl == "dense" or not ctx.causal:
+            out = L.attn_dense(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                               causal=ctx.causal and kv_x is None, scale=scale)
+        elif impl == "flash":
+            out = L.attn_flash(q, k, v, q_pos, kv_pos, True, scale,
+                               cfg.attn_chunk)
+        elif impl == "pallas":
+            # the real TPU kernel (interpret-mode on CPU); forward-only path
+            from repro.kernels.attention.ops import gqa_layout_attention
+            out = gqa_layout_attention(q, k, v, causal=True)
+        else:
+            out = L.attn_chunked(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                 causal=True, scale=scale,
+                                 chunk=cfg.attn_chunk, unroll=ctx.unroll)
+
+    mask = _q_head_mask(ctx.layout, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, :, None]
+    out = out.reshape(B, out.shape[1], lo.n_q_stored, D)
+    return jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ArchConfig, dt: str, d_ff: Optional[int] = None,
+              bias: bool = False) -> Params:
+    E, F = cfg.d_model, d_ff or cfg.d_ff
+    p = {"wi": ParamSpec((E, F), ("embed", "ffn"), dt),
+         "wo": ParamSpec((F, E), ("ffn", "embed"), dt)}
+    if cfg.mlp == "swiglu":
+        p["wg"] = ParamSpec((E, F), ("embed", "ffn"), dt)
+    if bias:
+        p["bi"] = ParamSpec((F,), (None,), dt, "zeros")
+        p["bo"] = ParamSpec((E,), (None,), dt, "zeros")
+    return p
+
+
+def mlp_apply(p: Params, x, ctx: Ctx) -> jax.Array:
+    cfg = ctx.cfg
+    xw = x.astype(x.dtype)
+    cast = lambda w: w.astype(x.dtype)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(xw @ cast(p["wg"])) * (xw @ cast(p["wi"]))
+    elif cfg.mlp == "sq_relu":
+        h = jnp.square(jax.nn.relu(xw @ cast(p["wi"])))
+    else:  # gelu
+        h = xw @ cast(p["wi"])
+        if "bi" in p:
+            h = h + cast(p["bi"])
+        h = jax.nn.gelu(h)
+    h = ctx.con(h, ("batch", "seq", "act_ffn"))
+    out = h @ cast(p["wo"])
+    if "bo" in p:
+        out = out + cast(p["bo"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity routing, EP over "expert" axis)
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ArchConfig, dt: str) -> Params:
+    E, m = cfg.d_model, cfg.moe
+    X, Fe = m.n_experts, m.d_ff_expert
+    # EP-resident experts use a distinct logical axis so the FSDP rule does
+    # not apply to them (weights stay resident; tokens all-to-all instead)
+    emb = "embed" if m.expert_fsdp else "expert_embed"
+    p: Params = {
+        "router": ParamSpec((E, X), ("embed", "expert"), dt, "normal"),
+        "wi": ParamSpec((X, E, Fe), ("expert", emb, "expert_ffn"), dt),
+        "wg": ParamSpec((X, E, Fe), ("expert", emb, "expert_ffn"), dt),
+        "wo": ParamSpec((X, Fe, E), ("expert", "expert_ffn", emb), dt),
+    }
+    if m.shared_expert:
+        p["shared"] = mlp_specs(cfg, dt, d_ff=Fe)
+    if m.dense_residual:
+        p["dense"] = mlp_specs(cfg, dt, d_ff=cfg.d_ff)
+    return p
+
+
+def moe_apply(p: Params, x, ctx: Ctx):
+    """Returns (out, aux_loss). Token-group capacity routing.
+
+    Dispatch/combine are *pure data movement* — the paper's subject — and are
+    the tensors that become all-to-alls under expert parallelism.
+    """
+    cfg = ctx.cfg
+    m = cfg.moe
+    B, S, E = x.shape
+    X, k = m.n_experts, m.top_k
+    T = B * S
+    g_size = min(m.group_size or min(S, 2048), T)
+    while T % g_size:
+        g_size -= 1
+    G = T // g_size
+    xg = x.reshape(G, g_size, E)
+
+    # router matmul in compute dtype (softmax statistics still f32): an f32
+    # router einsum promotes xg's COTANGENT to f32, doubling the payload of
+    # every dispatch/combine all-reduce on the backward path (measured:
+    # 3x(g,s,e) f32 tuple-ARs dominate the MoE collective term)
+    logits = jnp.einsum("gse,ex->gsx", xg,
+                        p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # (G,s,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(k * g_size / X * m.capacity_factor))
+    cap = max(cap, 4)
+
+    if cfg.attention_impl == "skip_core":
+        # phase-attribution lowering: keep the expert matmuls (flop parity),
+        # drop the one-hot dispatch/combine einsums — their differential is
+        # the dispatch's data-movement share (a fused sort-based dispatch
+        # kernel would move ~token bytes instead)
+        tok = (xg[:, :cap] if cap <= g_size else
+               jnp.pad(xg, ((0, 0), (0, cap - g_size), (0, 0))))
+        exp_in = jnp.broadcast_to(tok[:, None], (G, X, cap, E)).astype(x.dtype)
+        exp_in = ctx.con(exp_in, (None, "act_expert", None, None))
+        h = (jax.nn.silu(jnp.einsum("gxce,xef->gxcf", exp_in, p["wg"].astype(x.dtype)))
+             * jnp.einsum("gxce,xef->gxcf", exp_in, p["wi"].astype(x.dtype)))
+        exp_out = jnp.einsum("gxcf,xfe->gxce", h, p["wo"].astype(x.dtype))
+        pad = jnp.zeros_like(xg).at[:, :min(cap, g_size)].add(
+            exp_out[:, 0, :min(cap, g_size)])
+        out = (pad + (0.0 * probs.sum(-1, keepdims=True)).astype(pad.dtype)
+               ).reshape(B, S, E)
+        aux = jnp.zeros((), jnp.float32)
+        if m.shared_expert:
+            out = out + _moe_inner_mlp(p["shared"], x, ctx)
+        if m.dense_residual:
+            out = out + _moe_inner_mlp(p["dense"], x, ctx)
+        return out, aux
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, X, dtype=jnp.int32)   # (G,s,k,X)
+    flatoh = onehot.reshape(G, g_size * k, X)
+    pos_in_expert = jnp.cumsum(flatoh, axis=1) - flatoh     # (G,s*k,X)
+    pos_in_expert = (pos_in_expert * flatoh).sum(-1).reshape(G, g_size, k)
+    keep = pos_in_expert < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch (G,s,X,cap) one-hot; combine carries gate weights
+    disp = (jax.nn.one_hot(gate_idx, X, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(pos_in_expert, cap, dtype=x.dtype)[..., None, :]
+            * keep[..., None, None].astype(x.dtype))        # (G,s,k,X,cap)
+    comb = disp * gate_vals[..., None, None].astype(x.dtype)
+    disp = disp.sum(2)                                      # (G,s,X,cap)
+    comb = comb.sum(2)
+
+    exp_in = jnp.einsum("gsxc,gse->gxce", disp, xg)         # (G,X,cap,E)
+    exp_in = ctx.con(exp_in, (None, "act_expert", None, None))
+    h = (jax.nn.silu(jnp.einsum("gxce,xef->gxcf", exp_in, p["wg"].astype(x.dtype)))
+         * jnp.einsum("gxce,xef->gxcf", exp_in, p["wi"].astype(x.dtype)))
+    exp_out = jnp.einsum("gxcf,xfe->gxce", h, p["wo"].astype(x.dtype))
+    out = jnp.einsum("gsxc,gxce->gse", comb, exp_out).reshape(B, S, E)
+
+    # aux losses: load balance (Switch) + router z-loss
+    density = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], X, dtype=jnp.float32),
+                       axis=(0, 1))
+    p_mean = jnp.mean(probs, axis=(0, 1))
+    lb = X * jnp.sum(density * p_mean) * m.load_balance_loss
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))) * m.router_z_loss
+    aux = lb + z
+
+    if m.shared_expert:
+        sub = dict(cfg=ctx.cfg)
+        out = out + _moe_inner_mlp(p["shared"], x, ctx)
+    if m.dense_residual:
+        out = out + _moe_inner_mlp(p["dense"], x, ctx)
+    return out, aux
+
+
+def _moe_inner_mlp(p, x, ctx: Ctx):
+    h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    h = ctx.con(h, ("batch", "seq", "act_ffn"))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+
+def mamba_specs(cfg: ArchConfig, dt: str) -> Params:
+    E, Di = cfg.d_model, cfg.d_inner
+    N, K, R = cfg.ssm.d_state, cfg.ssm.conv_k, cfg.ssm.dt_rank
+    return {
+        "in_proj": ParamSpec((E, 2 * Di), ("embed", "ffn"), dt),
+        "conv_w": ParamSpec((K, Di), ("conv", "ffn"), dt),
+        "conv_b": ParamSpec((Di,), ("ffn",), dt, "zeros"),
+        "x_proj": ParamSpec((Di, R + 2 * N), ("ffn", None), dt),
+        "dt_proj": ParamSpec((R, Di), ("lowrank", "ffn"), dt),
+        "dt_bias": ParamSpec((Di,), ("ffn",), dt, "zeros"),
+        "A_log": ParamSpec((Di, N), ("ffn", "state"), dt, "ones"),
+        "D": ParamSpec((Di,), ("ffn",), dt, "ones"),
+        "out_proj": ParamSpec((Di, E), ("ffn", "embed"), dt),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv. x (B,S,C), w (K,C). Returns y, new_cache (B,K-1,C)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_cache = xp[:, -(K - 1):] if K > 1 else pad
+    return y + b.astype(x.dtype), new_cache
+
+
+def _mamba_chunk_scan(xc, dt_r, Bmat, Cmat, p: Params, h0, *, chunk: int,
+                      unroll: bool):
+    """Fused selective-scan over sequence chunks.
+
+    Everything quadratic-in-state — dt expansion, discretised (a, bu) of shape
+    (B, chunk, Di, N), the associative scan, and the C-projection — happens
+    *inside* the chunk step, so only a (B, chunk, Di, N) window is ever live
+    (the paper's BRAM slice window, in SSM form). On TPU this step is the
+    Pallas selective-scan kernel (`repro.kernels.ssm`).
+
+    Returns (y (B,S,Di) f32, h_final (B,Di,N) f32).
+    """
+    B, S, Di = xc.shape
+    N = Cmat.shape[-1]
+    n = max(S // chunk, 1)
+    chunk = S // n
+    assert S % n == 0
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (Di,N)
+    dt_w = p["dt_proj"].astype(jnp.float32)
+    dt_b = p["dt_bias"].astype(jnp.float32)
+
+    def to_chunks(t):
+        return jnp.moveaxis(
+            t.reshape((B, n, chunk) + t.shape[2:]), 1, 0)
+
+    # chunks stream in compute dtype (bf16); f32 promotion happens INSIDE the
+    # step so the full-sequence f32 copies never exist (halves streamed bytes)
+    xs = (to_chunks(xc), to_chunks(dt_r), to_chunks(Bmat), to_chunks(Cmat))
+
+    def combine(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    def step(h, inp):
+        xj, dj, bj, cj = (t.astype(jnp.float32) for t in inp)  # (B, chunk, ...)
+        dt = jax.nn.softplus(dj @ dt_w + dt_b)            # (B, chunk, Di)
+        a = jnp.exp(dt[..., None] * A)                    # (B, chunk, Di, N)
+        bu = (dt * xj)[..., None] * bj[..., None, :]
+        pa, pb = jax.lax.associative_scan(combine, (a, bu), axis=1)
+        h_all = pa * h[:, None] + pb                      # (B, chunk, Di, N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, cj)
+        return h_all[:, -1], y
+
+    if unroll:
+        ys = []
+        h = h0
+        for j in range(n):
+            h, y = step(h, tuple(t[j] for t in xs))
+            ys.append(y)
+        ys = jnp.stack(ys, 0)
+    else:
+        h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, Di)
+    return y, h
+
+
+def _ssm_scan(a, b, h0, *, chunk: int, unroll: bool):
+    """h_t = a_t * h_{t-1} + b_t elementwise; a,b (B,S,...); h0 (B,...).
+
+    Chunked: associative scan within chunks, lax.scan (or python loop when
+    `unroll`) across chunks. Returns (h_all (B,S,...), h_final).
+    """
+    B, S = a.shape[0], a.shape[1]
+    n = max(S // chunk, 1)
+    chunk = S // n
+    assert S % n == 0
+    ac = jnp.moveaxis(a.reshape((B, n, chunk) + a.shape[2:]), 1, 0)
+    bc = jnp.moveaxis(b.reshape((B, n, chunk) + b.shape[2:]), 1, 0)
+
+    def combine(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    def step(h, ab):
+        aj, bj = ab  # (B, chunk, ...)
+        pa, pb = jax.lax.associative_scan(combine, (aj, bj), axis=1)
+        h_all = pa * h[:, None] + pb
+        return h_all[:, -1], h_all
+
+    if unroll:
+        outs = []
+        h = h0
+        for j in range(n):
+            h, h_all = step(h, (ac[j], bc[j]))
+            outs.append(h_all)
+        hs = jnp.stack(outs, 0)
+    else:
+        h, hs = jax.lax.scan(step, h0, (ac, bc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, S) + a.shape[2:])
+    return hs, h
+
+
+def mamba_apply(p: Params, x, ctx: Ctx):
+    """Mamba-1 selective SSM. Returns block output (B,S,E)."""
+    cfg = ctx.cfg
+    N, R = cfg.ssm.d_state, cfg.ssm.dt_rank
+    Di = cfg.d_inner
+    B, S, E = x.shape
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = ctx.con(xin, ("batch", "seq", "act_ffn"))
+
+    conv_cache = ctx.cache.get("conv") if ctx.mode == "decode" else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_cache)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["x_proj"].astype(x.dtype)
+    dt_r, Bmat, Cmat = jnp.split(proj, [R, R + N], axis=-1)
+
+    if ctx.mode == "decode":
+        dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(x.dtype)
+                             + p["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        a = jnp.exp(dt[..., None] * A)                        # (B,1,Di,N)
+        bu = ((dt * xc.astype(jnp.float32))[..., None]
+              * Bmat.astype(jnp.float32)[..., None, :])
+        h0 = ctx.cache["state"].astype(jnp.float32)
+        h = a[:, 0] * h0 + bu[:, 0]
+        ctx.new_cache = {"conv": new_conv, "state": h.astype(ctx.cache["state"].dtype)}
+        y = jnp.einsum("bdn,bsn->bsd", h, Cmat.astype(jnp.float32)).astype(x.dtype)
+    elif cfg.attention_impl == "skip_core":
+        # phase-attribution lowering: drop the scan core, keep projections
+        y = xc.astype(x.dtype) + 0.0 * Bmat.sum(-1, keepdims=True) \
+            + 0.0 * Cmat.sum(-1, keepdims=True) + 0.0 * dt_r.sum(-1, keepdims=True)
+    else:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+        y, h = _mamba_chunk_scan(xc, dt_r, Bmat, Cmat, p, h0,
+                                 chunk=cfg.scan_chunk, unroll=ctx.unroll)
+        y = y.astype(x.dtype)
+        if ctx.mode == "prefill":
+            ctx.new_cache = {"conv": new_conv, "state": h.astype(x.dtype)}
+
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+_RG_BLOCKS = 16  # block-diagonal gate heads (TP-local)
+
+
+def rglru_specs(cfg: ArchConfig, dt: str) -> Params:
+    E, Dr = cfg.d_model, cfg.hybrid.d_rnn
+    K = cfg.hybrid.conv_k
+    nb = _RG_BLOCKS
+    bs = Dr // nb
+    return {
+        "in_proj": ParamSpec((E, 2 * Dr), ("embed", "ffn"), dt),
+        "conv_w": ParamSpec((K, Dr), ("conv", "ffn"), dt),
+        "conv_b": ParamSpec((Dr,), ("ffn",), dt, "zeros"),
+        "gate_a": ParamSpec((nb, bs, bs), ("heads", None, None), dt),
+        "gate_x": ParamSpec((nb, bs, bs), ("heads", None, None), dt),
+        "gate_a_b": ParamSpec((Dr,), ("ffn",), dt, "zeros"),
+        "gate_x_b": ParamSpec((Dr,), ("ffn",), dt, "zeros"),
+        "Lambda": ParamSpec((Dr,), ("ffn",), dt, "recurrent"),
+        "out_proj": ParamSpec((Dr, E), ("ffn", "embed"), dt),
+    }
+
+
+def rglru_apply(p: Params, x, ctx: Ctx):
+    cfg = ctx.cfg
+    Dr = cfg.hybrid.d_rnn
+    nb = _RG_BLOCKS
+    B, S, E = x.shape
+    xg = x @ p["in_proj"].astype(x.dtype)
+    xin, gate = jnp.split(xg, 2, axis=-1)
+    xin = ctx.con(xin, ("batch", "seq", "act_ffn"))
+
+    conv_cache = ctx.cache.get("conv") if ctx.mode == "decode" else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_cache)
+
+    xb = xc.reshape(B, S, nb, Dr // nb)
+    r = jax.nn.sigmoid(jnp.einsum("bsnd,nde->bsne", xb, p["gate_a"].astype(x.dtype))
+                       .reshape(B, S, Dr) + p["gate_a_b"].astype(x.dtype))
+    i = jax.nn.sigmoid(jnp.einsum("bsnd,nde->bsne", xb, p["gate_x"].astype(x.dtype))
+                       .reshape(B, S, Dr) + p["gate_x_b"].astype(x.dtype))
+
+    c = 8.0
+    log_a = -c * jax.nn.softplus(p["Lambda"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = (i * xc).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated_x
+
+    if ctx.mode == "decode":
+        h0 = ctx.cache["state"].astype(jnp.float32)
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None]
+        ctx.new_cache = {"conv": new_conv, "state": h.astype(ctx.cache["state"].dtype)}
+    elif cfg.attention_impl == "skip_core":
+        hs = b  # phase-attribution lowering: drop the recurrence core
+    else:
+        h0 = jnp.zeros((B, Dr), jnp.float32)
+        hs, h = _ssm_scan(a, b, h0, chunk=cfg.scan_chunk, unroll=ctx.unroll)
+        if ctx.mode == "prefill":
+            ctx.new_cache = {"conv": new_conv, "state": h.astype(x.dtype)}
+
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate)
+    return y @ p["out_proj"].astype(x.dtype)

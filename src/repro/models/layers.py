@@ -1,0 +1,371 @@
+"""Shared neural layers: norms, RoPE / M-RoPE, GQA attention, MLPs.
+
+Shape conventions
+-----------------
+  x            : (B, S, E)           activations, compute dtype (bf16)
+  q            : (B, S, K, G, D)     K = stored kv groups, G = q heads/group
+  k, v         : (B, S, K, D)
+  decode cache : k/v (B, L, K, D) ring/linear buffers
+
+Attention implementations
+-------------------------
+  dense   : full S x S logits (reference; exact-FLOP cost lowerings)
+  chunked : online-softmax streaming over KV chunks (lax.scan) — the
+            data-movement-aware form: KV slices stream through the fast
+            memory tier exactly like the paper's BRAM slice window
+  local   : sliding-window (block-banded), linear in S
+
+All softmax/statistics in float32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.distributed.sharding import HeadLayout
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+def softcap(logits, cap: float):
+    if not cap:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float64) / half))
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Split the head_dim//2 frequency slots into (t, h, w) sections.
+
+    Uses qwen2-vl's 1/4:3/8:3/8 proportions (16:24:24 at head_dim 128).
+    """
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return t, h, half - t - h
+
+
+def apply_rope(x, positions, theta: float, mrope: bool = False):
+    """x: (..., S, K, G?, D) with positions (B, S) int or (B, S, 3) for M-RoPE.
+
+    positions broadcasting: x leading dims are (B, S, heads...), rope applied
+    over the trailing D dim.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)  # (half,)
+    if mrope:
+        # positions (B, S, 3): each frequency slot uses one of t/h/w positions
+        t, h, w = mrope_sections(d)
+        sec = jnp.concatenate([
+            jnp.zeros((t,), jnp.int32),
+            jnp.ones((h,), jnp.int32),
+            jnp.full((w,), 2, jnp.int32),
+        ])  # (half,)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec, positions.shape[:-1] + (half,)).astype(jnp.int32),
+            axis=-1,
+        )  # (B, S, half)
+    else:
+        pos = positions.astype(jnp.float32)[..., None]  # (B, S, 1)
+    angles = pos * freqs  # (B, S, half)
+    # broadcast over head dims: x is (B, S, K, G, D) or (B, S, K, D)
+    for _ in range(x.ndim - 3):
+        angles = angles[..., None, :]
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sincos_positions(seq_len: int, d_model: int) -> np.ndarray:
+    """Classic transformer sinusoidal table (whisper encoder)."""
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    inv = 1.0 / (10000 ** (dim / (d_model // 2)))
+    ang = pos * inv
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0 ** 30
+
+
+def _causal_mask(q_pos, kv_pos):
+    """(..., Sq, Skv) additive mask, True where kv may be attended."""
+    return (kv_pos[None, :] <= q_pos[:, None])
+
+
+def attn_dense(q, k, v, *, q_pos, kv_pos, causal: bool, scale: float,
+               window: int = 0):
+    """Reference attention. q (B,Sq,K,G,D), k/v (B,Skv,K,D)."""
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones(logits.shape[-2:], bool)
+    if causal:
+        mask = _causal_mask(q_pos, kv_pos)
+    if window:
+        mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out
+
+
+def attn_chunked(q, k, v, *, q_pos, kv_pos, causal: bool, scale: float,
+                 chunk: int, unroll: bool = False):
+    """Online-softmax streaming attention over KV chunks (flash-style).
+
+    The KV stream through VMEM mirrors the paper's z-y slice window through
+    BRAM; `unroll=True` yields exact FLOP accounting in cost lowerings.
+    """
+    B, Skv, K, D = k.shape
+    Sq, G = q.shape[1], q.shape[3]
+    n = max(Skv // chunk, 1)
+    chunk = Skv // n
+    assert Skv % n == 0
+
+    kc = k.reshape(B, n, chunk, K, D)
+    vc = v.reshape(B, n, chunk, K, D)
+    pc = kv_pos.reshape(n, chunk)
+
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kj, vj, pj = inputs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kj.astype(jnp.float32)) * scale
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask = _causal_mask(q_pos, pj)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bqkgd", p, vj.astype(jnp.float32))
+        acc = acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+        return (m_new, l, acc), ()
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for j in range(n):
+            carry, _ = step(carry, (kc[:, j], vc[:, j], pc[j]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc))
+    out = acc / jnp.maximum(jnp.moveaxis(l, -1, 1)[..., None], 1e-20)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP (pure JAX mirror of the Pallas kernel)
+# ---------------------------------------------------------------------------
+#
+# `attn_chunked`'s lax.scan saves its (m, l, acc) carries per KV chunk for the
+# backward pass — tens of GiB at 32k context. Flash backward instead saves
+# only (q, k, v, o, logsumexp) and *recomputes* each chunk's probabilities:
+# the classic compute-for-data-movement trade, and exactly what the Pallas
+# kernel (repro.kernels.attention) does on real TPU hardware.
+
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, chunk):
+    B, Skv, K, D = k.shape
+    Sq, G = q.shape[1], q.shape[3]
+    n = max(Skv // chunk, 1)
+    c = Skv // n
+    kc = jnp.moveaxis(k.reshape(B, n, c, K, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n, c, K, D), 1, 0)
+    pc = kv_pos.reshape(n, c)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kj, vj, pj = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kj.astype(jnp.float32)) * scale
+        if causal:
+            s = jnp.where(_causal_mask(q_pos, pj), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bqkgd", p, vj.astype(jnp.float32))
+        acc = acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+        return (m_new, l, acc), ()
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))           # (B,K,G,Sq)
+    out = acc / jnp.maximum(jnp.moveaxis(l, -1, 1)[..., None], 1e-30)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def attn_flash(q, k, v, q_pos, kv_pos, causal: bool, scale: float, chunk: int):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, chunk)
+    return out
+
+
+def _attn_flash_fwd(q, k, v, q_pos, kv_pos, causal, scale, chunk):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, scale, chunk)
+    return out, (q, k, v, out, lse, q_pos, kv_pos)
+
+
+def _attn_flash_bwd(causal, scale, chunk, res, do):
+    q, k, v, out, lse, q_pos, kv_pos = res
+    B, Skv, K, D = k.shape
+    Sq, G = q.shape[1], q.shape[3]
+    n = max(Skv // chunk, 1)
+    c = Skv // n
+    kc = jnp.moveaxis(k.reshape(B, n, c, K, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n, c, K, D), 1, 0)
+    pc = kv_pos.reshape(n, c)
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    # rowwise D_i = sum_d dO * O
+    Drow = jnp.einsum("bqkgd,bqkgd->bkgq", dof, out.astype(jnp.float32))
+
+    def step(dq, inp):
+        kj, vj, pj = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kj.astype(jnp.float32)) * scale
+        if causal:
+            s = jnp.where(_causal_mask(q_pos, pj), s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                       # (B,K,G,Sq,C)
+        dv_j = jnp.einsum("bkgqs,bqkgd->bskd", p, dof)
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", dof, vj.astype(jnp.float32))
+        ds = p * (dp - Drow[..., None]) * scale
+        dq = dq + jnp.einsum("bkgqs,bskd->bqkgd", ds, kj.astype(jnp.float32))
+        dk_j = jnp.einsum("bkgqs,bqkgd->bskd", ds, qf)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(step, dq0, (kc, vc, pc))
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, Skv, K, D)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, Skv, K, D)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+attn_flash.defvjp(_attn_flash_fwd, _attn_flash_bwd)
+
+
+def attn_local(q, k, v, *, q_pos, kv_pos, scale: float, window: int):
+    """Sliding-window causal attention, block-banded (linear in S).
+
+    Each block of `window` queries attends to its own block and the previous
+    one under the (causal & distance < window) mask — exact sliding window.
+    """
+    B, S, K, D = k.shape
+    G = q.shape[3]
+    W = min(window, S)
+    S0 = S
+    if S % W:  # pad to a block multiple; trailing pads are causally masked out
+        pad = W - S % W
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    n = S // W
+    qb = q.reshape(B, n, W, K, G, D)
+    kb = k.reshape(B, n, W, K, D)
+    vb = v.reshape(B, n, W, K, D)
+    k_prev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B, n, 2W, K, D)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    logits = jnp.einsum("bnqkgd,bnskd->bnkgqs", qb, k2,
+                        preferred_element_type=jnp.float32) * scale
+    qp = jnp.arange(W)
+    kp = jnp.arange(2 * W) - W
+    rel = qp[:, None] - kp[None, :]
+    band = (rel >= 0) & (rel < W)                              # (W, 2W)
+    # block 0's "previous block" is padding: mask kv by global-position validity
+    valid = (jnp.arange(n)[:, None, None] * W + kp[None, None, :]) >= 0
+    mask_all = band[None] & valid                              # (n, W, 2W)
+    logits = jnp.where(mask_all[None, :, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnkgqs,bnskd->bnqkgd", p.astype(v.dtype), v2)
+    return out.reshape(B, S, K, G, D)[:, :S0]
+
+
+def attn_decode(q, k_cache, v_cache, *, pos, scale: float, window: int = 0):
+    """Single-token decode vs a (B, L, K, D) cache. pos: (B,) current index."""
+    B, L, K, D = k_cache.shape
+    idx = jnp.arange(L)
+    mask = idx[None, :] <= pos[:, None]                      # (B, L)
+    if window:
+        mask = mask & (pos[:, None] - idx[None, :] < window)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(params, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+        return h @ params["wo"]
+    if kind == "sq_relu":
+        h = jnp.square(jax.nn.relu(x @ params["wi"]))
+        return h @ params["wo"]
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["wi"] + params.get("bi", 0.0))
+        return h @ params["wo"] + params.get("bo", 0.0)
+    raise ValueError(kind)
+
+
+def gqa_reshape_q(q_flat, layout: HeadLayout):
+    """(B, S, Hs*D) -> (B, S, K, G, D)."""
+    B, S, _ = q_flat.shape
+    return q_flat.reshape(B, S, layout.n_kv_stored, layout.q_per_group, -1)

@@ -1,0 +1,596 @@
+"""Model assembly: parameter trees, forward passes, caches, loss.
+
+One uniform public API for all 10 assigned architectures:
+
+  layout      = make_layout(cfg, tp)
+  specs       = param_specs(cfg, layout)          # pytree[ParamSpec]
+  params      = pspec.init_params(specs, rng)     # or abstract_params(specs)
+  loss, aux   = loss_fn(params, batch, cfg, layout, ...)        (train)
+  logits, kv  = forward(params, batch, ..., mode="prefill")     (prefill)
+  logits, kv  = decode_step(params, cache, batch, ...)          (decode)
+
+Layer stacks run under ``lax.scan`` (bounded HLO at 96 layers) with optional
+remat; ``unroll=True`` produces loop-free HLO for exact-FLOP cost lowerings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.distributed.sharding import HeadLayout, Rules, make_head_layout, constrain
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.blocks import Ctx
+from repro.pspec import ParamSpec, stack_specs
+
+Params = Dict[str, Any]
+
+
+def make_layout(cfg: ArchConfig, tp: int = 1) -> HeadLayout:
+    if cfg.n_heads == 0:  # attention-free
+        return HeadLayout(0, 0, tp, 0, 1, 0, 0)
+    return make_head_layout(cfg.n_heads, cfg.n_kv_heads, tp)
+
+
+def padded_vocab(cfg: ArchConfig, tp: int) -> int:
+    v = cfg.vocab_size
+    if tp > 1 and v % tp:
+        v = math.ceil(v / tp) * tp
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _norm_specs(cfg: ArchConfig, dt: str, bias: bool = False) -> Params:
+    p = {"w": ParamSpec((cfg.d_model,), (None,), dt, "ones")}
+    if bias:
+        p["b"] = ParamSpec((cfg.d_model,), (None,), dt, "zeros")
+    return p
+
+
+def _apply_norm(p: Params, x, eps: float):
+    if "b" in p:
+        return L.layer_norm(x, p["w"], p["b"], eps)
+    return L.rms_norm(x, p["w"], eps)
+
+
+def block_specs(cfg: ArchConfig, layout: HeadLayout, kind: str, dt: str) -> Params:
+    ln_bias = cfg.family == "encdec"
+    if kind == "attn_mlp":
+        return {"ln1": _norm_specs(cfg, dt, ln_bias),
+                "attn": B.attention_specs(cfg, layout, dt),
+                "ln2": _norm_specs(cfg, dt, ln_bias),
+                "mlp": B.mlp_specs(cfg, dt, bias=ln_bias)}
+    if kind == "moe":
+        return {"ln1": _norm_specs(cfg, dt),
+                "attn": B.attention_specs(cfg, layout, dt),
+                "ln2": _norm_specs(cfg, dt),
+                "moe": B.moe_specs(cfg, dt)}
+    if kind == "mamba":
+        return {"ln": _norm_specs(cfg, dt),
+                "mamba": B.mamba_specs(cfg, dt)}
+    if kind == "rec":
+        return {"ln1": _norm_specs(cfg, dt),
+                "rec": B.rglru_specs(cfg, dt),
+                "ln2": _norm_specs(cfg, dt),
+                "mlp": B.mlp_specs(cfg, dt)}
+    if kind == "dec":  # enc-dec decoder layer: self + cross + mlp
+        return {"ln1": _norm_specs(cfg, dt, True),
+                "self": B.attention_specs(cfg, layout, dt),
+                "ln2": _norm_specs(cfg, dt, True),
+                "cross": B.attention_specs(cfg, layout, dt),
+                "ln3": _norm_specs(cfg, dt, True),
+                "mlp": B.mlp_specs(cfg, dt, bias=True)}
+    raise ValueError(kind)
+
+
+def layer_kinds(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Block kind per layer for the decoder(-only) stack."""
+    if cfg.family == "ssm":
+        return ("mamba",) * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = []
+        while len(pat) < cfg.n_layers:
+            pat.extend(cfg.hybrid.pattern or ("rec", "rec", "attn"))
+        return tuple("rec" if k == "rec" else "attn_mlp" for k in pat[: cfg.n_layers])
+    if cfg.family == "moe":
+        k = cfg.moe.moe_every
+        return tuple("moe" if (i % k == k - 1) else "attn_mlp"
+                     for i in range(cfg.n_layers))
+    return ("attn_mlp",) * cfg.n_layers
+
+
+def _uniform(kinds) -> bool:
+    return len(set(kinds)) == 1
+
+
+def param_specs(cfg: ArchConfig, layout: HeadLayout) -> Params:
+    dt = cfg.param_dtype
+    E = cfg.d_model
+    Vp = padded_vocab(cfg, layout.tp)
+    specs: Params = {}
+
+    if cfg.family == "encdec":
+        e = cfg.encdec
+        specs["tok_embed"] = ParamSpec((Vp, E), ("vocab", "embed"), dt, "embed", 0.02)
+        specs["dec_pos"] = ParamSpec((e.max_dec_len, E), (None, "embed"), dt, "embed", 0.02)
+        enc = block_specs(cfg, layout, "attn_mlp", dt)
+        dec = block_specs(cfg, layout, "dec", dt)
+        specs["enc_layers"] = jax.tree.map(
+            lambda s: stack_specs(s, e.enc_layers), enc,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        specs["dec_layers"] = jax.tree.map(
+            lambda s: stack_specs(s, e.dec_layers), dec,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        specs["enc_norm"] = _norm_specs(cfg, dt, True)
+        specs["final_norm"] = _norm_specs(cfg, dt, True)
+        return specs
+
+    if not cfg.embeds_input:
+        specs["tok_embed"] = ParamSpec((Vp, E), ("vocab", "embed"), dt, "embed", 0.02)
+    kinds = layer_kinds(cfg)
+    if cfg.scan_layers and _uniform(kinds):
+        one = block_specs(cfg, layout, kinds[0], dt)
+        specs["layers"] = jax.tree.map(
+            lambda s: stack_specs(s, cfg.n_layers), one,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+    else:
+        specs["layers"] = [block_specs(cfg, layout, k, dt) for k in kinds]
+    specs["final_norm"] = _norm_specs(cfg, dt)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((E, Vp), ("embed", "vocab"), dt, "fan_in")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_specs(cfg: ArchConfig, layout: HeadLayout, kind: str,
+                      batch: int, max_len: int, dt: str) -> Params:
+    D = cfg.head_dim
+    Ks = layout.n_kv_stored
+    if kind in ("attn_mlp", "moe"):
+        W = cfg.hybrid.window if cfg.family == "hybrid" else 0
+        Lc = min(max_len, W) if W else max_len
+        ax = ("batch", None, "act_kv_heads", None)
+        return {"k": ParamSpec((batch, Lc, Ks, D), ax, dt, "zeros"),
+                "v": ParamSpec((batch, Lc, Ks, D), ax, dt, "zeros")}
+    if kind == "mamba":
+        Di, N, K = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.conv_k
+        return {"conv": ParamSpec((batch, K - 1, Di), ("batch", None, "act_ffn"), dt, "zeros"),
+                "state": ParamSpec((batch, Di, N), ("batch", "act_ffn", None), dt, "zeros")}
+    if kind == "rec":
+        Dr, K = cfg.hybrid.d_rnn, cfg.hybrid.conv_k
+        return {"conv": ParamSpec((batch, K - 1, Dr), ("batch", None, "act_ffn"), dt, "zeros"),
+                "state": ParamSpec((batch, Dr), ("batch", "act_ffn"), dt, "zeros")}
+    if kind == "dec":
+        e = cfg.encdec
+        ax = ("batch", None, "act_kv_heads", None)
+        return {"k": ParamSpec((batch, e.max_dec_len, Ks, D), ax, dt, "zeros"),
+                "v": ParamSpec((batch, e.max_dec_len, Ks, D), ax, dt, "zeros"),
+                "ck": ParamSpec((batch, max_len, Ks, D), ax, dt, "zeros"),
+                "cv": ParamSpec((batch, max_len, Ks, D), ax, dt, "zeros")}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ArchConfig, layout: HeadLayout, batch: int,
+                max_len: int) -> Any:
+    dt = cfg.compute_dtype
+    if cfg.family == "encdec":
+        one = layer_cache_specs(cfg, layout, "dec", batch, max_len, dt)
+        return jax.tree.map(lambda s: stack_specs(s, cfg.encdec.dec_layers), one,
+                            is_leaf=lambda x: isinstance(x, ParamSpec))
+    kinds = layer_kinds(cfg)
+    if cfg.scan_layers and _uniform(kinds):
+        one = layer_cache_specs(cfg, layout, kinds[0], batch, max_len, dt)
+        return jax.tree.map(lambda s: stack_specs(s, cfg.n_layers), one,
+                            is_leaf=lambda x: isinstance(x, ParamSpec))
+    return [layer_cache_specs(cfg, layout, k, batch, max_len, dt) for k in kinds]
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(kind: str, p: Params, x, ctx: Ctx, cache=None):
+    """Returns (x, aux, new_cache)."""
+    cfg = ctx.cfg
+    ctx = dataclasses.replace(ctx, cache=cache, new_cache=None)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn_mlp":
+        window = cfg.hybrid.window if cfg.family == "hybrid" else 0
+        x = x + B.attention_apply(p["attn"], _apply_norm(p["ln1"], x, cfg.norm_eps),
+                                  ctx, window=window)
+        x = x + B.mlp_apply(p["mlp"], _apply_norm(p["ln2"], x, cfg.norm_eps), ctx)
+    elif kind == "moe":
+        x = x + B.attention_apply(p["attn"], _apply_norm(p["ln1"], x, cfg.norm_eps), ctx)
+        out, aux = B.moe_apply(p["moe"], _apply_norm(p["ln2"], x, cfg.norm_eps), ctx)
+        x = x + out
+    elif kind == "mamba":
+        x = x + B.mamba_apply(p["mamba"], _apply_norm(p["ln"], x, cfg.norm_eps), ctx)
+    elif kind == "rec":
+        x = x + B.rglru_apply(p["rec"], _apply_norm(p["ln1"], x, cfg.norm_eps), ctx)
+        x = x + B.mlp_apply(p["mlp"], _apply_norm(p["ln2"], x, cfg.norm_eps), ctx)
+    elif kind == "enc":
+        sub = dataclasses.replace(ctx, causal=False)
+        x = x + B.attention_apply(p["attn"], _apply_norm(p["ln1"], x, cfg.norm_eps),
+                                  sub, use_rope=False)
+        x = x + B.mlp_apply(p["mlp"], _apply_norm(p["ln2"], x, cfg.norm_eps), ctx)
+    else:
+        raise ValueError(kind)
+    x = ctx.con(x, ("batch", "res_seq", "act_embed"))
+    return x, aux, ctx.new_cache
+
+
+def _apply_dec_block(p: Params, x, enc_out, ctx: Ctx, cache=None):
+    cfg = ctx.cfg
+    new_cache = {}
+    c1 = dataclasses.replace(ctx, cache=cache, new_cache=None)
+    x = x + B.attention_apply(p["self"], _apply_norm(p["ln1"], x, cfg.norm_eps),
+                              c1, use_rope=False)
+    if c1.new_cache:
+        new_cache.update(c1.new_cache)
+    if ctx.mode == "decode":
+        c2 = dataclasses.replace(ctx, cache=cache, new_cache=None)
+        x = x + B.attention_apply(p["cross"], _apply_norm(p["ln2"], x, cfg.norm_eps),
+                                  c2, is_cross=True, use_rope=False)
+    else:
+        c2 = dataclasses.replace(ctx, cache=cache, new_cache=None, causal=False)
+        x = x + B.attention_apply(p["cross"], _apply_norm(p["ln2"], x, cfg.norm_eps),
+                                  c2, kv_x=enc_out, is_cross=True, use_rope=False)
+        if ctx.mode == "prefill" and c2.new_cache:
+            new_cache["ck"] = c2.new_cache["k"]
+            new_cache["cv"] = c2.new_cache["v"]
+    x = x + B.mlp_apply(p["mlp"], _apply_norm(p["ln3"], x, cfg.norm_eps), ctx)
+    x = ctx.con(x, ("batch", "res_seq", "act_embed"))
+    return x, new_cache
+
+
+def _run_stack(params_layers, kinds, x, ctx: Ctx, caches=None, *,
+               scanned: bool, remat: str):
+    """Apply the layer stack. Returns (x, aux_total, new_caches)."""
+    want_cache = ctx.mode in ("prefill", "decode")
+
+    def one(kind):
+        def f(p, x, cache):
+            return _apply_block(kind, p, x, ctx, cache)
+        if remat == "full" and ctx.mode == "train":
+            f = jax.checkpoint(f, policy=None)
+        elif remat == "dots" and ctx.mode == "train":
+            f = jax.checkpoint(
+                f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        return f
+
+    if scanned:
+        blk = one(kinds[0])
+
+        if caches is None:
+            g = ctx.cfg.scan_group
+            nL = ctx.cfg.n_layers
+            if (ctx.mode == "train" and g > 1 and nL % g == 0 and nL // g > 1):
+                # sqrt-remat: outer scan over groups (boundaries saved), inner
+                # scan over g layers recomputed during backward
+                grouped = jax.tree.map(
+                    lambda a: a.reshape((nL // g, g) + a.shape[1:]), params_layers)
+
+                def group_body(carry, gp):
+                    def inner(carry, p):
+                        x, aux = carry
+                        x, a, _ = blk(p, x, None)
+                        return (x, aux + a), ()
+                    return jax.lax.scan(inner, carry, gp)[0], ()
+
+                group_body = jax.checkpoint(group_body, policy=None)
+                (x, aux), _ = jax.lax.scan(
+                    group_body, (x, jnp.zeros((), jnp.float32)), grouped)
+                return x, aux, None
+
+            def body2(carry, p):
+                x, aux = carry
+                x, a, nc = blk(p, x, None)
+                return (x, aux + a), (nc if want_cache else ())
+            (x, aux), ys = jax.lax.scan(body2, (x, jnp.zeros((), jnp.float32)),
+                                        params_layers)
+            return x, aux, (ys if want_cache else None)
+
+        def body(carry, xs):
+            x, aux = carry
+            p, cache = xs
+            x, a, nc = blk(p, x, cache)
+            return (x, aux + a), nc
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params_layers, caches))
+        return x, aux, new_caches
+
+    if (ctx.mode == "train" and caches is None and ctx.cfg.scan_group
+            and not _uniform(kinds) and len(kinds) >= 6):
+        # pattern-grouped scan for non-uniform stacks (hybrid / interleaved
+        # MoE): scan over repeating groups with sqrt-style remat — the
+        # unrolled-remat alternative saves every layer input (recurrentgemma
+        # baseline: 247 GiB/dev); this saves only group boundaries.
+        pat = _pattern_period(kinds)
+        if pat and len(kinds) // pat > 1:
+            return _run_grouped_pattern(params_layers, kinds, x, ctx, pat,
+                                        remat)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, kind in enumerate(kinds):
+        cache = caches[i] if caches is not None else None
+        x, a, nc = one(kind)(params_layers[i], x, cache)
+        aux = aux + a
+        new_caches.append(nc)
+    return x, aux, (new_caches if want_cache else None)
+
+
+def _pattern_period(kinds) -> int:
+    """Smallest repeating period of the layer-kind pattern (0 if none)."""
+    for p in range(1, len(kinds) // 2 + 1):
+        if all(kinds[i] == kinds[i % p] for i in range(len(kinds))):
+            return p
+    return 0
+
+
+def _run_grouped_pattern(params_layers, kinds, x, ctx: Ctx, pat: int,
+                         remat: str):
+    ng = len(kinds) // pat
+    gkinds = kinds[:pat]
+    # stack member j of every full group: ng x (per-layer tree)
+    stacked = tuple(
+        jax.tree.map(lambda *a: jnp.stack(a), *[params_layers[g * pat + j]
+                                                for g in range(ng)])
+        for j in range(pat))
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for j, kind in enumerate(gkinds):
+            x, a, _ = _apply_block(kind, gp[j], x, ctx, None)
+            aux = aux + a
+        return (x, aux), ()
+
+    if remat != "none":
+        group_body = jax.checkpoint(group_body, policy=None)
+    (x, aux), _ = jax.lax.scan(group_body, (x, jnp.zeros((), jnp.float32)),
+                               stacked)
+    # remainder layers (pattern tail), per-layer remat
+    for i in range(ng * pat, len(kinds)):
+        f = lambda p, x: _apply_block(kinds[i], p, x, ctx, None)
+        if remat != "none":
+            f = jax.checkpoint(f, policy=None)
+        x, a, _ = f(params_layers[i], x)
+        aux = aux + a
+    return x, aux, None
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ArchConfig, tokens):
+    tab = params["tok_embed"]
+    x = jnp.take(tab, tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    return x
+
+
+def _lm_logits(params, cfg: ArchConfig, layout: HeadLayout, x):
+    if cfg.tie_embeddings:
+        w = params["tok_embed"].astype(x.dtype)
+        logits = jnp.einsum("bse,ve->bsv", x, w)
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    Vp = logits.shape[-1]
+    if Vp > cfg.vocab_size:
+        mask = jnp.arange(Vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, L.NEG_INF)
+    return logits
+
+
+def _make_ctx(cfg, layout, rules, mesh, positions, mode, unroll, pos=None) -> Ctx:
+    return Ctx(cfg=cfg, layout=layout, rules=rules, mesh=mesh,
+               positions=positions, mode=mode, unroll=unroll, pos=pos)
+
+
+def _default_positions(cfg: ArchConfig, batch_dict, Bsz, S):
+    if "positions" in batch_dict:
+        return batch_dict["positions"]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (Bsz, S))
+    if cfg.pos == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (Bsz, S, 3))
+    return pos
+
+
+def forward(params, batch, cfg: ArchConfig, layout: HeadLayout, *,
+            rules: Optional[Rules] = None, mesh=None, mode: str = "train",
+            caches=None, unroll: bool = False):
+    """Full-sequence forward (train / prefill). Returns (logits, aux, caches)."""
+    if cfg.family == "encdec":
+        return _forward_encdec(params, batch, cfg, layout, rules=rules,
+                               mesh=mesh, mode=mode, unroll=unroll)
+    if cfg.embeds_input:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = _embed(params, cfg, batch["inputs"])
+    Bsz, S = x.shape[0], x.shape[1]
+    positions = _default_positions(cfg, batch, Bsz, S)
+    ctx = _make_ctx(cfg, layout, rules, mesh, positions, mode, unroll)
+    x = ctx.con(x, ("batch", "res_seq", "act_embed"))
+
+    kinds = layer_kinds(cfg)
+    scanned = cfg.scan_layers and _uniform(kinds) and not unroll
+    if unroll and cfg.scan_layers and _uniform(kinds) and not isinstance(params["layers"], list):
+        # stacked params, unrolled application
+        n = cfg.n_layers
+        plist = [jax.tree.map(lambda a: a[i], params["layers"]) for i in range(n)]
+        clist = None
+        if caches is not None:
+            clist = [jax.tree.map(lambda a: a[i], caches) for i in range(n)]
+        x, aux, ncl = _run_stack(plist, kinds, x, ctx, clist,
+                                 scanned=False, remat=cfg.remat)
+        ncaches = None
+        if ncl is not None and ncl[0] is not None:
+            ncaches = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ncl)
+        x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return _lm_logits(params, cfg, layout, x), aux, ncaches
+    x, aux, ncaches = _run_stack(params["layers"], kinds, x, ctx, caches,
+                                 scanned=scanned, remat=cfg.remat)
+    x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_logits(params, cfg, layout, x), aux, ncaches
+
+
+def _forward_encdec(params, batch, cfg: ArchConfig, layout: HeadLayout, *,
+                    rules=None, mesh=None, mode="train", unroll=False):
+    dtc = jnp.dtype(cfg.compute_dtype)
+    enc_x = batch["enc_embeds"].astype(dtc)
+    Bsz, Se = enc_x.shape[0], enc_x.shape[1]
+    enc_x = enc_x + jnp.asarray(L.sincos_positions(Se, cfg.d_model), dtc)
+    ctx = _make_ctx(cfg, layout, rules, mesh, None, "train", unroll)
+    enc_x = ctx.con(enc_x, ("batch", "res_seq", "act_embed"))
+
+    e = cfg.encdec
+
+    def enc_body(carry, p):
+        x, aux = carry
+        x, a, _ = _apply_block("enc", p, x, ctx, None)
+        return (x, aux + a), ()
+
+    if unroll:
+        x = enc_x
+        for i in range(e.enc_layers):
+            p = jax.tree.map(lambda a: a[i], params["enc_layers"])
+            x, _, _ = _apply_block("enc", p, x, ctx, None)
+        enc_out = x
+    else:
+        (enc_out, _), _ = jax.lax.scan(
+            enc_body, (enc_x, jnp.zeros((), jnp.float32)), params["enc_layers"])
+    enc_out = _apply_norm(params["enc_norm"], enc_out, cfg.norm_eps)
+
+    dec_tokens = batch["dec_inputs"]
+    Td = dec_tokens.shape[1]
+    x = _embed(params, cfg, dec_tokens)
+    x = x + params["dec_pos"][:Td].astype(dtc)[None]
+    dctx = _make_ctx(cfg, layout, rules, mesh,
+                     jnp.broadcast_to(jnp.arange(Td)[None], (Bsz, Td)),
+                     mode, unroll)
+    x = dctx.con(x, ("batch", "res_seq", "act_embed"))
+
+    def dec_body(carry, p):
+        x = carry
+        x, nc = _apply_dec_block(p, x, enc_out, dctx, None)
+        return x, nc
+
+    if unroll:
+        ncs = []
+        for i in range(e.dec_layers):
+            p = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            x, nc = _apply_dec_block(p, x, enc_out, dctx, None)
+            ncs.append(nc)
+        ncaches = (jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ncs)
+                   if (ncs and ncs[0]) else None)
+    else:
+        x, ncaches = jax.lax.scan(dec_body, x, params["dec_layers"])
+    x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_logits(params, cfg, layout, x)
+    if mode == "prefill" and ncaches:
+        # pad the self-attn cache out to max_dec_len
+        def padlen(a, target):
+            padw = [(0, 0)] * a.ndim
+            padw[2] = (0, target - a.shape[2])
+            return jnp.pad(a, padw)
+        ncaches = {
+            "k": padlen(ncaches["k"], e.max_dec_len),
+            "v": padlen(ncaches["v"], e.max_dec_len),
+            "ck": ncaches["ck"], "cv": ncaches["cv"],
+        }
+    return logits, jnp.zeros((), jnp.float32), ncaches
+
+
+def decode_step(params, caches, batch, cfg: ArchConfig, layout: HeadLayout, *,
+                rules=None, mesh=None):
+    """One-token decode. batch: {"token": (B,), "pos": (B,)}.
+
+    Returns (logits (B, Vp), new_caches).
+    """
+    tok, pos = batch["token"], batch["pos"]
+    Bsz = tok.shape[0]
+    if cfg.family == "encdec":
+        x = _embed(params, cfg, tok[:, None])
+        x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None].astype(x.dtype)
+        ctx = _make_ctx(cfg, layout, rules, mesh, None, "decode", False, pos=pos)
+
+        def body(x, xs):
+            p, cache = xs
+            x, nc = _apply_dec_block(p, x, None, ctx, cache)
+            return x, {**cache, **nc}
+
+        x, ncaches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+        x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return _lm_logits(params, cfg, layout, x)[:, 0], ncaches
+
+    x = _embed(params, cfg, tok[:, None]) if not cfg.embeds_input else \
+        batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    ctx = _make_ctx(cfg, layout, rules, mesh, None, "decode", False, pos=pos)
+    kinds = layer_kinds(cfg)
+    scanned = cfg.scan_layers and _uniform(kinds)
+
+    if scanned:
+        blk_kind = kinds[0]
+
+        def body(x, xs):
+            p, cache = xs
+            x, _, nc = _apply_block(blk_kind, p, x, ctx, cache)
+            return x, nc
+
+        x, ncaches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        ncaches = []
+        for i, kind in enumerate(kinds):
+            x, _, nc = _apply_block(kind, params["layers"][i], x, ctx, caches[i])
+            ncaches.append(nc)
+    x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_logits(params, cfg, layout, x)[:, 0], ncaches
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, targets, *, z_loss: float = 1e-4):
+    """Masked softmax cross-entropy in f32. targets < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * mask
+    z = jnp.square(logz) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom + z_loss * z.sum() / denom
+
+
+def loss_fn(params, batch, cfg: ArchConfig, layout: HeadLayout, *,
+            rules=None, mesh=None, unroll: bool = False):
+    """Training loss. Returns (loss, metrics)."""
+    logits, aux, _ = forward(params, batch, cfg, layout, rules=rules,
+                             mesh=mesh, mode="train", unroll=unroll)
+    tgt_key = "targets"
+    loss = lm_loss(logits, batch[tgt_key]) + aux
+    return loss, {"loss": loss, "aux": aux}

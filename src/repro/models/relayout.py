@@ -1,0 +1,128 @@
+"""Re-lay-out attention parameters between TP head layouts.
+
+Checkpoints store the logical (tp=1) layout; on restore the params are
+re-laid-out for the serving/training mesh's TP degree (elastic restarts may
+change the mesh). Dead padded heads are zero-filled and masked at runtime, so
+the relayout is semantics-preserving by construction.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.distributed.sharding import HeadLayout
+
+# key -> (head axis, unstacked ndim); scanned stacks shift axes by +1
+_Q_KEYS = {"wq": (1, 3), "bq": (0, 2)}
+_KV_KEYS = {"wk": (1, 3), "bk": (0, 2), "wv": (1, 3), "bv": (0, 2)}
+_O_KEYS = {"wo": (0, 3)}
+
+
+def _ax(arr, ax_nd):
+    ax, nd = ax_nd
+    return ax + (arr.ndim - nd)
+
+
+def _gather_pad(arr, idx: np.ndarray, live: np.ndarray, axis: int):
+    out = jnp.take(arr, jnp.asarray(idx), axis=axis)
+    shape = [1] * out.ndim
+    shape[axis] = len(idx)
+    mask = jnp.asarray(live, out.dtype).reshape(shape)
+    return out * mask
+
+
+def _attn_to_logical(p: Dict[str, Any], lo: HeadLayout) -> Dict[str, Any]:
+    """Stored layout -> logical (tp=1, unpadded) layout."""
+    qmask = lo.q_head_mask().astype(bool)
+    qidx = lo.q_gather_index()
+    # inverse permutation: logical head h lives at stored slot inv[h]
+    inv = np.zeros((lo.n_q,), np.int64)
+    for stored, logical in enumerate(qidx):
+        if qmask[stored]:
+            inv[logical] = stored
+    kv_first = np.arange(lo.n_kv) * lo.kv_repeat  # first stored copy per kv head
+    out = dict(p)
+    for k, ax in _Q_KEYS.items():
+        if k in p:
+            out[k] = jnp.take(p[k], jnp.asarray(inv), axis=_ax(p[k], ax))
+    for k, ax in _KV_KEYS.items():
+        if k in p:
+            out[k] = jnp.take(p[k], jnp.asarray(kv_first), axis=_ax(p[k], ax))
+    for k, ax in _O_KEYS.items():
+        if k in p:
+            out[k] = jnp.take(p[k], jnp.asarray(inv), axis=_ax(p[k], ax))
+    return out
+
+
+def _attn_from_logical(p: Dict[str, Any], lo: HeadLayout) -> Dict[str, Any]:
+    """Logical layout -> stored layout for `lo` (pad/replicate)."""
+    qidx, qlive = lo.q_gather_index(), lo.q_head_mask().astype(bool)
+    kidx = lo.kv_gather_index()
+    klive = np.ones((lo.n_kv_stored,), bool)
+    if lo.n_kv_dead:
+        klive[-lo.n_kv_dead:] = False
+    out = dict(p)
+    for k, ax in _Q_KEYS.items():
+        if k in p:
+            out[k] = _gather_pad(p[k], qidx, qlive, _ax(p[k], ax))
+    for k, ax in _KV_KEYS.items():
+        if k in p:
+            out[k] = _gather_pad(p[k], kidx, klive, _ax(p[k], ax))
+    for k, ax in _O_KEYS.items():
+        if k in p:
+            out[k] = _gather_pad(p[k], qidx, qlive, _ax(p[k], ax))
+    return out
+
+
+def _is_attn(d) -> bool:
+    return isinstance(d, dict) and "wq" in d and "wo" in d
+
+
+def _map_attn(tree, fn):
+    if _is_attn(tree):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: _map_attn(v, fn) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_map_attn(v, fn) for v in tree]
+    return tree
+
+
+def _resize_vocab(params, vocab: int):
+    out = dict(params)
+    if "tok_embed" in out:
+        t = out["tok_embed"]
+        if t.shape[0] > vocab:
+            out["tok_embed"] = t[:vocab]
+        elif t.shape[0] < vocab:
+            out["tok_embed"] = jnp.pad(t, ((0, vocab - t.shape[0]), (0, 0)))
+    if "lm_head" in out:
+        h = out["lm_head"]
+        if h.shape[1] > vocab:
+            out["lm_head"] = h[:, :vocab]
+        elif h.shape[1] < vocab:
+            out["lm_head"] = jnp.pad(h, ((0, 0), (0, vocab - h.shape[1])))
+    return out
+
+
+def to_logical(params, cfg: ArchConfig, layout: HeadLayout):
+    params = _resize_vocab(params, cfg.vocab_size)
+    if layout.n_q_stored == layout.n_q and layout.n_kv_stored == layout.n_kv:
+        return params
+    return _map_attn(params, lambda p: _attn_to_logical(p, layout))
+
+
+def from_logical(params, cfg: ArchConfig, layout: HeadLayout):
+    from repro.models.model import padded_vocab
+    params = _resize_vocab(params, padded_vocab(cfg, layout.tp))
+    if layout.n_q_stored == layout.n_q and layout.n_kv_stored == layout.n_kv:
+        return params
+    return _map_attn(params, lambda p: _attn_from_logical(p, layout))
+
+
+def relayout(params, cfg: ArchConfig, src: HeadLayout, dst: HeadLayout):
+    return from_logical(to_logical(params, cfg, src), cfg, dst)

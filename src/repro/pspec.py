@@ -1,0 +1,101 @@
+"""Parameter specs: one declaration -> init arrays / abstract shapes / shardings.
+
+A model declares a pytree of `ParamSpec`s. From that single source we derive
+  * real initialised arrays (smoke tests, examples, training),
+  * `jax.ShapeDtypeStruct` stand-ins (multi-pod dry-run: no allocation),
+  * `NamedSharding`s via the logical-axis rules (dry-run in_shardings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import Rules, sharding_for
+
+try:  # jax >= 0.5
+    from jax.sharding import Mesh
+except ImportError:  # pragma: no cover
+    Mesh = object
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "float32"
+    init: str = "fan_in"      # fan_in | zeros | ones | normal | embed | recurrent
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "recurrent":
+        # RG-LRU Lambda init: a in (0.9, 0.999) via softplus parametrisation
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        return (-jnp.log(jnp.expm1(-jnp.log(u)))).astype(dt) * spec.scale
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dt)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02 * spec.scale).astype(dt)
+    # fan_in: truncated-normal-ish scaled by 1/sqrt(fan_in); fan_in = first axis
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[0], 1)
+    if len(spec.shape) >= 3:
+        fan_in = int(np.prod(spec.shape[:-2])) * spec.shape[-2]
+        fan_in = spec.shape[0]
+    std = spec.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(specs, rng) -> dict:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=is_spec,
+    )
+
+
+def param_shardings(specs, rules: Rules, mesh):
+    return jax.tree.map(
+        lambda s: sharding_for(s.shape, s.axes, rules, mesh),
+        specs, is_leaf=is_spec,
+    )
+
+
+def param_pspecs(specs, rules: Rules, mesh):
+    from repro.distributed.sharding import spec_for
+    return jax.tree.map(
+        lambda s: spec_for(s.shape, s.axes, rules, mesh),
+        specs, is_leaf=is_spec,
+    )
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def stack_specs(spec: ParamSpec, n: int) -> ParamSpec:
+    """Add a leading stacked-layers dim (scan axis)."""
+    return ParamSpec((n,) + spec.shape, ("layers",) + spec.axes,
+                     spec.dtype, spec.init, spec.scale)

@@ -1,0 +1,172 @@
+"""Serving: prefill -> decode cache management + a batched request engine.
+
+Decode caches:
+  * full-attention archs: (B, max_len, Ks, D) linear buffers, write at `pos`
+  * hybrid local-attention layers: (B, W, Ks, D) ring buffers (slot = pos % W)
+  * ssm / rec layers: O(1) conv window + recurrent state
+
+`prefill_to_decode_cache` converts the prefill-produced caches (length = prompt)
+into decode buffers of the serving length. The chunk-by-chunk arrival of
+requests into the running batch mirrors the paper's §IV DMA chunk/kernel-pool
+overlap: prefill (transfer) of one request overlaps decode (compute) of others.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.distributed.sharding import HeadLayout
+from repro.models import model as M
+
+
+def _to_linear(k: jax.Array, max_len: int) -> jax.Array:
+    """([L,] B, S, Ks, D) prefill cache -> ([L,] B, max_len, Ks, D)."""
+    ax = k.ndim - 3  # the sequence axis
+    pad = [(0, 0)] * k.ndim
+    pad[ax] = (0, max_len - k.shape[ax])
+    return jnp.pad(k, pad)
+
+
+def _to_ring(k: jax.Array, window: int) -> jax.Array:
+    """([L,] B, S, ...) -> ([L,] B, W, ...) ring: last W tokens at slot t % W."""
+    ax = k.ndim - 3
+    S, W = k.shape[ax], window
+    shape = list(k.shape)
+    shape[ax] = W
+    out = jnp.zeros(tuple(shape), k.dtype)
+    idx = (slice(None),) * ax
+    if S <= W:
+        return out.at[idx + (slice(0, S),)].set(k)
+    last = k[idx + (slice(S - W, S),)]        # tokens S-W .. S-1
+    tpos = (jnp.arange(S - W, S)) % W
+    return out.at[idx + (tpos,)].set(jnp.moveaxis(last, ax, ax))
+
+
+def prefill_to_decode_cache(cfg: ArchConfig, caches, prompt_len: int,
+                            max_len: int):
+    """Convert prefill caches into decode buffers."""
+    if caches is None:
+        return None
+    if cfg.family == "encdec":
+        return caches  # already padded to max_dec_len by _forward_encdec
+
+    def convert_layer(c):
+        if "state" in c:          # mamba / rg-lru: O(1) state, pass through
+            return c
+        if cfg.family == "hybrid":
+            W = cfg.hybrid.window
+            return {"k": _to_ring(c["k"], W), "v": _to_ring(c["v"], W)}
+        return {"k": _to_linear(c["k"], max_len), "v": _to_linear(c["v"], max_len)}
+
+    if isinstance(caches, list):
+        return [convert_layer(c) for c in caches]
+    return convert_layer(caches) if isinstance(caches, dict) and (
+        "k" in caches or "state" in caches) else jax.tree.map(lambda x: x, caches)
+
+
+def init_decode_cache(cfg: ArchConfig, layout: HeadLayout, batch: int,
+                      max_len: int, rules=None, mesh=None):
+    from repro import pspec
+    specs = M.cache_specs(cfg, layout, batch, max_len)
+    zeros = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)), specs,
+        is_leaf=lambda x: hasattr(x, "axes"))
+    return zeros
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 32
+    out: Optional[List[int]] = None
+
+
+class ServingEngine:
+    """Minimal batched greedy-decode engine over the functional model API.
+
+    Slots of a fixed decode batch are filled as requests arrive (kernel-pool
+    analogue of the paper's §IV): a finished slot is immediately re-primed
+    with the next queued request while the other slots keep decoding.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
+                 max_len: int = 256, tp: int = 1):
+        self.cfg = cfg
+        self.layout = M.make_layout(cfg, tp)
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.caches = init_decode_cache(cfg, self.layout, batch_size, max_len)
+        self.pos = np.zeros((batch_size,), np.int32)
+        self.live = np.zeros((batch_size,), bool)
+        self.budget = np.zeros((batch_size,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * batch_size
+        self._decode = jax.jit(functools.partial(
+            self._decode_impl, cfg=cfg, layout=self.layout))
+
+    @staticmethod
+    def _decode_impl(params, caches, tokens, pos, *, cfg, layout):
+        logits, caches = M.decode_step(params, caches, {"token": tokens, "pos": pos},
+                                       cfg, layout)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    # -- slot management ---------------------------------------------------
+    def _prime(self, slot: int, req: Request):
+        cfg, layout = self.cfg, self.layout
+        prompt = jnp.asarray(req.prompt)[None]
+        batch = {"inputs": prompt}
+        logits, _, caches = M.forward(self.params, batch, cfg, layout,
+                                      mode="prefill")
+        caches = prefill_to_decode_cache(cfg, caches, prompt.shape[1], self.max_len)
+        # write this request's cache into the batch slot
+        def put(dst, src):
+            return dst.at[slot].set(src[0].astype(dst.dtype))
+        if isinstance(self.caches, list):
+            self.caches = [jax.tree.map(put, d, s)
+                           for d, s in zip(self.caches, caches)]
+        else:
+            self.caches = jax.tree.map(put, self.caches, caches)
+        self.pos[slot] = len(req.prompt) - 1  # next decode writes at prompt_len
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.out = [nxt]
+        self.live[slot] = True
+        self.budget[slot] = req.max_new_tokens - 1
+        self.slot_req[slot] = req
+        self.next_token = getattr(self, "next_token",
+                                  np.zeros((self.B,), np.int32))
+        self.next_token[slot] = nxt
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        queue = list(requests)
+        self.next_token = np.zeros((self.B,), np.int32)
+        done: Dict[int, List[int]] = {}
+        while queue or self.live.any():
+            # fill idle slots (chunk arrival overlapping busy slots)
+            for s in range(self.B):
+                if not self.live[s] and queue:
+                    self._prime(s, queue.pop(0))
+            toks = jnp.asarray(self.next_token)
+            pos = jnp.asarray(self.pos + 1)  # position of the new token
+            nxt, self.caches = self._decode(self.params, self.caches, toks, pos)
+            nxt = np.asarray(nxt)
+            for s in range(self.B):
+                if not self.live[s]:
+                    continue
+                self.pos[s] += 1
+                req = self.slot_req[s]
+                req.out.append(int(nxt[s]))
+                self.next_token[s] = nxt[s]
+                self.budget[s] -= 1
+                if self.budget[s] <= 0 or self.pos[s] + 2 >= self.max_len:
+                    done[req.uid] = req.out
+                    self.live[s] = False
+                    self.slot_req[s] = None
+        return done

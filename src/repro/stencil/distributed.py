@@ -1,0 +1,83 @@
+"""Distributed PW advection: halo exchange overlapped with interior compute.
+
+The paper's §IV overlap (DMA chunks vs kernel pool) maps chip-to-chip on TPU:
+the y-decomposed domain needs depth-1 halos, exchanged with
+`lax.ppermute` while the *interior* — which needs no halo — computes.
+The data dependence is structured so XLA can schedule the collective-permute
+concurrently with the interior stencil (interior result does not consume the
+permuted edges), then the two boundary y-rows are patched.
+
+Runs under `shard_map` over the `data` axis of any mesh (smoke-tested on the
+host mesh; the production mesh shards y 16-way per pod).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels.advection.ref import AdvectParams, pw_advect_ref
+
+
+def _exchange_halos(f, axis: str):
+    """Send my edge y-rows to neighbours; receive theirs. Returns (lo, hi).
+
+    lo = neighbour's last row (goes below my slab), hi = neighbour's first.
+    """
+    n = jax.lax.axis_size(axis)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    hi_from_prev = jax.lax.ppermute(f[:, -1:, :], axis, fwd)   # my top -> next
+    lo_from_next = jax.lax.ppermute(f[:, :1, :], axis, bwd)    # my bottom -> prev
+    return hi_from_prev, lo_from_next
+
+
+def make_distributed_advect(mesh: Mesh, params: AdvectParams,
+                            axis: str = "data"):
+    """Returns jit(advect) over fields sharded (None, axis, None) in y."""
+
+    def local(u, v, w):
+        """Per-shard: exchange halos, compute interior meanwhile, patch edges."""
+        # 1) launch halo exchange (6 edge planes, tiny vs the slab)
+        halos = [_exchange_halos(f, axis) for f in (u, v, w)]
+        # 2) interior compute — no dependence on `halos`, so XLA overlaps the
+        #    collective-permutes with this stencil (the §IV overlap on ICI)
+        interior = pw_advect_ref(u, v, w, params)
+        # 3) boundary patch: rebuild the two edge y-bands with halo rows
+        n = jax.lax.axis_size(axis)
+        idx = jax.lax.axis_index(axis)
+
+        def with_halo(f, h):
+            prev_hi, next_lo = h
+            return jnp.concatenate([prev_hi, f, next_lo], axis=1)
+
+        uh, vh, wh = (with_halo(f, h) for f, h in zip((u, v, w), halos))
+        full = pw_advect_ref(uh, vh, wh, params)
+        band = [s[:, 1:-1, :] for s in full]   # drop halo rows back off
+        # interior rows are identical; edge rows (y=0 / y=-1 of the slab) come
+        # from the halo'd compute. For edge shards the global boundary stays 0.
+        Y = u.shape[1]
+        rows = jnp.arange(Y)
+        is_edge_row = (rows < 1) | (rows >= Y - 1)
+        gl = (idx == 0)
+        gh = (idx == n - 1)
+        glob_lo = gl & (rows < 1)
+        glob_hi = gh & (rows >= Y - 1)
+        keep_band = is_edge_row & ~(glob_lo | glob_hi)
+        sel = keep_band[None, :, None]
+        out = [jnp.where(sel, b, i) for b, i in zip(band, interior)]
+        return tuple(out)
+
+    spec = P(None, axis, None)
+    fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                   out_specs=(spec, spec, spec))
+    return jax.jit(fn)
+
+
+def reference_global(u, v, w, params: AdvectParams):
+    """Single-device oracle for the distributed version."""
+    return pw_advect_ref(u, v, w, params)

@@ -1,0 +1,156 @@
+"""Checkpoint / restore with atomic writes and elastic (mesh-agnostic) restore.
+
+Layout on disk:
+    <dir>/step_000123/
+        manifest.json      # step, arch, tp layout, tree structure, shapes
+        arrays.npz         # one entry per flattened leaf (host-gathered)
+    <dir>/LATEST           # atomic pointer file
+
+Design points for the 1000-node regime (documented, exercised at CPU scale):
+  * atomic rename: a crashed save can never corrupt LATEST;
+  * params are stored in the *logical* (tp=1) head layout, so a restart on a
+    different mesh/TP degree re-lays-out on load (elastic restarts);
+  * `keep_last` bounds disk usage; `save_async` overlaps serialisation with
+    the next training step (the paper's transfer/compute overlap, applied to
+    checkpoint I/O);
+  * at real multi-host scale each host would write its own array shards —
+    the manifest format already records per-leaf shapes to support that.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.models import model as M
+from repro.models import relayout as R
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str | Path, state: Dict[str, Any], step: int, *,
+         cfg: Optional[ArchConfig] = None, layout=None,
+         keep_last: int = 3) -> Path:
+    """Synchronous atomic checkpoint save."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    if cfg is not None and layout is not None:
+        params = R.to_logical(state["params"], cfg, layout)
+        state = {**state, "params": params}
+    tmp = ckpt_dir / f".tmp_step_{step:09d}_{os.getpid()}"
+    final = ckpt_dir / f"step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves = _flatten_with_paths(state)
+    arrays = {k: np.asarray(v) for k, v in leaves}
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "arch": cfg.name if cfg else None,
+        "keys": [k for k, _ in leaves],
+        "shapes": {k: list(np.shape(v)) for k, v in leaves},
+        "dtypes": {k: str(np.asarray(v).dtype) for k, v in leaves},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic on POSIX
+    latest_tmp = ckpt_dir / ".LATEST.tmp"
+    latest_tmp.write_text(final.name)
+    latest_tmp.rename(ckpt_dir / "LATEST")  # atomic pointer update
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep_last: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep_last]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint serialisation with training (one in flight)."""
+
+    def __init__(self, ckpt_dir: str | Path, keep_last: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, state, step: int, *, cfg=None, layout=None):
+        self.wait()
+        # snapshot to host memory synchronously (cheap vs serialisation)
+        host_state = jax.tree.map(np.asarray, state)
+
+        def work():
+            try:
+                save(self.ckpt_dir, host_state, step, cfg=cfg, layout=layout,
+                     keep_last=self.keep_last)
+            except BaseException as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+            if self.last_error is not None:
+                raise self.last_error
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    p = Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    name = p.read_text().strip()
+    if not (Path(ckpt_dir) / name / "manifest.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str | Path, like_state: Dict[str, Any], *,
+            step: Optional[int] = None, cfg: Optional[ArchConfig] = None,
+            layout=None) -> Tuple[Dict[str, Any], int]:
+    """Restore into the structure of `like_state` (elastic: any TP layout)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:09d}"
+    data = np.load(d / "arrays.npz")
+    keys = [k for k, _ in _flatten_with_paths(like_state)]
+    flat_like, tdef = jax.tree_util.tree_flatten(like_state)
+    stored_keys = set(data.files)
+    vals = []
+    for k, leaf in zip(keys, flat_like):
+        if k not in stored_keys:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        vals.append(np.asarray(data[k]))
+    state = jax.tree_util.tree_unflatten(tdef, vals)
+    if cfg is not None and layout is not None:
+        state = {**state, "params": R.from_logical(state["params"], cfg, layout)}
+        # coerce dtypes/shapes to the live layout
+        state = jax.tree.map(
+            lambda a, l: np.asarray(a, dtype=l.dtype) if hasattr(l, "dtype") else a,
+            state, like_state)
+    return state, step

@@ -1,0 +1,88 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping.
+
+Implemented from scratch (no optax in this environment). Moments are stored
+in ``cfg.opt_dtype`` (f32 default; bf16 is the documented low-memory option
+for the >400B dry-run cells).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(step, oc: OptConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = oc.peak_lr * (step + 1) / max(oc.warmup_steps, 1)
+    t = jnp.clip((step - oc.warmup_steps)
+                 / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.peak_lr * (oc.min_lr_frac
+                        + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, opt_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, clip: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, opt_state, oc: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    lr = lr_at(step, oc)
+    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    b1, b2 = oc.b1, oc.b2
+    c1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+    c2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,124 @@
+"""Train / prefill / serve step builders with explicit shardings.
+
+``build_step(cfg, shape_kind, ...)`` returns the jittable step function plus
+abstract inputs and in/out shardings — exactly what both the real launcher and
+the multi-pod dry-run need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import pspec
+from repro.config import ArchConfig, RunShape
+from repro.distributed.sharding import Rules, sharding_for, spec_for
+from repro.models import model as M
+from repro.training import optimizer as O
+
+
+def make_train_step(cfg: ArchConfig, layout, rules: Optional[Rules] = None,
+                    mesh=None, opt: O.OptConfig = O.OptConfig(),
+                    unroll: bool = False):
+    """state = {"params", "opt"}; batch per input_specs. Returns (state, metrics)."""
+
+    def loss_of(params, batch):
+        return M.loss_fn(params, batch, cfg, layout, rules=rules, mesh=mesh,
+                         unroll=unroll)
+
+    def step(state, batch):
+        accum = cfg.grad_accum
+        if accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(state["params"], mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), ()
+            mb0 = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]),
+                batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state["params"])
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mb0)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(state["params"], batch)
+        new_params, new_opt, om = O.adamw_update(
+            state["params"], grads, state["opt"], opt)
+        metrics = {**metrics, **om}
+        # in-graph NaN guard: a poisoned batch/step must not corrupt the
+        # state (donation makes host-side rollback impossible on device)
+        good = jnp.isfinite(metrics["loss"]) & jnp.isfinite(om["grad_norm"])
+        sel = lambda n, o: jnp.where(good, n, o.astype(n.dtype))
+        new_params = jax.tree.map(sel, new_params, state["params"])
+        new_opt = jax.tree.map(sel, new_opt, state["opt"])
+        metrics["good"] = good
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, layout, rules=None, mesh=None,
+                      unroll: bool = False):
+    def step(params, batch):
+        logits, aux, caches = M.forward(params, batch, cfg, layout, rules=rules,
+                                        mesh=mesh, mode="prefill", unroll=unroll)
+        return logits[:, -1], caches
+    return step
+
+
+def make_serve_step(cfg: ArchConfig, layout, rules=None, mesh=None):
+    def step(params, caches, batch):
+        logits, caches = M.decode_step(params, caches, batch, cfg, layout,
+                                       rules=rules, mesh=mesh)
+        return logits, caches
+    return step
+
+
+# ---------------------------------------------------------------------------
+# State construction / shardings
+# ---------------------------------------------------------------------------
+
+
+def state_specs(cfg: ArchConfig, layout) -> Dict[str, Any]:
+    """ParamSpec tree for the full train state (params + AdamW moments).
+
+    EP-resident expert weights (`expert_embed` axis) are replicated over
+    `data`, but their AdamW moments still ZeRO-1-shard over `data` via the
+    `opt_expert_embed` rule (the update's delta is gathered once per step).
+    """
+    ps = M.param_specs(cfg, layout)
+
+    def moment(s):
+        axes = tuple("opt_expert_embed" if a == "expert_embed" else a
+                     for a in s.axes)
+        return pspec.ParamSpec(s.shape, axes, cfg.opt_dtype, "zeros")
+    return {
+        "params": ps,
+        "opt": {
+            "m": jax.tree.map(moment, ps, is_leaf=pspec.is_spec),
+            "v": jax.tree.map(moment, ps, is_leaf=pspec.is_spec),
+            "step": pspec.ParamSpec((), (), "int32", "zeros"),
+        },
+    }
+
+
+def init_state(cfg: ArchConfig, layout, rng) -> Dict[str, Any]:
+    params = pspec.init_params(M.param_specs(cfg, layout), rng)
+    return {"params": params, "opt": O.init_opt_state(params, cfg.opt_dtype)}
+
+
+def tree_shardings(specs, rules: Rules, mesh):
+    return pspec.param_shardings(specs, rules, mesh)
+
+
+def tree_abstract(specs):
+    return pspec.abstract_params(specs)

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; ONLY the
+# dry-run sets xla_force_host_platform_device_count (in its first lines).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

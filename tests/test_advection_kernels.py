@@ -1,0 +1,155 @@
+"""Pallas advection kernels: shape/dtype sweeps vs the jnp + f64 oracles,
+plus hypothesis physics properties of the PW scheme."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.advection.advection import (advect_blocked, advect_dataflow,
+                                               advect_wide, hbm_bytes_model)
+from repro.kernels.advection.ref import (AdvectParams, default_params,
+                                         flops_per_cell, pw_advect_ref)
+
+SHAPES = [(4, 8, 8), (8, 16, 16), (6, 24, 40), (12, 32, 128), (5, 8, 256)]
+VARIANTS = [("blocked", advect_blocked), ("dataflow", advect_dataflow)]
+
+
+def fields(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return tuple(jnp.asarray(rng.normal(size=shape), dtype) for _ in range(3))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("name,fn", VARIANTS)
+def test_kernel_matches_ref_f32(shape, name, fn):
+    u, v, w = fields(shape, jnp.float32)
+    p = default_params(shape[2])
+    ref = pw_advect_ref(u, v, w, p)
+    out = fn(u, v, w, p)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(ref, out))
+    assert err < 1e-5, (name, shape, err)
+
+
+@pytest.mark.parametrize("name,fn", VARIANTS)
+def test_kernel_bf16(name, fn):
+    u, v, w = fields((6, 16, 32), jnp.bfloat16)
+    p = default_params(32)
+    ref = pw_advect_ref(u.astype(jnp.float32), v.astype(jnp.float32),
+                        w.astype(jnp.float32), p)
+    out = fn(u, v, w, p)
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+              for a, b in zip(ref, out))
+    assert err < 0.15, (name, err)  # bf16 stencil tolerance
+
+
+def test_wide_requires_alignment():
+    u, v, w = fields((4, 16, 64), jnp.float32)
+    with pytest.raises(ValueError):
+        advect_wide(u, v, w, default_params(64))
+    u, v, w = fields((4, 16, 128), jnp.float32)
+    out = advect_wide(u, v, w, default_params(128))
+    assert out[0].shape == (4, 16, 128)
+
+
+def test_f64_oracle_bounds_f32_error():
+    """f32 kernel vs f64 numpy oracle: error within stencil tolerance."""
+    shape = (6, 12, 24)
+    rng = np.random.default_rng(5)
+    u64, v64, w64 = (rng.normal(size=shape) for _ in range(3))
+    Z = shape[2]
+    k = np.arange(Z, dtype=np.float64)
+    rdz = 1.0 / (40.0 * (1.0 + 0.001 * k))
+    t1 = 0.25 * rdz * (1.0 - 0.002 * k)
+    t2 = 0.25 * rdz * (1.0 + 0.002 * k)
+
+    def ref64(u, v, w):
+        def sh(f, di, dj, dk):
+            return f[1 + di:f.shape[0] - 1 + di, 1 + dj:f.shape[1] - 1 + dj,
+                     1 + dk:f.shape[2] - 1 + dk]
+        out = []
+        for f in (u, v, w):
+            fx = 0.25 / 100.0 * (sh(u, -1, 0, 0) * (sh(f, 0, 0, 0) + sh(f, -1, 0, 0))
+                                 - sh(u, 1, 0, 0) * (sh(f, 0, 0, 0) + sh(f, 1, 0, 0)))
+            fy = 0.25 / 100.0 * (sh(v, 0, -1, 0) * (sh(f, 0, 0, 0) + sh(f, 0, -1, 0))
+                                 - sh(v, 0, 1, 0) * (sh(f, 0, 0, 0) + sh(f, 0, 1, 0)))
+            fz = (t1[1:-1] * sh(w, 0, 0, -1) * (sh(f, 0, 0, 0) + sh(f, 0, 0, -1))
+                  - t2[1:-1] * sh(w, 0, 0, 1) * (sh(f, 0, 0, 0) + sh(f, 0, 0, 1)))
+            out.append(np.pad(fx + fy + fz, 1))
+        return out
+
+    oracle = ref64(u64, v64, w64)
+    p = default_params(Z)
+    out = advect_dataflow(jnp.asarray(u64, jnp.float32),
+                          jnp.asarray(v64, jnp.float32),
+                          jnp.asarray(w64, jnp.float32), p)
+    err = max(float(np.max(np.abs(np.asarray(a, np.float64) - b)))
+              for a, b in zip(out, oracle))
+    assert err < 1e-5, err
+
+
+@settings(max_examples=25, deadline=None)
+@given(cu=st.floats(-5, 5), cv=st.floats(-5, 5), cw=st.floats(-5, 5))
+def test_constant_fields_give_zero_sources_on_uniform_grid(cu, cv, cw):
+    """PW flux form: uniform flow on a uniform grid has zero divergence."""
+    Z = 16
+    rdz = np.full(Z, 1.0 / 40.0)
+    p = AdvectParams(jnp.float32(0.25 / 100), jnp.float32(0.25 / 100),
+                     jnp.asarray(0.25 * rdz, jnp.float32),
+                     jnp.asarray(0.25 * rdz, jnp.float32))
+    shape = (5, 6, Z)
+    u = jnp.full(shape, cu, jnp.float32)
+    v = jnp.full(shape, cv, jnp.float32)
+    w = jnp.full(shape, cw, jnp.float32)
+    out = advect_dataflow(u, v, w, p)
+    assert max(float(jnp.max(jnp.abs(s))) for s in out) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.1, 3.0), seed=st.integers(0, 100))
+def test_quadratic_scaling(alpha, seed):
+    """Momentum advection is quadratic: advect(a*U) == a^2 * advect(U)."""
+    u, v, w = fields((5, 8, 8), jnp.float32, seed)
+    p = default_params(8)
+    base = pw_advect_ref(u, v, w, p)
+    scaled = pw_advect_ref(alpha * u, alpha * v, alpha * w, p)
+    err = max(float(jnp.max(jnp.abs(s - alpha * alpha * b)))
+              for s, b in zip(scaled, base))
+    assert err < 1e-2 * max(alpha * alpha, 1.0)
+
+
+def test_boundary_is_zero():
+    u, v, w = fields((6, 10, 12), jnp.float32)
+    for s in advect_dataflow(u, v, w, default_params(12)):
+        assert float(jnp.abs(s[0]).max()) == 0.0
+        assert float(jnp.abs(s[-1]).max()) == 0.0
+        assert float(jnp.abs(s[:, 0]).max()) == 0.0
+        assert float(jnp.abs(s[:, :, -1]).max()) == 0.0
+
+
+def test_traffic_model_ladder():
+    """The Fig. 3 ladder: each stage strictly reduces modelled HBM traffic."""
+    X, Y, Z = 512, 512, 64
+    b_point = hbm_bytes_model(X, Y, Z, 4, "pointwise")
+    b_block = hbm_bytes_model(X, Y, Z, 4, "blocked")
+    b_flow = hbm_bytes_model(X, Y, Z, 4, "dataflow")
+    b_wide = hbm_bytes_model(X, Y, 128, 4, "wide")
+    assert b_point > b_block > b_flow
+    # wide at z=128 moves fewer bytes per cell than dataflow at z=64
+    assert b_wide / (X * Y * 128) < b_flow / (X * Y * 64)
+
+
+def test_flops_per_cell_measured():
+    n = flops_per_cell()
+    assert 50 <= n <= 70  # paper: 53 (21 add/sub + 32 mul); ours measured
+
+
+def test_ops_wrapper_variants():
+    from repro.kernels.advection.ops import pw_advect
+    u, v, w = fields((6, 16, 16), jnp.float32)
+    p = default_params(16)
+    ref = pw_advect(u, v, w, p, variant="reference")
+    for variant in ("blocked", "dataflow"):
+        out = pw_advect(u, v, w, p, variant=variant)
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(ref, out))
+        assert err < 1e-5, (variant, err)

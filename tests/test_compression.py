@@ -1,0 +1,45 @@
+"""Gradient compression: quantisation bounds + error-feedback properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (dequantize_int8, quantize_int8,
+                                           wire_bytes_saved)
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-6, 1e4))
+def test_quantize_roundtrip_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-12  # half-ulp of the int8 grid
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated applied signal tracks the true
+    cumulative gradient (bias does not grow)."""
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros((128,), jnp.float32)
+    true_sum = np.zeros((128,))
+    applied_sum = np.zeros((128,))
+    for t in range(50):
+        g = jnp.asarray(rng.normal(size=(128,)) * 0.1, jnp.float32)
+        xf = g + residual
+        q, s = quantize_int8(xf)
+        deq = dequantize_int8(q, s)
+        residual = xf - deq
+        true_sum += np.asarray(g)
+        applied_sum += np.asarray(deq)
+    # the residual bounds the gap between applied and true cumulative signal
+    gap = np.abs(true_sum - applied_sum)
+    assert gap.max() <= float(jnp.abs(residual).max()) + 1e-5
+
+
+def test_wire_bytes_ratio():
+    grads = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((7,))}
+    w = wire_bytes_saved(grads)
+    assert w["ratio"] == 4.0
+    assert w["fp32_bytes"] == 4 * 107

@@ -1,0 +1,74 @@
+"""Exact published-config checks + analytic parameter counts."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+
+EXPECTED = {
+    "nemotron_4_340b": dict(n_layers=96, d_model=18432, n_heads=96,
+                            n_kv_heads=8, d_ff=73728, vocab_size=256000,
+                            mlp="sq_relu"),
+    "qwen2_5_14b": dict(n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+                        d_ff=13824, vocab_size=152064, qkv_bias=True),
+    "qwen3_32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+                      d_ff=25600, vocab_size=151936, qk_norm=True),
+    "nemotron_4_15b": dict(n_layers=32, d_model=6144, n_heads=48,
+                           n_kv_heads=8, d_ff=24576, vocab_size=256000),
+    "qwen2_vl_72b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                         d_ff=29568, vocab_size=152064, pos="mrope"),
+    "whisper_large_v3": dict(d_model=1280, n_heads=20, n_kv_heads=20,
+                             d_ff=5120, vocab_size=51866, family="encdec"),
+    "arctic_480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                        d_ff=4864, vocab_size=32000, family="moe"),
+    "llama4_maverick_400b_a17b": dict(n_layers=48, d_model=5120, n_heads=40,
+                                      n_kv_heads=8, d_ff=8192,
+                                      vocab_size=202048, family="moe"),
+    "falcon_mamba_7b": dict(n_layers=64, d_model=4096, vocab_size=65024,
+                            family="ssm"),
+    "recurrentgemma_9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                              n_kv_heads=1, d_ff=12288, vocab_size=256000,
+                              family="hybrid"),
+}
+
+# published total parameter counts (rough, for the analytic count sanity band)
+PARAM_BAND = {
+    "nemotron_4_340b": (300e9, 380e9),
+    "qwen2_5_14b": (12e9, 16e9),
+    "qwen3_32b": (28e9, 36e9),
+    "nemotron_4_15b": (13e9, 18e9),
+    "qwen2_vl_72b": (65e9, 80e9),
+    "whisper_large_v3": (1.2e9, 1.9e9),
+    "arctic_480b": (400e9, 520e9),
+    "llama4_maverick_400b_a17b": (330e9, 440e9),
+    "falcon_mamba_7b": (6e9, 8.5e9),
+    "recurrentgemma_9b": (7.5e9, 11e9),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_config(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_band(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    lo, hi = PARAM_BAND[arch]
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_moe_active_counts():
+    arctic = get_config("arctic_480b")
+    llama4 = get_config("llama4_maverick_400b_a17b")
+    assert arctic.active_param_count() < 0.2 * arctic.param_count()
+    # llama4-maverick: ~17B active of ~400B
+    assert 12e9 < llama4.active_param_count() < 25e9
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_same_family(arch):
+    full, smoke = get_config(arch), get_smoke_config(arch)
+    assert full.family == smoke.family
+    assert smoke.d_model <= 128 and smoke.n_layers <= 4

@@ -1,0 +1,82 @@
+"""prefill + single-token decode must equal the full forward pass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import pspec
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import model as M
+from repro.serving.engine import prefill_to_decode_cache
+
+TOL = {"ssm": 5e-2, "hybrid": 5e-2, "encdec": 5e-2}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    layout = M.make_layout(cfg, tp=1)
+    params = pspec.init_params(M.param_specs(cfg, layout), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    B, S = 2, 32
+    if cfg.family == "encdec":
+        enc = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        dec = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 8)), jnp.int32)
+        full, _, _ = M.forward(params, {"enc_embeds": enc, "dec_inputs": dec},
+                               cfg, layout)
+        _, _, caches = M.forward(params,
+                                 {"enc_embeds": enc, "dec_inputs": dec[:, :7]},
+                                 cfg, layout, mode="prefill")
+        caches = prefill_to_decode_cache(cfg, caches, 7, cfg.encdec.max_dec_len)
+        logits, _ = M.decode_step(
+            params, caches,
+            {"token": dec[:, 7], "pos": jnp.full((B,), 7, jnp.int32)},
+            cfg, layout)
+    elif cfg.embeds_input:
+        emb = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        pos3 = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32)
+        full, _, _ = M.forward(params, {"embeds": emb, "positions": pos3},
+                               cfg, layout)
+        _, _, caches = M.forward(params, {"embeds": emb[:, :S - 1],
+                                          "positions": pos3[:, :S - 1]},
+                                 cfg, layout, mode="prefill")
+        caches = prefill_to_decode_cache(cfg, caches, S - 1, S + 4)
+        logits, _ = M.decode_step(
+            params, caches,
+            {"embeds": emb[:, S - 1:S], "token": jnp.zeros((B,), jnp.int32),
+             "pos": jnp.full((B,), S - 1, jnp.int32)},
+            cfg, layout)
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        full, _, _ = M.forward(params, {"inputs": toks}, cfg, layout)
+        _, _, caches = M.forward(params, {"inputs": toks[:, :S - 1]}, cfg,
+                                 layout, mode="prefill")
+        caches = prefill_to_decode_cache(cfg, caches, S - 1, S + 4)
+        logits, _ = M.decode_step(
+            params, caches,
+            {"token": toks[:, S - 1], "pos": jnp.full((B,), S - 1, jnp.int32)},
+            cfg, layout)
+    err = float(jnp.max(jnp.abs(logits - full[:, -1])))
+    assert err < TOL.get(cfg.family, 1e-3), (arch, err)
+
+
+def test_multi_token_decode_chain():
+    """Decode 8 tokens sequentially == slices of the full forward logits."""
+    cfg = get_smoke_config("qwen3_32b")
+    layout = M.make_layout(cfg, tp=1)
+    params = pspec.init_params(M.param_specs(cfg, layout), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    B, S, T = 2, 24, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + T)), jnp.int32)
+    full, _, _ = M.forward(params, {"inputs": toks}, cfg, layout)
+    _, _, caches = M.forward(params, {"inputs": toks[:, :S]}, cfg, layout,
+                             mode="prefill")
+    caches = prefill_to_decode_cache(cfg, caches, S, S + T + 2)
+    errs = []
+    for t in range(T):
+        logits, caches = M.decode_step(
+            params, caches,
+            {"token": toks[:, S + t], "pos": jnp.full((B,), S + t, jnp.int32)},
+            cfg, layout)
+        errs.append(float(jnp.max(jnp.abs(logits - full[:, S + t]))))
+    assert max(errs) < 1e-3, errs

@@ -1,0 +1,109 @@
+"""Launch-layer unit tests: input specs, exec policy, shardings — all 40
+(arch x shape) cells, no compilation (structural invariants only)."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import pspec
+from repro.config import ALL_SHAPES, SHAPES, supports
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import make_rules, spec_for
+from repro.launch import specs as SP
+from repro.launch.dryrun import _cost_cfg, _layer_multiplier, exec_policy
+from repro.models import model as M
+
+
+class FakeMesh:
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+CELLS = [(a, s.name) for a in ARCH_IDS for s in ALL_SHAPES]
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_input_specs_shardable(arch, shape):
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    if not supports(cfg, sh):
+        assert shape == "long_500k" and not cfg.sub_quadratic
+        return
+    specs, axes = SP.input_specs(cfg, sh)
+    assert specs, (arch, shape)
+    rules = make_rules(multi_pod=True)
+    for k, s in specs.items():
+        spec = spec_for(s.shape, axes[k], rules, FakeMesh())
+        # every sharded dim must divide evenly (jit-input requirement)
+        for dim, p in zip(s.shape, spec):
+            if p is None:
+                continue
+            parts = p if isinstance(p, tuple) else (p,)
+            total = int(np.prod([FakeMesh.shape[a] for a in parts]))
+            assert dim % total == 0, (arch, shape, k, dim, p)
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_param_and_cache_specs_shardable(arch, shape):
+    cfg0 = get_config(arch)
+    sh = SHAPES[shape]
+    if not supports(cfg0, sh):
+        return
+    cfg = exec_policy(cfg0, sh)
+    layout = M.make_layout(cfg, 16)
+    rules = make_rules(multi_pod=False, seq_parallel=cfg.seq_parallel)
+    trees = [M.param_specs(cfg, layout)]
+    if sh.kind == "decode":
+        trees.append(M.cache_specs(cfg, layout, sh.global_batch, sh.seq_len))
+    for tree in trees:
+        for s in jax.tree.leaves(tree, is_leaf=pspec.is_spec):
+            spec = spec_for(s.shape, s.axes, rules, FakeMesh())
+            for dim, p in zip(s.shape, spec):
+                if p is None:
+                    continue
+                parts = p if isinstance(p, tuple) else (p,)
+                total = int(np.prod([FakeMesh.shape[a] for a in parts]))
+                assert dim % total == 0, (arch, shape, s.shape, s.axes)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cost_cfg_differential_consistency(arch):
+    """_cost_cfg(n) must scale layer counts so that differential costing's
+    unit x multiplier reconstructs the full stack."""
+    cfg = get_config(arch)
+    c1, c2 = _cost_cfg(cfg, 1), _cost_cfg(cfg, 2)
+    mult = _layer_multiplier(cfg)
+    if cfg.family == "encdec":
+        per_unit = (c2.encdec.enc_layers - c1.encdec.enc_layers)
+        total = cfg.encdec.enc_layers
+    else:
+        per_unit = c2.n_layers - c1.n_layers
+        total = cfg.n_layers
+    assert per_unit > 0
+    assert abs(per_unit * mult - total) < per_unit, (arch, per_unit, mult)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exec_policy_train_serving_split(arch):
+    cfg = get_config(arch)
+    tr = exec_policy(cfg, SHAPES["train_4k"])
+    assert tr.remat == "full" and tr.seq_parallel
+    de = exec_policy(cfg, SHAPES["decode_32k"])
+    assert de.remat == "none" and not de.seq_parallel
+    cost = exec_policy(_cost_cfg(cfg, 1), SHAPES["train_4k"], for_cost=True)
+    assert not cost.scan_layers and cost.attention_impl == "dense"
+
+
+def test_long_500k_skip_rules():
+    runs = [a for a in ARCH_IDS if supports(get_config(a), SHAPES["long_500k"])]
+    assert sorted(runs) == ["falcon_mamba_7b", "recurrentgemma_9b"]
+
+
+def test_make_batch_matches_specs():
+    cfg = get_config("qwen3_32b")
+    for sh in ALL_SHAPES:
+        if not supports(cfg, sh):
+            continue
+        b = SP.make_batch(cfg, sh, batch=2, seq=64)
+        specs, _ = SP.input_specs(cfg, sh)
+        assert set(b) == set(specs)

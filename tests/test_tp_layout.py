@@ -1,0 +1,63 @@
+"""TP head-layout equivalence + hypothesis properties of HeadLayout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import pspec
+from repro.configs import get_smoke_config
+from repro.distributed.sharding import make_head_layout
+from repro.models import model as M
+from repro.models import relayout as R
+
+
+@settings(max_examples=200, deadline=None)
+@given(kv=st.integers(1, 32), mult=st.integers(1, 16),
+       tp=st.sampled_from([1, 2, 4, 8, 16, 32]))
+def test_head_layout_invariants(kv, mult, tp):
+    n_q = kv * mult
+    lo = make_head_layout(n_q, kv, tp)
+    assert lo.n_kv_stored % tp == 0 or tp == 1
+    assert lo.n_q_stored == lo.n_kv_stored * lo.q_per_group
+    mask = lo.q_head_mask()
+    assert int(mask.sum()) == n_q                      # all logical heads live
+    idx = lo.q_gather_index()
+    live = idx[mask.astype(bool)]
+    assert sorted(live.tolist()) == list(range(n_q))   # exactly once each
+    kvi = lo.kv_gather_index()
+    assert (kvi[: lo.n_kv_stored - lo.n_kv_dead] < kv).all()
+
+
+@pytest.mark.parametrize("arch,tp", [("qwen2_5_14b", 4), ("qwen3_32b", 4),
+                                     ("whisper_large_v3", 4),
+                                     ("recurrentgemma_9b", 4),
+                                     ("arctic_480b", 2)])
+def test_forward_equivalence_across_tp(arch, tp):
+    cfg = get_smoke_config(arch)
+    lo1 = M.make_layout(cfg, 1)
+    loN = M.make_layout(cfg, tp)
+    p1 = pspec.init_params(M.param_specs(cfg, lo1), jax.random.PRNGKey(0))
+    pN = R.from_logical(p1, cfg, loN)
+    # stored shapes match the tp-layout specs
+    sN = M.param_specs(cfg, loN)
+    for a, s in zip(jax.tree.leaves(pN),
+                    jax.tree.leaves(sN, is_leaf=pspec.is_spec)):
+        assert tuple(a.shape) == tuple(s.shape)
+    rng = np.random.default_rng(2)
+    B, S = 2, 32
+    if cfg.family == "encdec":
+        batch = {"enc_embeds": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32),
+                 "dec_inputs": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 8)), jnp.int32)}
+    else:
+        batch = {"inputs": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    f1, _, _ = M.forward(p1, batch, cfg, lo1)
+    fN, _, _ = M.forward(pN, batch, cfg, loN)
+    V = cfg.vocab_size
+    err = float(jnp.max(jnp.abs(f1[..., :V] - fN[..., :V])))
+    assert err < 1e-4, (arch, err)
+    # roundtrip is exact
+    back = R.to_logical(pN, cfg, loN)
+    rt = max(float(jnp.max(jnp.abs(a - b)))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(back)))
+    assert rt == 0.0

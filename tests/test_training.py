@@ -1,0 +1,109 @@
+"""Optimizer + training-step invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import pspec
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.training import optimizer as O
+from repro.training import step as TS
+
+
+def test_adamw_converges_quadratic():
+    oc = O.OptConfig(peak_lr=0.1, warmup_steps=0, total_steps=200,
+                     weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = O.init_opt_state(params)
+    target = jnp.array([1.0, 2.0])
+    loss_fn = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(200):
+        g = jax.grad(loss_fn)(params)
+        params, opt, _ = O.adamw_update(params, g, opt, oc)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = O.clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 20.0) < 1e-5
+    assert abs(float(O.global_norm(clipped)) - 1.0) < 1e-5
+    g2 = {"a": jnp.full((4,), 0.01)}
+    same, _ = O.clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.01, rtol=1e-6)
+
+
+def test_lr_schedule_shape():
+    oc = O.OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                     min_lr_frac=0.1)
+    lrs = [float(O.lr_at(jnp.asarray(s), oc)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6            # warmup rises
+    assert max(lrs) <= 1.0 + 1e-6
+    assert lrs[-1] >= 0.1 - 1e-6                    # floor respected
+    assert lrs[20] > lrs[80]                        # cosine decays
+
+
+def test_grad_accum_equivalence():
+    """accum=2 must match accum=1 on the same global batch (clip disabled).
+    f32 compute isolates the algorithm from bf16 reduction-order noise."""
+    cfg = get_smoke_config("qwen3_32b").replace(grad_accum=1,
+                                                compute_dtype="float32")
+    layout = M.make_layout(cfg, 1)
+    oc = O.OptConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10,
+                     clip_norm=1e9, weight_decay=0.0)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 33)))
+    batch = {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
+    s0 = TS.init_state(cfg, layout, jax.random.PRNGKey(0))
+
+    s1, m1 = TS.make_train_step(cfg, layout, opt=oc)(s0, batch)
+    cfg2 = cfg.replace(grad_accum=2)
+    s0b = TS.init_state(cfg2, layout, jax.random.PRNGKey(0))
+    s2, m2 = TS.make_train_step(cfg2, layout, opt=oc)(s0b, batch)
+    # microbatch-mean ~ full-batch mean for equal micro sizes; bf16 forward
+    # + AdamW's rsqrt(v) amplify reduction-order noise, hence loose rtol
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-3
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=2e-4)
+
+
+def test_flash_impl_matches_chunked_train():
+    """attention_impl=flash and =chunked give the same loss and grads."""
+    cfg_c = get_smoke_config("qwen3_32b").replace(attention_impl="chunked",
+                                                  compute_dtype="float32")
+    cfg_f = cfg_c.replace(attention_impl="flash")
+    layout = M.make_layout(cfg_c, 1)
+    params = pspec.init_params(M.param_specs(cfg_c, layout), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg_c.vocab_size, (2, 49)))
+    batch = {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
+    lc, _ = M.loss_fn(params, batch, cfg_c, layout)
+    lf, _ = M.loss_fn(params, batch, cfg_f, layout)
+    assert abs(float(lc) - float(lf)) < 1e-3
+    gc = jax.grad(lambda p: M.loss_fn(p, batch, cfg_c, layout)[0])(params)
+    gf = jax.grad(lambda p: M.loss_fn(p, batch, cfg_f, layout)[0])(params)
+    for a, b in zip(jax.tree.leaves(gc), jax.tree.leaves(gf)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=5e-4)
+
+
+def test_scan_group_matches_flat_scan():
+    """sqrt-remat grouped scan computes the same loss/grads as flat scan."""
+    cfg_flat = get_smoke_config("qwen3_32b").replace(n_layers=4, scan_group=0)
+    cfg_grp = cfg_flat.replace(scan_group=2)
+    layout = M.make_layout(cfg_flat, 1)
+    params = pspec.init_params(M.param_specs(cfg_flat, layout),
+                               jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg_flat.vocab_size, (2, 33)))
+    batch = {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
+    lf, _ = M.loss_fn(params, batch, cfg_flat, layout)
+    lg, _ = M.loss_fn(params, batch, cfg_grp, layout)
+    assert abs(float(lf) - float(lg)) < 1e-5
+    gf = jax.grad(lambda p: M.loss_fn(p, batch, cfg_flat, layout)[0])(params)
+    gg = jax.grad(lambda p: M.loss_fn(p, batch, cfg_grp, layout)[0])(params)
+    for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
