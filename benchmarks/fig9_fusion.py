@@ -1,0 +1,105 @@
+"""Fig. 9 (ours): temporal-fusion sweep — HBM traffic amortised over T steps.
+
+For T in {1, 2, 4, 8} the v4 `fused` kernel advances T explicit-Euler steps
+per HBM pass; the sweep reports, per step:
+
+  * modelled HBM bytes (fused vs the per-step `dataflow` baseline),
+  * arithmetic intensity with the fusion factor (core.roofline),
+  * roofline time and compute share on the v5e constants,
+  * interpret-mode wallclock + max |err| vs the multi-step f64 oracle on a
+    reduced grid (correctness pinned where we cannot wall-clock the TPU).
+
+Emits the usual CSV rows AND writes ``BENCH_fusion.json`` next to the CWD
+(CI uploads it as an artifact). ``run(smoke=True)`` shrinks the measured
+grid for the CI smoke invocation.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import comp_s, emit, mem_s, wallclock_us
+from repro.core import roofline as R
+from repro.kernels.advection.advection import (advect_fused,
+                                               fused_register_bytes,
+                                               hbm_bytes_model)
+from repro.kernels.advection.ref import (default_params, flops_per_cell,
+                                         pw_multistep_ref_f64)
+from repro.stencil.advection import stratus_fields
+
+# modelled at the paper's Fig. 3 grid; measured on a reduced grid (interpret)
+X, Y, Z = 512, 512, 64
+ITEM = 4  # f32
+T_SWEEP = (1, 2, 4, 8)
+Y_TILE = 128
+
+
+def run(smoke: bool = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    cells = X * Y * Z
+    fpc = flops_per_cell()
+    flops_step = cells * fpc
+    rows = []
+    base_step_b = hbm_bytes_model(X, Y, Z, ITEM, "dataflow")  # one step, v2
+    for T in T_SWEEP:
+        fused_b = hbm_bytes_model(X, Y, Z, ITEM, "fused", T=T, y_tile=Y_TILE)
+        per_step_b = fused_b / T
+        ai = R.stencil_arithmetic_intensity(fpc, per_step_b / cells)
+        t_mem = mem_s(per_step_b)
+        t_cmp = comp_s(flops_step)
+        t_roof = max(t_mem, t_cmp)
+        reg_b = fused_register_bytes(T, Y, Z, ITEM, y_tile=Y_TILE)
+        emit(f"fig9.fused_T{T}", t_roof * 1e6,
+             f"bytes_per_step={per_step_b:.3e};amortisation="
+             f"{base_step_b / per_step_b:.2f}x;AI={ai:.2f};"
+             f"compute_share={t_cmp / t_roof * 100:.1f}%;vmem_reg_B={reg_b}")
+        rows.append({
+            "T": T,
+            "grid": [X, Y, Z],
+            "y_tile": Y_TILE,
+            "bytes_per_step_modelled": per_step_b,
+            "bytes_per_pass_modelled": fused_b,
+            "baseline_dataflow_bytes_per_step": base_step_b,
+            "amortisation_x": base_step_b / per_step_b,
+            "arithmetic_intensity": ai,
+            "roofline_us_per_step": t_roof * 1e6,
+            "vmem_register_bytes": reg_b,
+        })
+
+    # measured (interpret-mode) correctness + wallclock on a reduced grid
+    Xr, Yr, Zr = (5, 16, 16) if smoke else (8, 32, 32)
+    u, v, w = stratus_fields(Xr, Yr, Zr)
+    p = default_params(Zr)
+    dt = 0.01
+    for T, row in zip(T_SWEEP, rows):
+        out = advect_fused(u, v, w, p, T=T, dt=dt)
+        oracle = pw_multistep_ref_f64(u, v, w, p, T, dt)
+        err = max(float(np.max(np.abs(np.asarray(a, np.float64) - b)))
+                  for a, b in zip(out, oracle))
+        us = wallclock_us(
+            lambda a, b, c: advect_fused(a, b, c, p, T=T, dt=dt), u, v, w,
+            iters=1 if smoke else 3)
+        row.update(reduced_grid=[Xr, Yr, Zr],
+                   interpret_us_per_pass=us, max_err_vs_f64_oracle=err)
+        emit(f"fig9.fused_T{T}_interpret", us,
+             f"grid={Xr}x{Yr}x{Zr};err_vs_f64={err:.2e}")
+        assert err < 1e-4, (T, err)
+
+    ridge_T = R.stencil_ridge_T(fpc, base_step_b / cells)
+    emit("fig9.ridge_T", 0.0,
+         f"T_to_compute_bound={ridge_T};v5e_ridge="
+         f"{R.PEAK_FLOPS / R.HBM_BW:.0f}flop_per_byte")
+    payload = {"rows": rows, "ridge_T": ridge_T,
+               "flops_per_cell": fpc,
+               "hw": {"peak_flops": R.PEAK_FLOPS, "hbm_bw": R.HBM_BW}}
+    out_path = os.path.join(os.getcwd(), "BENCH_fusion.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("fig9.json_written", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    run()

@@ -14,6 +14,7 @@ import textwrap
 
 CODE = textwrap.dedent("""
     import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np, functools
     from jax.experimental.shard_map import shard_map
@@ -27,7 +28,8 @@ CODE = textwrap.dedent("""
 
     cfg = get_smoke_config("qwen3-32b")
     layout = M.make_layout(cfg, tp=1)
-    mesh = jax.make_mesh((4,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((4,), ("dp",))
     params = pspec.init_params(M.param_specs(cfg, layout), jax.random.PRNGKey(0))
     opt_state = O.init_opt_state(params)
     residuals = init_residuals(params)
@@ -80,7 +82,9 @@ CODE = textwrap.dedent("""
 
 def main():
     r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       text=True, env={"PYTHONPATH": "src",
+                                       "PATH": "/usr/bin:/bin",
+                                       "JAX_PLATFORMS": "cpu"},
                        timeout=900)
     print(r.stdout.strip() or r.stderr[-2000:])
     assert r.returncode == 0, r.stderr[-2000:]

@@ -17,6 +17,7 @@ at 1 and 2 layers; the delta is the exact per-layer cost and
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -95,6 +96,31 @@ class RooflineTerms:
                  useful_flops_ratio=self.useful_flops_ratio,
                  hw_flops_fraction=self.hw_flops_fraction)
         return d
+
+
+def stencil_arithmetic_intensity(flops_per_cell: float,
+                                 bytes_per_cell_pass: float,
+                                 fusion_T: int = 1) -> float:
+    """FLOP/byte of a (temporally fused) streaming stencil.
+
+    One HBM pass moves `bytes_per_cell_pass` per cell; temporal fusion
+    performs `fusion_T` steps of `flops_per_cell` work on that pass, so AI
+    scales linearly in T — the lever that walks a memory-bound stencil
+    toward the ridge point (paper Fig. 3 endgame; our Fig. 9 sweep).
+    """
+    if fusion_T < 1:
+        raise ValueError(f"fusion_T must be >= 1, got {fusion_T}")
+    return fusion_T * flops_per_cell / bytes_per_cell_pass
+
+
+def stencil_ridge_T(flops_per_cell: float, bytes_per_cell_pass: float,
+                    peak_flops: float = PEAK_FLOPS,
+                    hbm_bw: float = HBM_BW) -> int:
+    """Smallest fusion depth T at which the fused stencil leaves the
+    memory-bound regime (AI >= machine ridge point), rounded up."""
+    ridge = peak_flops / hbm_bw
+    ai1 = stencil_arithmetic_intensity(flops_per_cell, bytes_per_cell_pass)
+    return max(1, math.ceil(ridge / ai1))
 
 
 def differential(cost1: Dict[str, float], cost2: Dict[str, float],

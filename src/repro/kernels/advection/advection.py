@@ -24,8 +24,29 @@ FPGA -> TPU mapping of the paper's stages:
                    data layout (checked), and the benchmark charges misaligned
                    grids the measured lane-efficiency penalty.
 
-Validated with interpret=True against ref.pw_advect_ref (and the f64 oracle)
-across shape/dtype sweeps in tests/test_advection_kernels.py.
+  v4 `fused`     : temporal blocking — T explicit-Euler steps per HBM pass.
+                   The shift register widens to T stacked 3-slice rings, one
+                   per time level: as input slice x=i streams in (level 0),
+                   level k produces its slice x=i-k from level k-1's ring, so
+                   the step-T field leaves the chip the only time it touches
+                   HBM. Per T steps the kernel reads 3·X and writes 3·X
+                   slices where v2/v3 read+write 6·T·X — HBM traffic drops
+                   ~T× (the on-chip-reuse endgame of the paper's Fig. 3
+                   progression; cf. Brown 2020/2021 on amortising MONC
+                   advection transfers across reuse). Register cost is
+                   3 fields × 3T slices; with Y-tiling (halo T per side)
+                   it is VMEM-bounded at (3T, TY+2T, Z) per field for any Y.
+
+`blocked`/`dataflow`/`fused` accept `y_tile`: the domain is processed in
+halo-overlapped y-blocks (halo 1 for the source kernels, halo T for v4's
+T-step update), keeping the VMEM working set fixed regardless of Y — this
+is what unlocks the paper's Fig. 8 grids (Y=1024, 67M/268M cells) on a
+16 MiB-VMEM part. `wide` rejects `y_tile` (tile+halo rows cannot satisfy
+its sublane contract); at large Y use `fused`, which subsumes it.
+
+Validated with interpret=True against ref.pw_advect_ref, the f64 oracle, and
+the multi-step f64 oracle (fused) across shape/dtype/T/y_tile sweeps in
+tests/test_advection_kernels.py and tests/test_advection_fused.py.
 """
 from __future__ import annotations
 
@@ -88,7 +109,11 @@ def _kernel_blocked(t1_ref, t2_ref,
         ref[0] = jnp.where(interior, _pad_edges(s), 0.0).astype(ref.dtype)
 
 
-def advect_blocked(u, v, w, p: AdvectParams, *, interpret: bool = True):
+def advect_blocked(u, v, w, p: AdvectParams, *, interpret: bool = True,
+                   y_tile: int | None = None):
+    if y_tile is not None and y_tile < u.shape[1]:
+        fn = lambda a, b, c: advect_blocked(a, b, c, p, interpret=interpret)
+        return _y_tiled(fn, u, v, w, y_tile=y_tile, halo=1)
     X, Y, Z = u.shape
     slice_spec = lambda off: pl.BlockSpec(
         (1, Y, Z),
@@ -139,7 +164,32 @@ def _kernel_dataflow(t1_ref, t2_ref, u_ref, v_ref, w_ref,
         ref[0] = jnp.where(interior, _pad_edges(s), 0.0).astype(ref.dtype)
 
 
-def advect_dataflow(u, v, w, p: AdvectParams, *, interpret: bool = True):
+def _y_tiled(fn, u, v, w, *, y_tile: int, halo: int):
+    """Run a slice kernel over halo-overlapped y-blocks and restitch.
+
+    Each block sees `halo` extra rows per interior side; the kernel treats
+    block edges as boundaries (zero source), which contaminates at most
+    `halo` rows per side after `halo` update sweeps — exactly the rows we
+    trim. Global-edge blocks get no extra rows, so the true boundary
+    condition lands on the block edge. HBM cost of the overlap is charged in
+    `hbm_bytes_model(..., y_tile=...)`.
+    """
+    Y = u.shape[1]
+    outs = ([], [], [])
+    for y0 in range(0, Y, y_tile):
+        y1 = min(y0 + y_tile, Y)
+        lo, hi = max(y0 - halo, 0), min(y1 + halo, Y)
+        tile = fn(u[:, lo:hi], v[:, lo:hi], w[:, lo:hi])
+        for acc, t in zip(outs, tile):
+            acc.append(t[:, y0 - lo:y0 - lo + (y1 - y0)])
+    return tuple(jnp.concatenate(a, axis=1) for a in outs)
+
+
+def advect_dataflow(u, v, w, p: AdvectParams, *, interpret: bool = True,
+                    y_tile: int | None = None):
+    if y_tile is not None and y_tile < u.shape[1]:
+        fn = lambda a, b, c: advect_dataflow(a, b, c, p, interpret=interpret)
+        return _y_tiled(fn, u, v, w, y_tile=y_tile, halo=1)
     X, Y, Z = u.shape
     in_spec = pl.BlockSpec((1, Y, Z), lambda i: (jnp.minimum(i, X - 1), 0, 0))
     out_spec = pl.BlockSpec((1, Y, Z),
@@ -165,7 +215,8 @@ def advect_dataflow(u, v, w, p: AdvectParams, *, interpret: bool = True):
 # ---------------------------------------------------------------------------
 
 
-def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True):
+def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True,
+                y_tile: int | None = None):
     Z = u.shape[2]
     if Z % 128:
         raise ValueError(
@@ -173,21 +224,148 @@ def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True):
             "use advect_dataflow and accept the lane-efficiency penalty")
     if u.shape[1] % 8:
         raise ValueError(f"Y must be a multiple of 8 (sublane), got {u.shape[1]}")
+    if y_tile is not None and y_tile < u.shape[1]:
+        # halo'd blocks are y_tile+2 (edge: +1) rows — never a sublane
+        # multiple, so tiling would silently break the layout contract this
+        # variant exists to enforce
+        raise ValueError(
+            "advect_wide cannot Y-tile (tile+halo rows break the (8,128) "
+            "sublane contract); use advect_dataflow(y_tile=...) or "
+            "advect_fused")
     return advect_dataflow(u, v, w, p, interpret=interpret)
 
 
-def hbm_bytes_model(X: int, Y: int, Z: int, itemsize: int, variant: str) -> int:
-    """Analytic HBM traffic per advection call (for the Fig. 3 table)."""
+# ---------------------------------------------------------------------------
+# v4: fused — temporal blocking, T Euler steps per HBM pass
+# ---------------------------------------------------------------------------
+
+
+def _kernel_fused(t1_ref, t2_ref, u_ref, v_ref, w_ref,
+                  ou_ref, ov_ref, ow_ref,
+                  ubuf, vbuf, wbuf, *, X, T, dt):
+    """T stacked 3-slice rings: level k holds the step-k fields.
+
+    At grid step i the newly-arrived input slice x=i lands in level 0's ring;
+    level k (k=1..T) then computes its slice x=i-k from level k-1's ring.
+    Level k-1's slice x=j is stored at grid step j+k-1, so for every level
+    the (x-1, x, x+1) operands sit at ring slots ((i+1)%3, (i+2)%3, i%3) and
+    every level writes slot i%3 — the same rotation as v2, T-deep.
+
+    Startup/tail slices (x<0 or x>X-1) are garbage but provably walled off:
+    a level's x=0 / x=X-1 output is a masked copy of its centre operand, and
+    the depth-1 stencil cannot carry values past an unchanging slice.
+    """
+    i = pl.program_id(0)
+    slot = jax.lax.rem(i, 3)
+    m, c = jax.lax.rem(i + 1, 3), jax.lax.rem(i + 2, 3)
+    for buf, ref in ((ubuf, u_ref), (vbuf, v_ref), (wbuf, w_ref)):
+        buf[0, slot] = ref[0]
+    outs = None
+    for k in range(1, T + 1):
+        j = i - k
+        args = [ubuf[k - 1, m], ubuf[k - 1, c], ubuf[k - 1, slot],
+                vbuf[k - 1, m], vbuf[k - 1, c], vbuf[k - 1, slot],
+                wbuf[k - 1, m], wbuf[k - 1, c], wbuf[k - 1, slot]]
+        su, sv, sw = _source_slices(*args, 0.0 + t1_ref[0], t1_ref[1],
+                                    t1_ref[2:], t2_ref[2:])
+        interior = (j >= 1) & (j <= X - 2)
+        new = []
+        for cen, s in ((args[1], su), (args[4], sv), (args[7], sw)):
+            src = jnp.where(interior, _pad_edges(s), 0.0).astype(cen.dtype)
+            new.append(cen + dt * src)
+        if k < T:
+            ubuf[k, slot], vbuf[k, slot], wbuf[k, slot] = new
+        else:
+            outs = new
+    for ref, val in zip((ou_ref, ov_ref, ow_ref), outs):
+        ref[0] = val
+
+
+def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
+                 interpret: bool = True, y_tile: int | None = None):
+    """v4: advance the fields T explicit-Euler steps in ONE HBM pass.
+
+    Returns the advanced `(u, v, w)` (not sources — the step is fused into
+    the kernel). With `y_tile`, each y-block carries a T-deep halo so the
+    register is VMEM-bounded at ``fused_register_bytes`` irrespective of Y.
+    """
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
+    if y_tile is not None and y_tile < u.shape[1]:
+        fn = lambda a, b, c: advect_fused(a, b, c, p, T=T, dt=dt,
+                                          interpret=interpret)
+        return _y_tiled(fn, u, v, w, y_tile=y_tile, halo=T)
+    X, Y, Z = u.shape
+    in_spec = pl.BlockSpec((1, Y, Z), lambda i: (jnp.minimum(i, X - 1), 0, 0))
+    out_spec = pl.BlockSpec((1, Y, Z),
+                            lambda i: (jnp.clip(i - T, 0, X - 1), 0, 0))
+    t1 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc1])
+    t2 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc2])
+    tz_spec = pl.BlockSpec((Z + 2,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((X, Y, Z), u.dtype)] * 3
+    fn = pl.pallas_call(
+        functools.partial(_kernel_fused, X=X, T=T, dt=dt),
+        grid=(X + T,),
+        in_specs=[tz_spec, tz_spec, in_spec, in_spec, in_spec],
+        out_specs=[out_spec] * 3,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((T, 3, Y, Z), u.dtype) for _ in range(3)],
+        interpret=interpret,
+    )
+    return fn(t1, t2, u, v, w)
+
+
+def fused_register_bytes(T: int, y_rows: int, Z: int, itemsize: int = 4,
+                         y_tile: int | None = None) -> int:
+    """VMEM footprint of v4's shift register: 3 fields x 3T slices.
+
+    With Y-tiling each resident slice has ``y_tile + 2T`` rows (tile + halo)
+    no matter how large the grid's Y is — the Fig. 8 scaling contract.
+    """
+    rows = y_rows if y_tile is None else min(y_tile + 2 * T, y_rows)
+    return 3 * (3 * T) * rows * Z * itemsize
+
+
+def _n_y_tiles(Y: int, y_tile: int | None) -> int:
+    if y_tile is None or y_tile >= Y:
+        return 1
+    return -(-Y // y_tile)
+
+
+def hbm_bytes_model(X: int, Y: int, Z: int, itemsize: int, variant: str,
+                    *, T: int = 1, y_tile: int | None = None) -> int:
+    """Analytic HBM traffic per advection call (for the Fig. 3/9 tables).
+
+    `T` is the number of explicit-Euler steps the call advances: the
+    pre-fusion variants pay a full read+write pass per step, while `fused`
+    streams each field in and out ONCE for all T steps (plus the y-halo
+    overlap when tiled) — the ~T× amortisation of Fig. 9.
+    """
     slice_b = Y * Z * itemsize
     lane_eff = 1.0 if Z % 128 == 0 else (Z % 128) / 128.0
+    if variant == "wide" and y_tile is not None and y_tile < Y:
+        # mirror advect_wide: tiling breaks the sublane contract, so there
+        # is no such execution path to model
+        raise ValueError("wide cannot Y-tile; model dataflow or fused")
+    n_ty = _n_y_tiles(Y, y_tile)
+    halo = T if variant == "fused" else 1
+    # interior tile boundaries each re-read `halo` rows from both sides
+    overlap_rows = 2 * halo * (n_ty - 1)
+    tiled_slice_b = (Y + overlap_rows) * Z * itemsize
     if variant == "blocked":
-        reads = 3 * 3 * X * slice_b          # 3 fields x 3 views x X slices
+        reads = T * 3 * 3 * X * tiled_slice_b  # 3 fields x 3 views x X slices
     elif variant in ("dataflow", "wide"):
-        reads = 3 * X * slice_b
+        reads = T * 3 * X * tiled_slice_b
+    elif variant == "fused":
+        reads = 3 * X * tiled_slice_b          # ONE pass for all T steps
     elif variant == "pointwise":
-        reads = 3 * 7 * X * slice_b          # naive per-point gathers (7-point)
+        reads = T * 3 * 7 * X * slice_b        # naive per-point gathers (7-point)
     else:
         raise ValueError(variant)
-    writes = 3 * X * slice_b
+    # each tile's kernel writes its full slab (halo rows included, trimmed
+    # host-side), so the overlap is paid on the write side too — except
+    # pointwise, which has no tiled execution path
+    w_slice_b = slice_b if variant == "pointwise" else tiled_slice_b
+    writes = (1 if variant == "fused" else T) * 3 * X * w_slice_b
     eff = lane_eff if variant != "wide" else 1.0
     return int((reads + writes) / eff)

@@ -2,17 +2,21 @@
 
 `pw_advect(..., variant=...)` selects the Fig. 3 rung; `interpret` toggles
 Pallas interpret mode (CPU validation) vs compiled TPU execution.
+`pw_advect_fused` is the v4 temporal-blocking entry point: it returns the
+*advanced fields* after `T` fused Euler steps, not sources.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
 from repro.kernels.advection import advection as K
 from repro.kernels.advection import ref as REF
 
+# source-computing rungs dispatchable via pw_advect; the v4 `fused` rung
+# advances whole steps instead and has its own entry point, pw_advect_fused
 VARIANTS = {
     "reference": None,
     "blocked": K.advect_blocked,
@@ -21,16 +25,35 @@ VARIANTS = {
 }
 
 
-@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+@functools.partial(jax.jit, static_argnames=("variant", "interpret", "y_tile"))
 def pw_advect(u, v, w, params: REF.AdvectParams, *, variant: str = "dataflow",
-              interpret: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+              interpret: bool = True,
+              y_tile: Optional[int] = None
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Momentum sources via the selected ladder rung (v1-v3 + reference)."""
+    if variant == "fused":
+        raise ValueError("fused advances fields, not sources; "
+                         "use pw_advect_fused")
     if variant == "reference":
         return REF.pw_advect_ref(u, v, w, params)
     fn = VARIANTS[variant]
-    return fn(u, v, w, params, interpret=interpret)
+    return fn(u, v, w, params, interpret=interpret, y_tile=y_tile)
 
 
-def traffic_model(shape, itemsize: int, variant: str) -> int:
+@functools.partial(jax.jit,
+                   static_argnames=("T", "dt", "interpret", "y_tile"))
+def pw_advect_fused(u, v, w, params: REF.AdvectParams, *, T: int = 4,
+                    dt: float = 1.0, interpret: bool = True,
+                    y_tile: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Advance (u, v, w) by T fused Euler steps in one HBM pass (v4)."""
+    return K.advect_fused(u, v, w, params, T=T, dt=dt, interpret=interpret,
+                          y_tile=y_tile)
+
+
+def traffic_model(shape, itemsize: int, variant: str, *, T: int = 1,
+                  y_tile: Optional[int] = None) -> int:
     X, Y, Z = shape
     return K.hbm_bytes_model(X, Y, Z, itemsize,
-                             "pointwise" if variant == "reference" else variant)
+                             "pointwise" if variant == "reference" else variant,
+                             T=T, y_tile=y_tile)

@@ -73,13 +73,44 @@ def pw_advect_ref(u, v, w, p: AdvectParams):
     return tuple(out)
 
 
-def pw_advect_ref_f64(u, v, w, p: AdvectParams):
-    """f64 numpy oracle (the paper's double-precision ground truth)."""
-    u64, v64, w64 = (np.asarray(t, np.float64) for t in (u, v, w))
-    p64 = AdvectParams(*(jnp.asarray(np.asarray(t, np.float64)) for t in p))
+def _with_f64(fn, fields, p: AdvectParams):
+    """Run ``fn(u64, v64, w64, p64)`` on genuinely-f64 jnp inputs.
+
+    The jnp.asarray conversions must happen INSIDE the enable_x64 context —
+    outside it they silently downcast f64 to f32 and the "oracle" stops
+    being one.
+    """
+    f_np = [np.asarray(t, np.float64) for t in fields]
+    p_np = [np.asarray(t, np.float64) for t in p]
     with jax.experimental.enable_x64():
-        return pw_advect_ref(jnp.asarray(u64), jnp.asarray(v64),
-                             jnp.asarray(w64), p64)
+        f64 = [jnp.asarray(t) for t in f_np]
+        p64 = AdvectParams(*(jnp.asarray(t) for t in p_np))
+        return fn(*f64, p64)
+
+
+def pw_advect_ref_f64(u, v, w, p: AdvectParams):
+    """f64 oracle (the paper's double-precision ground truth)."""
+    return _with_f64(pw_advect_ref, (u, v, w), p)
+
+
+def pw_step_ref(u, v, w, p: AdvectParams, dt: float = 1.0):
+    """One explicit-Euler advection step: f <- f + dt * source(f)."""
+    su, sv, sw = pw_advect_ref(u, v, w, p)
+    return u + dt * su, v + dt * sv, w + dt * sw
+
+
+def pw_multistep_ref_f64(u, v, w, p: AdvectParams, T: int, dt: float = 1.0):
+    """T explicit-Euler steps in f64 — the oracle for the fused (v4) kernel.
+
+    Every intermediate field is held in double precision, so this bounds the
+    accumulated f32 error of ``advect_fused(T=...)`` from above.
+    """
+    def run(u64, v64, w64, p64):
+        for _ in range(T):
+            u64, v64, w64 = pw_step_ref(u64, v64, w64, p64, dt)
+        return tuple(np.asarray(t, np.float64) for t in (u64, v64, w64))
+
+    return _with_f64(run, (u, v, w), p)
 
 
 def flops_per_cell() -> int:

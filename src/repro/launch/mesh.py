@@ -8,20 +8,32 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """`jax.make_mesh` across jax versions.
+
+    `axis_types` (and `jax.sharding.AxisType`) only exist on newer jax; the
+    pinned 0.4.x simply has no explicit/auto axis distinction, so omitting
+    the kwarg there is semantically identical to Auto everywhere.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(*, model: int = 1):
     """Whatever this host offers (smoke tests / examples on CPU)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def tp_degree(mesh) -> int:

@@ -9,7 +9,7 @@ test-case initialisation mirrors the paper's standard MONC case sizes
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ import numpy as np
 from repro.kernels.advection import advection as K
 from repro.kernels.advection import ref as REF
 
-VARIANTS = ("reference", "blocked", "dataflow", "wide")
+VARIANTS = ("reference", "blocked", "dataflow", "wide", "fused")
 
 # the paper's experiment grid sizes (Fig. 8), (x, y, z)
 PAPER_GRIDS = {
@@ -45,54 +45,112 @@ def stratus_fields(X: int, Y: int, Z: int, seed: int = 0,
     return tuple(jnp.asarray(f, dtype) for f in (u, v, w))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class AdvectionDomain:
+    """Frozen: the jitted kernel is memoized on first use, so mutable config
+    would silently run a stale kernel. Use dataclasses.replace to vary."""
     X: int
     Y: int
     Z: int
     variant: str = "dataflow"
     interpret: bool = True
     dtype: str = "float32"
+    fuse_T: int = 4                   # fused (v4): Euler steps per HBM pass
+    y_tile: Optional[int] = None      # halo-overlapped y-blocks (VMEM bound)
+    dt: float = 1.0
 
     def __post_init__(self):
-        self.params = REF.default_params(self.Z, dtype=jnp.dtype(self.dtype))
+        object.__setattr__(self, "params",
+                           REF.default_params(self.Z,
+                                              dtype=jnp.dtype(self.dtype)))
+        object.__setattr__(self, "_kernel", None)
 
     def kernel(self) -> Callable:
+        """Jitted kernel for the configured variant, built once: jit caches
+        by function identity, so rebuilding per call would retrace (and
+        re-lower the Pallas kernel) on every step."""
+        if self._kernel is not None:
+            return self._kernel
         p = self.params
         v = self.variant
         if v == "reference":
             fn = lambda u, vv, w: REF.pw_advect_ref(u, vv, w, p)
         elif v == "blocked":
             fn = lambda u, vv, w: K.advect_blocked(u, vv, w, p,
-                                                   interpret=self.interpret)
+                                                   interpret=self.interpret,
+                                                   y_tile=self.y_tile)
         elif v == "dataflow":
             fn = lambda u, vv, w: K.advect_dataflow(u, vv, w, p,
-                                                    interpret=self.interpret)
+                                                    interpret=self.interpret,
+                                                    y_tile=self.y_tile)
         elif v == "wide":
             fn = lambda u, vv, w: K.advect_wide(u, vv, w, p,
-                                                interpret=self.interpret)
+                                                interpret=self.interpret,
+                                                y_tile=self.y_tile)
+        elif v == "fused":
+            fn = lambda u, vv, w: K.advect_fused(u, vv, w, p, T=self.fuse_T,
+                                                 dt=self.dt,
+                                                 interpret=self.interpret,
+                                                 y_tile=self.y_tile)
         else:
             raise ValueError(v)
-        return jax.jit(fn)
+        object.__setattr__(self, "_kernel", jax.jit(fn))
+        return self._kernel
 
     def init(self, seed: int = 0):
         return stratus_fields(self.X, self.Y, self.Z, seed,
                               jnp.dtype(self.dtype))
 
     def sources(self, u, v, w):
+        if self.variant == "fused":
+            raise ValueError("fused advances fields in-kernel; use step()")
         return self.kernel()(u, v, w)
 
-    def step(self, u, v, w, dt: float = 1.0):
-        """One explicit-Euler advection update (the model timestep's kernel)."""
+    def step(self, u, v, w, dt: Optional[float] = None):
+        """One advection update. For `fused` this is the fast path: the
+        kernel advances `fuse_T` Euler substeps of size `self.dt` in a single
+        HBM pass (dt override is rejected there — it is baked into the
+        kernel)."""
+        if self.variant == "fused":
+            if dt is not None and dt != self.dt:
+                raise ValueError("fused bakes dt into the kernel; set "
+                                 "AdvectionDomain(dt=...) instead")
+            return self.kernel()(u, v, w)
+        dt = self.dt if dt is None else dt
         su, sv, sw = self.sources(u, v, w)
         return u + dt * su, v + dt * sv, w + dt * sw
 
+    def substeps_per_step(self) -> int:
+        """Euler substeps one step() call advances (T for fused, else 1)."""
+        return self.fuse_T if self.variant == "fused" else 1
+
+    def advance(self, u, v, w, n_substeps: int):
+        """Run `n_substeps` Euler substeps, using the fused fast path in
+        chunks of `fuse_T` when the variant supports it."""
+        per = self.substeps_per_step()
+        if n_substeps % per:
+            raise ValueError(f"n_substeps={n_substeps} not a multiple of "
+                             f"fuse_T={per}")
+        for _ in range(n_substeps // per):
+            u, v, w = self.step(u, v, w)
+        return u, v, w
+
     def flops_per_step(self) -> int:
         cells = (self.X - 2) * (self.Y - 2) * (self.Z - 2)
-        return cells * REF.flops_per_cell()
+        return cells * REF.flops_per_cell() * self.substeps_per_step()
 
     def hbm_bytes_per_step(self) -> int:
+        """Modelled HBM bytes per step() call (fused: per T-step pass)."""
         return K.hbm_bytes_model(self.X, self.Y, self.Z,
                                  jnp.dtype(self.dtype).itemsize,
                                  self.variant if self.variant != "reference"
-                                 else "pointwise")
+                                 else "pointwise",
+                                 T=self.substeps_per_step(),
+                                 y_tile=self.y_tile)
+
+    def vmem_register_bytes(self) -> int:
+        """VMEM shift-register footprint of the current configuration."""
+        depth = self.fuse_T if self.variant == "fused" else 1
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return K.fused_register_bytes(depth, self.Y, self.Z, itemsize,
+                                      y_tile=self.y_tile)

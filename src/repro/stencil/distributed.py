@@ -7,6 +7,12 @@ The data dependence is structured so XLA can schedule the collective-permute
 concurrently with the interior stencil (interior result does not consume the
 permuted edges), then the two boundary y-rows are patched.
 
+Temporal fusion (the v4 kernel) makes the halo depth T-dependent:
+`make_distributed_step(..., T=...)` exchanges T rows per side ONCE, then
+advances T Euler substeps on the halo'd slab before trimming — amortising
+both the HBM pass *and* the collective over T steps (each step contaminates
+one more halo row, so depth-T halos are exactly consumed after T substeps).
+
 Runs under `shard_map` over the `data` axis of any mesh (smoke-tested on the
 host mesh; the production mesh shards y 16-way per pod).
 """
@@ -20,19 +26,21 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.kernels.advection.ref import AdvectParams, pw_advect_ref
+from repro.kernels.advection.ref import (AdvectParams, pw_advect_ref,
+                                         pw_step_ref)
 
 
-def _exchange_halos(f, axis: str):
+def _exchange_halos(f, axis: str, n: int, depth: int = 1):
     """Send my edge y-rows to neighbours; receive theirs. Returns (lo, hi).
 
-    lo = neighbour's last row (goes below my slab), hi = neighbour's first.
+    lo = neighbour's last `depth` rows (go below my slab), hi = their first.
+    `n` is the static axis size (jax.lax.axis_size is not available on the
+    pinned jax, and ppermute's pair table must be static anyway).
     """
-    n = jax.lax.axis_size(axis)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
-    hi_from_prev = jax.lax.ppermute(f[:, -1:, :], axis, fwd)   # my top -> next
-    lo_from_next = jax.lax.ppermute(f[:, :1, :], axis, bwd)    # my bottom -> prev
+    hi_from_prev = jax.lax.ppermute(f[:, -depth:, :], axis, fwd)  # top -> next
+    lo_from_next = jax.lax.ppermute(f[:, :depth, :], axis, bwd)   # bottom -> prev
     return hi_from_prev, lo_from_next
 
 
@@ -40,15 +48,17 @@ def make_distributed_advect(mesh: Mesh, params: AdvectParams,
                             axis: str = "data"):
     """Returns jit(advect) over fields sharded (None, axis, None) in y."""
 
+    n_shards = mesh.shape[axis]
+
     def local(u, v, w):
         """Per-shard: exchange halos, compute interior meanwhile, patch edges."""
         # 1) launch halo exchange (6 edge planes, tiny vs the slab)
-        halos = [_exchange_halos(f, axis) for f in (u, v, w)]
+        halos = [_exchange_halos(f, axis, n_shards) for f in (u, v, w)]
         # 2) interior compute — no dependence on `halos`, so XLA overlaps the
         #    collective-permutes with this stencil (the §IV overlap on ICI)
         interior = pw_advect_ref(u, v, w, params)
         # 3) boundary patch: rebuild the two edge y-bands with halo rows
-        n = jax.lax.axis_size(axis)
+        n = n_shards
         idx = jax.lax.axis_index(axis)
 
         def with_halo(f, h):
@@ -78,6 +88,65 @@ def make_distributed_advect(mesh: Mesh, params: AdvectParams,
     return jax.jit(fn)
 
 
+def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
+                          axis: str = "data", T: int = 1, dt: float = 1.0):
+    """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
+
+    The wrapped ppermute is periodic, so the first/last shard's outer halo
+    rows carry wrapped (wrong) data — but every substep masks the source to
+    zero outside the *global* interior, and a depth-1 stencil cannot carry
+    values past an unchanging row: the global-boundary row is a wall, the
+    wrapped rows never contaminate the trimmed result.
+
+    Wire cost: T rows per neighbour per exchange, so bytes-on-wire per
+    substep are flat in T while the exchange *count* falls as 1/T —
+    latency-bound small halos amortise T×.
+    """
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
+
+    n_shards = mesh.shape[axis]
+
+    def local(u, v, w):
+        n = n_shards
+        idx = jax.lax.axis_index(axis)
+        if T > u.shape[1]:
+            raise ValueError(
+                f"halo depth T={T} exceeds the local shard width "
+                f"{u.shape[1]} (single-hop exchange); lower T or use "
+                "fewer shards")
+        halos = [_exchange_halos(f, axis, n, depth=T) for f in (u, v, w)]
+
+        def slab(f, h):
+            prev_hi, next_lo = h
+            return jnp.concatenate([prev_hi, f, next_lo], axis=1)
+
+        us, vs, ws = (slab(f, h) for f, h in zip((u, v, w), halos))
+        Yl = u.shape[1]
+        gy = idx * Yl - T + jnp.arange(Yl + 2 * T)   # global row per slab row
+        interior_y = (gy >= 1) & (gy <= n * Yl - 2)
+        m = interior_y[None, :, None]
+        for _ in range(T):
+            su, sv, sw = pw_advect_ref(us, vs, ws, params)
+            us = us + dt * jnp.where(m, su, 0.0)
+            vs = vs + dt * jnp.where(m, sv, 0.0)
+            ws = ws + dt * jnp.where(m, sw, 0.0)
+        return tuple(f[:, T:T + Yl, :] for f in (us, vs, ws))
+
+    spec = P(None, axis, None)
+    fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                   out_specs=(spec, spec, spec))
+    return jax.jit(fn)
+
+
 def reference_global(u, v, w, params: AdvectParams):
     """Single-device oracle for the distributed version."""
     return pw_advect_ref(u, v, w, params)
+
+
+def reference_global_step(u, v, w, params: AdvectParams, *, T: int = 1,
+                          dt: float = 1.0):
+    """Single-device T-substep oracle for `make_distributed_step`."""
+    for _ in range(T):
+        u, v, w = pw_step_ref(u, v, w, params, dt)
+    return u, v, w

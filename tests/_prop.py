@@ -1,0 +1,91 @@
+"""Property-testing shim: hypothesis when available, fixed-seed sweep otherwise.
+
+`hypothesis` is an optional dependency. When it is installed, this module
+re-exports the real ``given`` / ``settings`` / ``st`` unchanged, so property
+tests keep their full shrinking/fuzzing behaviour. On a clean environment the
+fallback degrades each ``@given(...)`` into a deterministic
+``pytest.mark.parametrize`` sweep: a fixed number of examples, each drawn from
+a per-example fixed-seed ``numpy`` RNG, so the suite still exercises the same
+invariants (reproducibly) without the dependency.
+
+Usage in test modules (instead of importing hypothesis directly)::
+
+    from _prop import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+    import pytest as _pytest
+
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        """A draw function over a seeded numpy Generator."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: "_np.random.Generator"):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        """No-op stand-in for hypothesis.settings (example budget is fixed)."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Degrade @given to a fixed-seed parametrize over drawn examples."""
+
+        def deco(fn):
+            names = sorted(strategies)
+            cases = []
+            for ex in range(_FALLBACK_EXAMPLES):
+                rng = _np.random.default_rng(ex)
+                drawn = tuple(strategies[k].example(rng) for k in names)
+                cases.append(drawn[0] if len(names) == 1 else drawn)
+            ids = [f"ex{i}" for i in range(_FALLBACK_EXAMPLES)]
+            return _pytest.mark.parametrize(",".join(names), cases, ids=ids)(fn)
+
+        return deco

@@ -1,0 +1,160 @@
+"""v4 `fused` kernel: interpret-mode equivalence vs the multi-step f64
+oracle, Y-tiling equivalence (including non-multiple tile sizes), and the
+VMEM-budget contract of the Y-tiled shift register."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.advection.advection import (advect_dataflow, advect_fused,
+                                               fused_register_bytes,
+                                               hbm_bytes_model)
+from repro.kernels.advection.ref import (default_params, pw_multistep_ref_f64,
+                                         pw_step_ref)
+
+DT = 0.01
+
+
+def fields(shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return tuple(jnp.asarray(rng.normal(size=shape), dtype) for _ in range(3))
+
+
+def max_err(out, oracle):
+    return max(float(np.max(np.abs(np.asarray(a, np.float64) - b)))
+               for a, b in zip(out, oracle))
+
+
+@pytest.mark.parametrize("T", [1, 2, 4])
+def test_fused_matches_multistep_f64_oracle(T):
+    shape = (6, 10, 12)
+    u, v, w = fields(shape)
+    p = default_params(shape[2])
+    oracle = pw_multistep_ref_f64(u, v, w, p, T, DT)
+    out = advect_fused(u, v, w, p, T=T, dt=DT)
+    assert max_err(out, oracle) < 1e-4, T
+
+
+def test_fused_t1_equals_one_euler_step():
+    """T=1 degenerates to dataflow + Euler update (same f32 arithmetic)."""
+    shape = (5, 8, 8)
+    u, v, w = fields(shape)
+    p = default_params(shape[2])
+    su, sv, sw = advect_dataflow(u, v, w, p)
+    expect = (u + DT * su, v + DT * sv, w + DT * sw)
+    out = advect_fused(u, v, w, p, T=1, dt=DT)
+    assert max_err(out, [np.asarray(e, np.float64) for e in expect]) < 1e-6
+
+
+def test_fused_ytiled_matches_untiled_nonmultiple_tiles():
+    """y_tile that does NOT divide Y (17 = 3*5 + 2) and tiles smaller than
+    the halo still restitch to the exact untiled result."""
+    shape = (5, 17, 12)
+    T = 2
+    u, v, w = fields(shape, seed=3)
+    p = default_params(shape[2])
+    full = advect_fused(u, v, w, p, T=T, dt=DT)
+    for y_tile in (5, 7, 64):
+        tiled = advect_fused(u, v, w, p, T=T, dt=DT, y_tile=y_tile)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(full, tiled))
+        assert err == 0.0, (y_tile, err)
+
+
+def test_fused_boundary_cells_frozen():
+    """Zero-source boundaries: edge cells keep their initial values for all
+    T substeps (the oracle's contract, streamed through the ring)."""
+    shape = (6, 9, 10)
+    u, v, w = fields(shape, seed=1)
+    out = advect_fused(u, v, w, default_params(shape[2]), T=3, dt=DT)
+    for f0, fT in zip((u, v, w), out):
+        np.testing.assert_array_equal(np.asarray(fT[0]), np.asarray(f0[0]))
+        np.testing.assert_array_equal(np.asarray(fT[-1]), np.asarray(f0[-1]))
+        np.testing.assert_array_equal(np.asarray(fT[:, 0]),
+                                      np.asarray(f0[:, 0]))
+        np.testing.assert_array_equal(np.asarray(fT[:, :, -1]),
+                                      np.asarray(f0[:, :, -1]))
+
+
+def test_fused_rejects_bad_T():
+    u, v, w = fields((4, 8, 8))
+    with pytest.raises(ValueError):
+        advect_fused(u, v, w, default_params(8), T=0)
+
+
+def test_ops_wrapper_fused():
+    from repro.kernels.advection.ops import pw_advect, pw_advect_fused
+    shape = (5, 8, 8)
+    u, v, w = fields(shape, seed=2)
+    p = default_params(shape[2])
+    oracle = pw_multistep_ref_f64(u, v, w, p, 2, DT)
+    out = pw_advect_fused(u, v, w, p, T=2, dt=DT)
+    assert max_err(out, oracle) < 1e-4
+    with pytest.raises(ValueError):
+        pw_advect(u, v, w, p, variant="fused")
+
+
+def test_domain_fused_step_and_advance():
+    from repro.stencil.advection import AdvectionDomain
+    dom = AdvectionDomain(5, 8, 8, variant="fused", fuse_T=2, dt=DT)
+    u, v, w = dom.init()
+    p = dom.params
+    out = dom.step(u, v, w)
+    ru, rv, rw = u, v, w
+    for _ in range(2):
+        ru, rv, rw = pw_step_ref(ru, rv, rw, p, DT)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(out, (ru, rv, rw)))
+    assert err < 1e-4
+    assert dom.substeps_per_step() == 2
+    out4 = dom.advance(u, v, w, 4)
+    assert out4[0].shape == u.shape
+    with pytest.raises(ValueError):
+        dom.advance(u, v, w, 3)   # not a multiple of fuse_T
+    with pytest.raises(ValueError):
+        dom.step(u, v, w, dt=0.5)  # fused bakes dt into the kernel
+    with pytest.raises(ValueError):
+        dom.sources(u, v, w)
+
+
+# --- VMEM budget: the Y-tiled register is bounded irrespective of Y --------
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half a v5e's 16 MiB VMEM, for head-
+                                      # room against double-buffered slices
+
+
+@pytest.mark.parametrize("Y", [1024, 4096, 65536])
+@pytest.mark.parametrize("T", [1, 2, 4, 8])
+def test_ytiled_register_stays_under_vmem_budget(Y, T):
+    """Fig. 8 contract: at fixed (y_tile, Z) the register size is constant
+    in Y — the paper's 67M/268M grids fit the same VMEM as the 1M grid."""
+    Z, item, y_tile = 64, 4, 128
+    b = fused_register_bytes(T, Y, Z, item, y_tile=y_tile)
+    assert b == fused_register_bytes(T, 1024, Z, item, y_tile=y_tile)
+    assert b <= VMEM_BUDGET_BYTES, (Y, T, b)
+    # untiled at Y=65536 would blow the budget for T>=2 — tiling is load-
+    # bearing, not decorative
+    if T >= 2:
+        assert fused_register_bytes(T, 65536, Z, item) > VMEM_BUDGET_BYTES
+
+
+def test_domain_vmem_accounting():
+    from repro.stencil.advection import AdvectionDomain
+    dom = AdvectionDomain(16, 65536, 64, variant="fused", fuse_T=4,
+                          y_tile=128)
+    assert dom.vmem_register_bytes() <= VMEM_BUDGET_BYTES
+    assert dom.hbm_bytes_per_step() < hbm_bytes_model(
+        16, 65536, 64, 4, "dataflow", T=4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shape,T,y_tile", [
+    ((12, 32, 128), 4, 8),
+    ((8, 24, 40), 8, 6),
+    ((5, 8, 256), 2, None),
+])
+def test_fused_large_shapes_slow(shape, T, y_tile):
+    u, v, w = fields(shape, seed=4)
+    p = default_params(shape[2])
+    oracle = pw_multistep_ref_f64(u, v, w, p, T, DT)
+    out = advect_fused(u, v, w, p, T=T, dt=DT, y_tile=y_tile)
+    assert max_err(out, oracle) < 1e-4, (shape, T, y_tile)

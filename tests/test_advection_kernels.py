@@ -4,14 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.kernels.advection.advection import (advect_blocked, advect_dataflow,
                                                advect_wide, hbm_bytes_model)
 from repro.kernels.advection.ref import (AdvectParams, default_params,
                                          flops_per_cell, pw_advect_ref)
 
-SHAPES = [(4, 8, 8), (8, 16, 16), (6, 24, 40), (12, 32, 128), (5, 8, 256)]
+SHAPES = [(4, 8, 8), (8, 16, 16), (6, 24, 40),
+          pytest.param((12, 32, 128), marks=pytest.mark.slow),
+          pytest.param((5, 8, 256), marks=pytest.mark.slow)]
 VARIANTS = [("blocked", advect_blocked), ("dataflow", advect_dataflow)]
 
 
@@ -50,6 +52,9 @@ def test_wide_requires_alignment():
     u, v, w = fields((4, 16, 128), jnp.float32)
     out = advect_wide(u, v, w, default_params(128))
     assert out[0].shape == (4, 16, 128)
+    # tiled blocks (tile+halo rows) can never satisfy the sublane contract
+    with pytest.raises(ValueError):
+        advect_wide(u, v, w, default_params(128), y_tile=8)
 
 
 def test_f64_oracle_bounds_f32_error():
@@ -137,6 +142,20 @@ def test_traffic_model_ladder():
     assert b_point > b_block > b_flow
     # wide at z=128 moves fewer bytes per cell than dataflow at z=64
     assert b_wide / (X * Y * 128) < b_flow / (X * Y * 64)
+
+
+@pytest.mark.parametrize("name,fn", VARIANTS)
+def test_source_kernels_ytiled_match_untiled(name, fn):
+    """Y-tiling (halo-1 blocks) restitches to the exact untiled sources,
+    including a tile size that does not divide Y."""
+    shape = (5, 14, 16)
+    u, v, w = fields(shape, jnp.float32, seed=7)
+    p = default_params(shape[2])
+    full = fn(u, v, w, p)
+    for y_tile in (4, 5):
+        tiled = fn(u, v, w, p, y_tile=y_tile)
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(full, tiled))
+        assert err == 0.0, (name, y_tile, err)
 
 
 def test_flops_per_cell_measured():

@@ -1,0 +1,159 @@
+"""Analytic-model coverage: `hbm_bytes_model` across all variants x Z
+alignment x fusion T, `pipeline_model` invariants, and the fusion-aware
+roofline arithmetic-intensity model."""
+import pytest
+
+from _prop import given, settings, st
+from repro.core import roofline as R
+from repro.core.dataflow import pipeline_model
+from repro.kernels.advection.advection import (fused_register_bytes,
+                                               hbm_bytes_model)
+
+VARIANTS = ("pointwise", "blocked", "dataflow", "wide", "fused")
+
+
+# --- hbm_bytes_model -------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("Z", [128, 64, 100])   # aligned / pow2-misaligned /
+@pytest.mark.parametrize("T", [1, 2, 4, 8])     # ragged-misaligned
+def test_hbm_bytes_model_positive_and_monotone_in_T(variant, Z, T):
+    X, Y = 64, 128
+    b = hbm_bytes_model(X, Y, Z, 4, variant, T=T)
+    assert b > 0
+    if T > 1:
+        assert b >= hbm_bytes_model(X, Y, Z, 4, variant, T=T - 1)
+
+
+@pytest.mark.parametrize("Z,aligned", [(128, True), (256, True),
+                                       (64, False), (100, False)])
+def test_lane_efficiency_penalty(Z, aligned):
+    """Misaligned Z is charged the lane-efficiency penalty on every variant
+    except `wide` (whose alignment is a checked layout contract)."""
+    X, Y = 32, 64
+    for variant in ("pointwise", "blocked", "dataflow", "fused"):
+        b = hbm_bytes_model(X, Y, Z, 4, variant)
+        ideal = hbm_bytes_model(X, Y, 128, 4, variant) * (Z / 128)
+        if aligned:
+            assert b == pytest.approx(ideal, rel=1e-6), variant
+        else:
+            assert b > ideal, variant
+    assert hbm_bytes_model(X, Y, 128, 4, "wide") > 0
+
+
+@pytest.mark.parametrize("Z", [64, 128])
+def test_ladder_strictly_reduces_traffic(Z):
+    X, Y, T = 512, 512, 4
+    b = {v: hbm_bytes_model(X, Y, Z, 4, v, T=T) for v in VARIANTS}
+    assert b["pointwise"] > b["blocked"] > b["dataflow"] >= b["wide"] \
+        > b["fused"]
+
+
+@pytest.mark.parametrize("T", [2, 4, 8])
+def test_fused_amortisation_acceptance(T):
+    """Acceptance: fused(T) moves >= 0.75*T x less than dataflow for the
+    same number of steps even with Y-tiling halo overhead (so >= 3x from
+    T=4, the headline criterion)."""
+    X, Y, Z = 512, 512, 64
+    base = hbm_bytes_model(X, Y, Z, 4, "dataflow", T=T)
+    fused = hbm_bytes_model(X, Y, Z, 4, "fused", T=T, y_tile=128)
+    ratio = base / fused
+    assert ratio >= T * 0.75, (T, ratio)
+    if T >= 4:
+        assert ratio >= 3.0, (T, ratio)
+    # untiled fused amortises exactly T (no halo overlap)
+    assert hbm_bytes_model(X, Y, Z, 4, "dataflow", T=T) \
+        == hbm_bytes_model(X, Y, Z, 4, "fused", T=T) * T
+
+
+def test_y_tile_overhead_accounting():
+    """Tiling adds exactly the halo rows, charged on BOTH sides (each tile's
+    kernel re-reads and re-writes its halo): 2*halo rows per interior tile
+    boundary, halo=T for fused and 1 for the source variants."""
+    X, Y, Z, T = 16, 256, 128, 4
+    untiled = hbm_bytes_model(X, Y, Z, 4, "fused", T=T)
+    tiled = hbm_bytes_model(X, Y, Z, 4, "fused", T=T, y_tile=64)
+    n_tiles = 4
+    halo_rows = 2 * T * (n_tiles - 1)
+    assert tiled - untiled == 2 * 3 * X * halo_rows * Z * 4  # read + write
+    d_untiled = hbm_bytes_model(X, Y, Z, 4, "dataflow")
+    d_tiled = hbm_bytes_model(X, Y, Z, 4, "dataflow", y_tile=64)
+    assert d_tiled - d_untiled == 2 * 3 * X * 2 * 1 * (n_tiles - 1) * Z * 4
+
+
+def test_hbm_bytes_model_rejects_unknown_variant():
+    with pytest.raises(ValueError):
+        hbm_bytes_model(8, 8, 8, 4, "nope")
+
+
+def test_hbm_bytes_model_mirrors_wide_tiling_contract():
+    """advect_wide refuses y_tile, so the model must not price it."""
+    with pytest.raises(ValueError):
+        hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=16)
+    # degenerate tile (>= Y) is the untiled path and stays legal
+    assert hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=64) \
+        == hbm_bytes_model(8, 64, 128, 4, "wide")
+
+
+def test_register_bytes_model():
+    # 3 fields x 3T slices x rows x Z x itemsize
+    assert fused_register_bytes(4, 1024, 64, 4) == 3 * 12 * 1024 * 64 * 4
+    assert fused_register_bytes(4, 1024, 64, 4, y_tile=128) \
+        == 3 * 12 * (128 + 8) * 64 * 4
+    # tile larger than the grid clamps to the grid
+    assert fused_register_bytes(2, 16, 8, 4, y_tile=64) \
+        == fused_register_bytes(2, 16, 8, 4)
+
+
+# --- pipeline_model invariants --------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(stage_times=st.lists(st.floats(1e-4, 10.0), min_size=1, max_size=6),
+       n=st.integers(1, 1000))
+def test_pipeline_model_invariants(stage_times, n):
+    stages = {f"s{i}": t for i, t in enumerate(stage_times)}
+    m = pipeline_model(stages, n)
+    # overlap never hurts
+    assert m["pipelined_s"] <= m["serial_s"] + 1e-9
+    assert m["speedup"] >= 1.0 - 1e-9
+    # bottleneck is the max stage
+    assert stages[m["bottleneck"]] == pytest.approx(max(stage_times))
+    # a single stage cannot overlap with itself
+    if len(stage_times) == 1:
+        assert m["pipelined_s"] == pytest.approx(m["serial_s"])
+
+
+def test_pipeline_model_single_stage_exact():
+    m = pipeline_model({"compute": 2.0}, 10)
+    assert m["serial_s"] == pytest.approx(20.0)
+    assert m["pipelined_s"] == pytest.approx(20.0)
+    assert m["speedup"] == pytest.approx(1.0)
+    assert m["bottleneck"] == "compute"
+
+
+# --- fusion-aware roofline -------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(fpc=st.floats(1.0, 500.0), bpc=st.floats(1.0, 200.0),
+       T=st.integers(1, 64))
+def test_stencil_ai_scales_linearly_in_T(fpc, bpc, T):
+    ai1 = R.stencil_arithmetic_intensity(fpc, bpc)
+    aiT = R.stencil_arithmetic_intensity(fpc, bpc, fusion_T=T)
+    assert aiT == pytest.approx(T * ai1)
+
+
+def test_stencil_ai_rejects_bad_T():
+    with pytest.raises(ValueError):
+        R.stencil_arithmetic_intensity(53.0, 8.0, fusion_T=0)
+
+
+def test_stencil_ridge_T_crosses_ridge():
+    """At the returned T the fused AI meets/exceeds the machine ridge; at
+    T-1 it does not (for a genuinely memory-bound stencil)."""
+    fpc, bpc = 53.0, 8.0 * 4   # PW stencil, 8 f32 values/cell per pass
+    Tr = R.stencil_ridge_T(fpc, bpc)
+    ridge = R.PEAK_FLOPS / R.HBM_BW
+    assert R.stencil_arithmetic_intensity(fpc, bpc, fusion_T=Tr) \
+        >= ridge - 1e-9
+    assert Tr > 1
+    assert R.stencil_arithmetic_intensity(fpc, bpc, fusion_T=Tr - 1) < ridge

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import hlo as H
 from repro.core import roofline as R
@@ -131,13 +131,14 @@ def test_parse_real_compiled_module():
     import subprocess, sys, textwrap
     code = textwrap.dedent("""
         import os
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, sys
         sys.path.insert(0, "src")
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core import hlo as H
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((8,), ("model",))
         s = NamedSharding(mesh, P(None, "model"))
         f = lambda a, b: (a @ b).sum()
         a = jax.ShapeDtypeStruct((128, 256), jnp.float32)

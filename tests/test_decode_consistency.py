@@ -12,7 +12,14 @@ from repro.serving.engine import prefill_to_decode_cache
 TOL = {"ssm": 5e-2, "hybrid": 5e-2, "encdec": 5e-2}
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# heaviest decode archs go to the slow tier; the cheap ones keep per-family
+# decode coverage fast (same policy as test_arch_smoke.HEAVY_ARCHS)
+_HEAVY = {"recurrentgemma_9b", "whisper_large_v3", "llama4_maverick_400b_a17b"}
+
+
+@pytest.mark.parametrize("arch",
+                         [pytest.param(a, marks=pytest.mark.slow)
+                          if a in _HEAVY else a for a in ARCH_IDS])
 def test_decode_matches_forward(arch):
     cfg = get_smoke_config(arch)
     layout = M.make_layout(cfg, tp=1)

@@ -1,10 +1,17 @@
-"""Distributed halo-exchange advection == single-device oracle (4-way mesh)."""
+"""Distributed halo-exchange advection == single-device oracle (4-way mesh),
+plus the T-fused distributed step (one depth-T halo exchange per T substeps).
+"""
+import pytest
+
+pytestmark = pytest.mark.slow  # multi-minute module; -m "slow or not slow"
+
 import subprocess
 import sys
 import textwrap
 
 CODE = textwrap.dedent("""
     import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -12,8 +19,8 @@ CODE = textwrap.dedent("""
     from repro.stencil.advection import stratus_fields
     from repro.kernels.advection.ref import default_params
 
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((4,), ("data",))
     for (X, Y, Z) in [(8, 32, 16), (5, 16, 24)]:
         u, v, w = stratus_fields(X, Y, Z)
         p = default_params(Z)
@@ -34,6 +41,58 @@ CODE = textwrap.dedent("""
 def test_halo_exchange_matches_oracle():
     r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
                        text=True, cwd=".", timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # without this the scrubbed env lets jax probe a
+                            # TPU backend: ~2 min of libtpu metadata retries
+                            # before the CPU fallback — the old timeout flake
+                            "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+FUSED_CODE = textwrap.dedent("""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.stencil.distributed import (make_distributed_step,
+                                           reference_global_step)
+    from repro.stencil.advection import stratus_fields
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import compat_make_mesh
+
+    mesh = compat_make_mesh((4,), ("data",))
+    sh_done = False
+    for (X, Y, Z) in [(6, 16, 12), (5, 24, 16)]:
+        for T in (1, 2, 4):
+            u, v, w = stratus_fields(X, Y, Z)
+            p = default_params(Z)
+            fn = make_distributed_step(mesh, p, T=T, dt=0.01)
+            sh = NamedSharding(mesh, P(None, "data", None))
+            out = fn(*(jax.device_put(t, sh) for t in (u, v, w)))
+            ref = reference_global_step(u, v, w, p, T=T, dt=0.01)
+            err = max(float(jnp.max(jnp.abs(a - b)))
+                      for a, b in zip(out, ref))
+            assert err < 1e-5, (X, Y, Z, T, err)
+            if T == 4 and not sh_done:
+                # ONE depth-T exchange per T substeps: 6 permutes (3 fields
+                # x 2 directions), independent of T
+                txt = jax.jit(fn).lower(
+                    *(jax.device_put(t, sh) for t in (u, v, w))
+                    ).compile().as_text()
+                n_perm = txt.count("collective-permute-start") or \
+                    txt.count("collective-permute(")
+                assert n_perm == 6, (T, n_perm)
+                sh_done = True
+    print("OK")
+""")
+
+
+def test_fused_distributed_step_matches_oracle():
+    r = subprocess.run([sys.executable, "-c", FUSED_CODE],
+                       capture_output=True, text=True, cwd=".", timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout

@@ -5,11 +5,13 @@ import textwrap
 
 CODE = textwrap.dedent("""
     import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np, sys
     from repro.distributed.pipeline import pipeline_apply, bubble_fraction
 
-    mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((4,), ("pod",))
     rng = np.random.default_rng(0)
     L, D = 8, 16           # 8 layers -> 2 per stage
     W = jnp.asarray(rng.normal(size=(L, D, D)) * 0.3, jnp.float32)
@@ -42,6 +44,10 @@ CODE = textwrap.dedent("""
 def test_gpipe_schedule_exact():
     r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
                        text=True, cwd=".", timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # without this the scrubbed env lets jax probe a
+                            # TPU backend: ~2 min of libtpu metadata retries
+                            # before the CPU fallback — the old timeout flake
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout

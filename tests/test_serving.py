@@ -1,9 +1,13 @@
 """Serving engine: continuous batching, determinism, MoE properties."""
+import pytest as _pytest
+
+pytestmark = _pytest.mark.slow  # multi-minute module; -m "slow or not slow"
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro import pspec
 from repro.configs import get_smoke_config

@@ -1,8 +1,11 @@
 """Optimizer + training-step invariants."""
+import pytest
+
+pytestmark = pytest.mark.slow  # multi-minute module; run with -m "slow or not slow"
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import pspec
 from repro.configs import get_smoke_config
