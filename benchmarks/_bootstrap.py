@@ -1,0 +1,19 @@
+"""Shared shim for benchmark scripts that must run standalone in CI
+(`python benchmarks/<mod>.py [--quick]`) as well as via `benchmarks.run`:
+puts the repo root and `src/` on sys.path at import time, and parses the
+common smoke-mode flag."""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def smoke_arg(argv: Optional[List[str]] = None):
+    """`True` if --quick was passed, else `None` (defer to BENCH_SMOKE)."""
+    return "--quick" in (sys.argv[1:] if argv is None else argv) or None

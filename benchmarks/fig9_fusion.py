@@ -9,14 +9,23 @@ per HBM pass; the sweep reports, per step:
   * interpret-mode wallclock + max |err| vs the multi-step f64 oracle on a
     reduced grid (correctness pinned where we cannot wall-clock the TPU).
 
+The sweep models the in-grid (y_tile, x) tiled path (the kernels' default:
+zero HBM halo overlap, halo re-reads served from VMEM) and reports the
+retained host-tiled bytes alongside for comparison.
+
 Emits the usual CSV rows AND writes ``BENCH_fusion.json`` next to the CWD
-(CI uploads it as an artifact). ``run(smoke=True)`` shrinks the measured
-grid for the CI smoke invocation.
+(CI uploads it as an artifact). ``run(smoke=True)`` (CLI: ``--quick``, or
+``BENCH_SMOKE=1``) shrinks the measured grid for the CI smoke invocation.
 """
 from __future__ import annotations
 
 import json
 import os
+
+try:                        # package context (benchmarks.run / -m)
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
 
 import numpy as np
 
@@ -45,9 +54,17 @@ def run(smoke: bool = None) -> None:
     rows = []
     base_step_b = hbm_bytes_model(X, Y, Z, ITEM, "dataflow")  # one step, v2
     for T in T_SWEEP:
-        fused_b = hbm_bytes_model(X, Y, Z, ITEM, "fused", T=T, y_tile=Y_TILE)
+        # in-grid tiled path (the default): zero HBM halo overlap
+        fused_b = hbm_bytes_model(X, Y, Z, ITEM, "fused", T=T, y_tile=Y_TILE,
+                                  grid_tiled=True)
+        host_b = hbm_bytes_model(X, Y, Z, ITEM, "fused", T=T, y_tile=Y_TILE,
+                                 grid_tiled=False)
         per_step_b = fused_b / T
+        host_factor = R.stencil_tiling_bytes_factor(Y, Y_TILE, T,
+                                                    grid_tiled=False)
         ai = R.stencil_arithmetic_intensity(fpc, per_step_b / cells)
+        ai_host = R.stencil_arithmetic_intensity(
+            fpc, per_step_b / cells, tiling_bytes_factor=host_factor)
         t_mem = mem_s(per_step_b)
         t_cmp = comp_s(flops_step)
         t_roof = max(t_mem, t_cmp)
@@ -60,11 +77,14 @@ def run(smoke: bool = None) -> None:
             "T": T,
             "grid": [X, Y, Z],
             "y_tile": Y_TILE,
+            "tiling": "grid",
             "bytes_per_step_modelled": per_step_b,
             "bytes_per_pass_modelled": fused_b,
+            "host_tiled_bytes_per_pass": host_b,
             "baseline_dataflow_bytes_per_step": base_step_b,
             "amortisation_x": base_step_b / per_step_b,
             "arithmetic_intensity": ai,
+            "arithmetic_intensity_host_tiled": ai_host,
             "roofline_us_per_step": t_roof * 1e6,
             "vmem_register_bytes": reg_b,
         })
@@ -102,4 +122,4 @@ def run(smoke: bool = None) -> None:
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke=_bootstrap.smoke_arg())

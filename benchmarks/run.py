@@ -4,17 +4,14 @@ Prints ``name,us_per_call,derived`` CSV rows (see common.emit).
 """
 from __future__ import annotations
 
-import os
 import sys
 import traceback
 
 # allow `python benchmarks/run.py` (CI) as well as `python -m benchmarks.run`
-_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-if _ROOT not in sys.path:
-    sys.path.insert(0, _ROOT)
-_SRC = os.path.join(_ROOT, "src")
-if _SRC not in sys.path:
-    sys.path.insert(0, _SRC)
+try:                        # package context
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
 
 from benchmarks import common
 
@@ -22,11 +19,11 @@ from benchmarks import common
 def main() -> None:
     from benchmarks import (dma_overlap, fig3_ladder, fig5_scaling,
                             fig7_compare, fig8_gridsize, fig9_fusion,
-                            roofline_table)
+                            roofline_table, tiling_sweep)
     common.header()
     failures = []
     for mod in (fig3_ladder, fig5_scaling, fig7_compare, fig8_gridsize,
-                fig9_fusion, dma_overlap, roofline_table):
+                fig9_fusion, tiling_sweep, dma_overlap, roofline_table):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

@@ -1,0 +1,159 @@
+"""Tiling sweep: host-side y-tile loop vs in-grid (y_tile, x) 2D grid.
+
+For every swept (grid, variant, y_tile, T) config this compares the two
+y-tiling execution paths analytically and (on a reduced grid) by measured
+interpret-mode wallclock + bit-exactness:
+
+  * `host_hbm_bytes`   — the retained `tiling="host"` loop: one pallas_call
+    per halo-overlapped block, every halo row restaged from HBM on the read
+    AND write side, restitched with a host `jnp.concatenate`;
+  * `grid_hbm_bytes`   — the in-grid path: one launch, element-indexed tile
+    slabs, halo re-reads served from the persistent VMEM register, outputs
+    written in place (zero HBM halo overlap, so bytes match untiled);
+  * `vmem_halo_bytes`  — the relocated halo traffic, now an on-chip cost;
+  * `register_bytes`   — the VMEM ring footprint (identical for both paths).
+
+The module is also the CI acceptance gate for the in-grid refactor: it
+FAILS (explicit SystemExit, immune to python -O) if any swept config's
+grid-tiled bytes exceed the host-tiled bytes, if grid-tiled is not
+strictly cheaper whenever the tile actually splits the domain, or if a
+tiled restitch is not bit-exact. Emits the usual CSV rows and
+writes ``BENCH_tiling.json``. ``--quick`` / ``BENCH_SMOKE=1`` shrinks the
+measured part for CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+try:                        # package context (benchmarks.run / -m)
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, mem_s, wallclock_us
+from repro.kernels.advection.advection import (advect_blocked,
+                                               advect_dataflow, advect_fused,
+                                               fused_register_bytes,
+                                               hbm_bytes_model,
+                                               vmem_halo_bytes_model)
+from repro.kernels.advection.ref import default_params
+from repro.stencil.advection import stratus_fields
+
+ITEM = 4  # f32
+
+# modelled at the paper's Fig. 3 and Fig. 8 grid classes
+MODEL_GRIDS = {"fig3_16M": (512, 512, 64), "fig8_67M": (1024, 1024, 64)}
+VARIANT_T = [("blocked", 1), ("dataflow", 1), ("fused", 4), ("fused", 8)]
+Y_TILES = (64, 128, 256)
+
+
+def _model_rows():
+    rows = []
+    for gname, (X, Y, Z) in MODEL_GRIDS.items():
+        for variant, T in VARIANT_T:
+            for y_tile in Y_TILES:
+                host_b = hbm_bytes_model(X, Y, Z, ITEM, variant, T=T,
+                                         y_tile=y_tile, grid_tiled=False)
+                grid_b = hbm_bytes_model(X, Y, Z, ITEM, variant, T=T,
+                                         y_tile=y_tile, grid_tiled=True)
+                untiled_b = hbm_bytes_model(X, Y, Z, ITEM, variant, T=T)
+                vmem_b = vmem_halo_bytes_model(X, Y, Z, ITEM, variant, T=T,
+                                               y_tile=y_tile)
+                halo = T if variant == "fused" else 1
+                reg_b = fused_register_bytes(T if variant == "fused" else 1,
+                                             Y, Z, ITEM, y_tile=y_tile,
+                                             halo=halo)
+                # the acceptance gate: in-grid tiling must never move MORE
+                # HBM bytes than the host loop, must be strictly cheaper
+                # whenever the tile actually splits the domain, and must
+                # match the untiled compulsory traffic. Explicit raise, not
+                # assert: the gate must survive python -O / PYTHONOPTIMIZE.
+                cfg = (gname, variant, T, y_tile)
+                if grid_b > host_b or (y_tile < Y and grid_b >= host_b):
+                    raise SystemExit(f"tiling gate: grid bytes {grid_b} not "
+                                     f"below host bytes {host_b} for {cfg}")
+                if grid_b != untiled_b:
+                    raise SystemExit(f"tiling gate: grid bytes {grid_b} != "
+                                     f"untiled {untiled_b} for {cfg}")
+                emit(f"tiling.{gname}.{variant}_T{T}_ty{y_tile}",
+                     mem_s(grid_b) * 1e6,
+                     f"host_B={host_b};grid_B={grid_b};"
+                     f"halo_saved={(host_b - grid_b) / host_b * 100:.1f}%;"
+                     f"vmem_halo_B={vmem_b}")
+                rows.append({
+                    "grid_name": gname, "grid": [X, Y, Z],
+                    "variant": variant, "T": T, "y_tile": y_tile,
+                    "host_hbm_bytes": host_b,
+                    "grid_hbm_bytes": grid_b,
+                    "untiled_hbm_bytes": untiled_b,
+                    "vmem_halo_bytes": vmem_b,
+                    "register_bytes": reg_b,
+                    "hbm_saved_frac": (host_b - grid_b) / host_b,
+                })
+    return rows
+
+
+def _measured_rows(smoke: bool):
+    """Interpret-mode wallclock + exactness on a reduced grid: one launch
+    (grid) vs n_tiles launches + restitch (host)."""
+    X, Y, Z = (5, 16, 16) if smoke else (6, 48, 16)
+    y_tile = 4 if smoke else 12
+    T = 2
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    rows = []
+    cases = [("dataflow",
+              lambda tiling: advect_dataflow(u, v, w, p, y_tile=y_tile,
+                                             tiling=tiling),
+              lambda: advect_dataflow(u, v, w, p)),
+             ("fused",
+              lambda tiling: advect_fused(u, v, w, p, T=T, dt=0.01,
+                                          y_tile=y_tile, tiling=tiling),
+              lambda: advect_fused(u, v, w, p, T=T, dt=0.01))]
+    if not smoke:
+        cases.append(("blocked",
+                      lambda tiling: advect_blocked(u, v, w, p,
+                                                    y_tile=y_tile,
+                                                    tiling=tiling),
+                      lambda: advect_blocked(u, v, w, p)))
+    iters = 1 if smoke else 3
+    for name, tiled_fn, untiled_fn in cases:
+        full = untiled_fn()
+        for tiling in ("grid", "host"):
+            out = tiled_fn(tiling)
+            err = max(float(jnp.max(jnp.abs(a - b)))
+                      for a, b in zip(full, out))
+            if err != 0.0:   # bit-exact restitch is part of the CI gate
+                raise SystemExit(f"tiling gate: {name}/{tiling} not "
+                                 f"bit-exact vs untiled (err={err})")
+            us = wallclock_us(lambda t=tiling: tiled_fn(t), iters=iters)
+            emit(f"tiling.measured.{name}_{tiling}", us,
+                 f"grid={X}x{Y}x{Z};y_tile={y_tile};exact=True")
+            rows.append({"variant": name, "tiling": tiling,
+                         "grid": [X, Y, Z], "y_tile": y_tile,
+                         "T": T if name == "fused" else 1,
+                         "interpret_us": us, "max_err_vs_untiled": err})
+    return rows
+
+
+def run(smoke: bool = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    rows = _model_rows()
+    measured = _measured_rows(smoke)
+    payload = {"modelled": rows, "measured": measured,
+               "itemsize": ITEM,
+               "contract": "grid_hbm_bytes <= host_hbm_bytes for every "
+                           "config; strict whenever y_tile < Y"}
+    out_path = os.path.join(os.getcwd(), "BENCH_tiling.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("tiling.json_written", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    run(smoke=_bootstrap.smoke_arg())

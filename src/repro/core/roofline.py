@@ -98,28 +98,61 @@ class RooflineTerms:
         return d
 
 
+def stencil_tiling_bytes_factor(Y: int, y_tile: Optional[int], halo: int,
+                                *, grid_tiled: bool = True) -> float:
+    """Multiplier on the compulsory per-pass HBM bytes from y-tiling.
+
+    The in-grid `(y_tile, x)` path (`grid_tiled=True`, the kernels'
+    default) serves halo re-reads from the persistent VMEM slab and writes
+    each output row once, so its HBM traffic is the compulsory 1.0x —
+    independent of `y_tile`. The host-side loop restages `2*halo` rows per
+    interior tile boundary on both the read and write side, inflating
+    every pass by `(Y + 2*halo*(n_tiles-1)) / Y`.
+    """
+    if halo < 0:
+        raise ValueError(f"halo must be >= 0, got {halo}")
+    if y_tile is None or y_tile >= Y or grid_tiled:
+        return 1.0
+    n_tiles = -(-Y // y_tile)
+    return (Y + 2 * halo * (n_tiles - 1)) / Y
+
+
 def stencil_arithmetic_intensity(flops_per_cell: float,
                                  bytes_per_cell_pass: float,
-                                 fusion_T: int = 1) -> float:
-    """FLOP/byte of a (temporally fused) streaming stencil.
+                                 fusion_T: int = 1,
+                                 tiling_bytes_factor: float = 1.0) -> float:
+    """FLOP/byte of a (temporally fused, optionally y-tiled) streaming
+    stencil.
 
     One HBM pass moves `bytes_per_cell_pass` per cell; temporal fusion
     performs `fusion_T` steps of `flops_per_cell` work on that pass, so AI
     scales linearly in T — the lever that walks a memory-bound stencil
     toward the ridge point (paper Fig. 3 endgame; our Fig. 9 sweep).
+    `tiling_bytes_factor` (from ``stencil_tiling_bytes_factor``) deflates
+    the AI by the host-tiling halo restaging; the in-grid path keeps it
+    at 1.0.
     """
     if fusion_T < 1:
         raise ValueError(f"fusion_T must be >= 1, got {fusion_T}")
-    return fusion_T * flops_per_cell / bytes_per_cell_pass
+    if tiling_bytes_factor < 1.0:
+        raise ValueError("tiling_bytes_factor must be >= 1.0, got "
+                         f"{tiling_bytes_factor}")
+    return fusion_T * flops_per_cell / (bytes_per_cell_pass
+                                        * tiling_bytes_factor)
 
 
 def stencil_ridge_T(flops_per_cell: float, bytes_per_cell_pass: float,
                     peak_flops: float = PEAK_FLOPS,
-                    hbm_bw: float = HBM_BW) -> int:
+                    hbm_bw: float = HBM_BW,
+                    tiling_bytes_factor: float = 1.0) -> int:
     """Smallest fusion depth T at which the fused stencil leaves the
-    memory-bound regime (AI >= machine ridge point), rounded up."""
+    memory-bound regime (AI >= machine ridge point), rounded up. Host-side
+    tiling (tiling_bytes_factor > 1) pushes the required T up; the in-grid
+    path does not."""
     ridge = peak_flops / hbm_bw
-    ai1 = stencil_arithmetic_intensity(flops_per_cell, bytes_per_cell_pass)
+    ai1 = stencil_arithmetic_intensity(
+        flops_per_cell, bytes_per_cell_pass,
+        tiling_bytes_factor=tiling_bytes_factor)
     return max(1, math.ceil(ridge / ai1))
 
 

@@ -5,8 +5,9 @@ FPGA -> TPU mapping of the paper's stages:
   v1 `blocked`   : grid over x; each step fetches the (x-1, x, x+1) z-y slices
                    of all three fields from HBM into VMEM (three index-mapped
                    views per field). This is the paper's *initial* BRAM-blocked
-                   kernel: correct, pipelined by Pallas, but每 slice is fetched
-                   three times — the "pipeline drains / re-reads" regime.
+                   kernel: correct, pipelined by Pallas, but each slice is
+                   fetched three times — the "pipeline drains / re-reads"
+                   regime.
 
   v2 `dataflow`  : grid over x with a persistent VMEM shift-register
                    (3, Y, Z) per field. Each step fetches exactly ONE new
@@ -16,6 +17,10 @@ FPGA -> TPU mapping of the paper's stages:
                    grid pipeline double-buffers the incoming slice against
                    compute, so load/compute/store overlap structurally.
                    HBM traffic drops 3x vs v1 — the Fig. 3 rows 3-5 move.
+                   `fuse_update=True` additionally folds the explicit-Euler
+                   update into the kernel (advanced fields out, not sources),
+                   dropping the separate full-field read+write the host-side
+                   `f + dt*s` pass would pay.
 
   v3 `wide`      : v2 with lane-aligned slices (Z a multiple of 128, f32
                    (8,128) tiling). One HBM->VMEM transaction carries 128
@@ -37,21 +42,51 @@ FPGA -> TPU mapping of the paper's stages:
                    3 fields × 3T slices; with Y-tiling (halo T per side)
                    it is VMEM-bounded at (3T, TY+2T, Z) per field for any Y.
 
-`blocked`/`dataflow`/`fused` accept `y_tile`: the domain is processed in
-halo-overlapped y-blocks (halo 1 for the source kernels, halo T for v4's
-T-step update), keeping the VMEM working set fixed regardless of Y — this
-is what unlocks the paper's Fig. 8 grids (Y=1024, 67M/268M cells) on a
-16 MiB-VMEM part. `wide` rejects `y_tile` (tile+halo rows cannot satisfy
-its sublane contract); at large Y use `fused`, which subsumes it.
+Grid-tiled execution contract (the `y_tile` path, `tiling="grid"`):
+
+  `blocked`/`dataflow`/`wide`/`fused` accept `y_tile` and run the whole
+  domain in ONE kernel launch over a 2D `(y_tile, x)` grid — the y-tile
+  index is the outer (slow) grid dimension, x the inner streaming one.
+  Element-indexed (`pl.Unblocked`) block specs select each tile's slab
+  (`y_tile + 2*halo` rows, clipped flush into the domain at the edges) and
+  write each tile's owned rows in place, so there is no host-side restitch
+  (`jnp.concatenate`) and no per-tile dispatch. The ring register is sized
+  to the slab, `(3, y_tile+2*halo, Z)` / `(T, 3, y_tile+2*T, Z)`, keeping
+  VMEM bounded irrespective of Y; it is never cleared between tiles — the
+  same startup masking that walls off x<0 slices walls off the stale ring
+  content at each tile switch. The stencil's halo re-reads hit the
+  VMEM-resident slab rather than issuing per-tile host restaging: the
+  write side and the per-tile dispatch/concat are eliminated outright,
+  and `hbm_bytes_model(..., grid_tiled=True)` charges the read side at
+  compulsory traffic (zero halo overlap), with `vmem_halo_bytes_model`
+  carrying the relocated bytes — an idealisation of slab residency: the
+  interpret-mode reference still materialises each slab window per grid
+  step, so the analytic model (not a measured counter) is the contract
+  here, as everywhere in this repo's Fig. 3/8/9 tables. Slab edges behave
+  as walls (zero source), exactly like global boundaries; every owned row
+  keeps >= halo true rows of margin to a cut edge, so grid-tiled outputs
+  are bitwise equal to the untiled kernel. Tiles whose slab would not fit
+  (`y_tile + 2*halo > Y`) fall back to the untiled path.
+
+  `wide` grid-tiles with a sublane-rounded fetch halo of 8 rows, so every
+  slab keeps the (8,128) layout contract per tile — large-Y grids finally
+  get a lane-aligned tiled path (`y_tile` must be a multiple of 8).
+
+  The old host-side loop is retained as `tiling="host"` (`_y_tiled_host`):
+  one `pallas_call` per halo-overlapped block plus a host restitch — kept
+  as the measurable anti-pattern baseline (the paper's "data movement
+  overhead" regime) for BENCH_tiling.json. `wide` still rejects host
+  tiling (tile+halo rows cannot satisfy its sublane contract there).
 
 Validated with interpret=True against ref.pw_advect_ref, the f64 oracle, and
 the multi-step f64 oracle (fused) across shape/dtype/T/y_tile sweeps in
-tests/test_advection_kernels.py and tests/test_advection_fused.py.
+tests/test_advection_kernels.py, tests/test_advection_fused.py and
+tests/test_advection_grid_tiled.py.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,9 +95,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.advection.ref import AdvectParams
 
+TILINGS = ("grid", "host")
+_WIDE_HALO = 8   # sublane-rounded fetch halo: keeps wide's (8,128) contract
+
 
 def _source_slices(um, uc, up, vm, vc, vp, wm, wc, wp, tcx, tcy, tzc1, tzc2):
-    """PW source terms for one x-slice. Inputs (Y, Z) f32 views."""
+    """PW source terms for one x-slice. Inputs (rows, Z) f32 views."""
     def inner(f):
         return f[1:-1, 1:-1]
 
@@ -91,6 +129,67 @@ def _pad_edges(s):
 
 
 # ---------------------------------------------------------------------------
+# in-grid (y_tile, x) tiling geometry
+# ---------------------------------------------------------------------------
+
+
+def _check_tiling(tiling: str) -> None:
+    if tiling not in TILINGS:
+        raise ValueError(f"tiling must be one of {TILINGS}, got {tiling!r}")
+
+
+def _check_y_tile(y_tile: Optional[int]) -> None:
+    if y_tile is not None and y_tile < 1:
+        raise ValueError(f"y_tile must be >= 1, got {y_tile}")
+
+
+def _grid_geometry(Y: int, y_tile: Optional[int],
+                   halo: int) -> Tuple[int, int, int]:
+    """(TY, S, n_ty): owned rows per tile, static slab rows, tile count.
+
+    Untiled (or a slab that would not fit the domain) degenerates to one
+    full-domain tile (Y, Y, 1) — the 2D grid with n_ty=1 IS the untiled
+    kernel, so there is a single code path.
+    """
+    if y_tile is None or y_tile >= Y or y_tile + 2 * halo > Y:
+        return Y, Y, 1
+    return y_tile, y_tile + 2 * halo, -(-Y // y_tile)
+
+
+def _slab_lo(t, Y: int, TY: int, S: int, H: int):
+    """Global row of slab row 0 for tile t, clipped flush into the domain."""
+    return jnp.clip(t * TY - H, 0, Y - S)
+
+
+def _out_lo(t, Y: int, TY: int):
+    """Global row of the tile's (1, TY, Z) output block; the remainder tile
+    slides down so its static-shaped block stays in bounds — its extra rows
+    overlap the previous tile's and are rewritten with identical values
+    (every row it emits has >= halo rows of slab margin)."""
+    return jnp.minimum(t * TY, Y - TY)
+
+
+def _own_start(t, Y: int, TY: int, S: int, H: int):
+    """Slab-local row where the tile's owned output rows begin."""
+    return _out_lo(t, Y, TY) - _slab_lo(t, Y, TY, S, H)
+
+
+def _emit_tile_outputs(refs, sources, cens, interior, start, fuse, dt):
+    """Shared v1/v2 epilogue: mask each slab source to the x-interior,
+    optionally fold the Euler update in (`fuse`: advanced fields out), and
+    write the tile's owned rows — the (1, TY, Z) output block — from slab
+    row `start`."""
+    for ref, s, cen in zip(refs, sources, cens):
+        if fuse:
+            src = jnp.where(interior, _pad_edges(s), 0.0).astype(cen.dtype)
+            val = cen + dt * src
+        else:
+            val = jnp.where(interior, _pad_edges(s), 0.0).astype(ref.dtype)
+        ref[0] = jax.lax.dynamic_slice(val, (start, 0),
+                                       (ref.shape[1], val.shape[1]))
+
+
+# ---------------------------------------------------------------------------
 # v1: blocked — three slice views per field, 3x HBM traffic
 # ---------------------------------------------------------------------------
 
@@ -98,35 +197,47 @@ def _pad_edges(s):
 def _kernel_blocked(t1_ref, t2_ref,
                     um_ref, uc_ref, up_ref, vm_ref, vc_ref, vp_ref,
                     wm_ref, wc_ref, wp_ref,
-                    su_ref, sv_ref, sw_ref, *, X):
-    i = pl.program_id(0)
+                    su_ref, sv_ref, sw_ref, *, X, Y, TY, S, H, fuse, dt):
+    t = pl.program_id(0)
+    i = pl.program_id(1)
     args = [r[0] for r in (um_ref, uc_ref, up_ref, vm_ref, vc_ref, vp_ref,
                            wm_ref, wc_ref, wp_ref)]
     su, sv, sw = _source_slices(*args, 0.0 + t1_ref[0], t1_ref[1],
                                 t1_ref[2:], t2_ref[2:])
     interior = (i >= 1) & (i <= X - 2)
-    for ref, s in ((su_ref, su), (sv_ref, sv), (sw_ref, sw)):
-        ref[0] = jnp.where(interior, _pad_edges(s), 0.0).astype(ref.dtype)
+    _emit_tile_outputs((su_ref, sv_ref, sw_ref), (su, sv, sw),
+                       (args[1], args[4], args[7]), interior,
+                       _own_start(t, Y, TY, S, H), fuse, dt)
 
 
 def advect_blocked(u, v, w, p: AdvectParams, *, interpret: bool = True,
-                   y_tile: int | None = None):
-    if y_tile is not None and y_tile < u.shape[1]:
-        fn = lambda a, b, c: advect_blocked(a, b, c, p, interpret=interpret)
-        return _y_tiled(fn, u, v, w, y_tile=y_tile, halo=1)
+                   y_tile: int | None = None, tiling: str = "grid",
+                   fuse_update: bool = False, dt: float = 1.0):
+    _check_tiling(tiling)
+    _check_y_tile(y_tile)
     X, Y, Z = u.shape
+    if tiling == "host" and y_tile is not None and y_tile < Y:
+        fn = lambda a, b, c: advect_blocked(a, b, c, p, interpret=interpret,
+                                            fuse_update=fuse_update, dt=dt)
+        return _y_tiled_host(fn, u, v, w, y_tile=y_tile, halo=1)
+    TY, S, n_ty = _grid_geometry(Y, y_tile, 1)
     slice_spec = lambda off: pl.BlockSpec(
-        (1, Y, Z),
-        lambda i: (jnp.clip(i + off, 0, X - 1), 0, 0))
+        (1, S, Z),
+        lambda t, i, off=off: (jnp.clip(i + off, 0, X - 1),
+                               _slab_lo(t, Y, TY, S, 1), 0),
+        indexing_mode=pl.Unblocked())
     # pack scalars+z-metrics into one (Z+2,) vector per metric for simplicity
     t1 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc1])
     t2 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc2])
-    tz_spec = pl.BlockSpec((Z + 2,), lambda i: (0,))
-    out_spec = pl.BlockSpec((1, Y, Z), lambda i: (i, 0, 0))
+    tz_spec = pl.BlockSpec((Z + 2,), lambda t, i: (0,))
+    out_spec = pl.BlockSpec((1, TY, Z),
+                            lambda t, i: (i, _out_lo(t, Y, TY), 0),
+                            indexing_mode=pl.Unblocked())
     out_shape = [jax.ShapeDtypeStruct((X, Y, Z), u.dtype)] * 3
     fn = pl.pallas_call(
-        functools.partial(_kernel_blocked, X=X),
-        grid=(X,),
+        functools.partial(_kernel_blocked, X=X, Y=Y, TY=TY, S=S, H=1,
+                          fuse=fuse_update, dt=dt),
+        grid=(n_ty, X),
         in_specs=[tz_spec, tz_spec] + [slice_spec(o) for _ in range(3)
                                        for o in (-1, 0, 1)],
         out_specs=[out_spec] * 3,
@@ -143,9 +254,13 @@ def advect_blocked(u, v, w, p: AdvectParams, *, interpret: bool = True,
 
 def _kernel_dataflow(t1_ref, t2_ref, u_ref, v_ref, w_ref,
                      su_ref, sv_ref, sw_ref,
-                     ubuf, vbuf, wbuf, *, X):
-    i = pl.program_id(0)
-    # 1) shift register: store the newly-arrived slice at ring position i%3
+                     ubuf, vbuf, wbuf, *, X, Y, TY, S, H, fuse, dt):
+    t = pl.program_id(0)
+    i = pl.program_id(1)
+    # 1) shift register: store the newly-arrived slice at ring position i%3.
+    #    At a tile switch the ring holds the previous tile's slices; the
+    #    interior mask below keeps them out of every unmasked output, so no
+    #    explicit per-tile reset is needed.
     slot = jax.lax.rem(i, 3)
     load = i <= X - 1
     for buf, ref in ((ubuf, u_ref), (vbuf, v_ref), (wbuf, w_ref)):
@@ -160,19 +275,23 @@ def _kernel_dataflow(t1_ref, t2_ref, u_ref, v_ref, w_ref,
     su, sv, sw = _source_slices(*args, 0.0 + t1_ref[0], t1_ref[1],
                                 t1_ref[2:], t2_ref[2:])
     interior = (i >= 2) & (i <= X - 1)
-    for ref, s in ((su_ref, su), (sv_ref, sv), (sw_ref, sw)):
-        ref[0] = jnp.where(interior, _pad_edges(s), 0.0).astype(ref.dtype)
+    _emit_tile_outputs((su_ref, sv_ref, sw_ref), (su, sv, sw),
+                       (args[1], args[4], args[7]), interior,
+                       _own_start(t, Y, TY, S, H), fuse, dt)
 
 
-def _y_tiled(fn, u, v, w, *, y_tile: int, halo: int):
-    """Run a slice kernel over halo-overlapped y-blocks and restitch.
+def _y_tiled_host(fn, u, v, w, *, y_tile: int, halo: int):
+    """HOST-side tiling (the retained anti-pattern baseline, `tiling="host"`):
+    run a slice kernel over halo-overlapped y-blocks and restitch.
 
     Each block sees `halo` extra rows per interior side; the kernel treats
     block edges as boundaries (zero source), which contaminates at most
     `halo` rows per side after `halo` update sweeps — exactly the rows we
     trim. Global-edge blocks get no extra rows, so the true boundary
-    condition lands on the block edge. HBM cost of the overlap is charged in
-    `hbm_bytes_model(..., y_tile=...)`.
+    condition lands on the block edge. Every halo row is restaged from HBM
+    per block, and the restitch is a host `jnp.concatenate` — the cost
+    `hbm_bytes_model(..., grid_tiled=False)` charges and the in-grid path
+    eliminates.
     """
     Y = u.shape[1]
     outs = ([], [], [])
@@ -186,25 +305,38 @@ def _y_tiled(fn, u, v, w, *, y_tile: int, halo: int):
 
 
 def advect_dataflow(u, v, w, p: AdvectParams, *, interpret: bool = True,
-                    y_tile: int | None = None):
-    if y_tile is not None and y_tile < u.shape[1]:
-        fn = lambda a, b, c: advect_dataflow(a, b, c, p, interpret=interpret)
-        return _y_tiled(fn, u, v, w, y_tile=y_tile, halo=1)
+                    y_tile: int | None = None, tiling: str = "grid",
+                    fuse_update: bool = False, dt: float = 1.0,
+                    _fetch_halo: int = 1):
+    _check_tiling(tiling)
+    _check_y_tile(y_tile)
     X, Y, Z = u.shape
-    in_spec = pl.BlockSpec((1, Y, Z), lambda i: (jnp.minimum(i, X - 1), 0, 0))
-    out_spec = pl.BlockSpec((1, Y, Z),
-                            lambda i: (jnp.clip(i - 1, 0, X - 1), 0, 0))
+    if tiling == "host" and y_tile is not None and y_tile < Y:
+        fn = lambda a, b, c: advect_dataflow(a, b, c, p, interpret=interpret,
+                                             fuse_update=fuse_update, dt=dt)
+        return _y_tiled_host(fn, u, v, w, y_tile=y_tile, halo=1)
+    H = _fetch_halo
+    TY, S, n_ty = _grid_geometry(Y, y_tile, H)
+    in_spec = pl.BlockSpec((1, S, Z),
+                           lambda t, i: (jnp.minimum(i, X - 1),
+                                         _slab_lo(t, Y, TY, S, H), 0),
+                           indexing_mode=pl.Unblocked())
+    out_spec = pl.BlockSpec((1, TY, Z),
+                            lambda t, i: (jnp.clip(i - 1, 0, X - 1),
+                                          _out_lo(t, Y, TY), 0),
+                            indexing_mode=pl.Unblocked())
     t1 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc1])
     t2 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc2])
-    tz_spec = pl.BlockSpec((Z + 2,), lambda i: (0,))
+    tz_spec = pl.BlockSpec((Z + 2,), lambda t, i: (0,))
     out_shape = [jax.ShapeDtypeStruct((X, Y, Z), u.dtype)] * 3
     fn = pl.pallas_call(
-        functools.partial(_kernel_dataflow, X=X),
-        grid=(X + 1,),
+        functools.partial(_kernel_dataflow, X=X, Y=Y, TY=TY, S=S, H=H,
+                          fuse=fuse_update, dt=dt),
+        grid=(n_ty, X + 1),
         in_specs=[tz_spec, tz_spec, in_spec, in_spec, in_spec],
         out_specs=[out_spec] * 3,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((3, Y, Z), u.dtype) for _ in range(3)],
+        scratch_shapes=[pltpu.VMEM((3, S, Z), u.dtype) for _ in range(3)],
         interpret=interpret,
     )
     return fn(t1, t2, u, v, w)
@@ -216,7 +348,10 @@ def advect_dataflow(u, v, w, p: AdvectParams, *, interpret: bool = True,
 
 
 def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True,
-                y_tile: int | None = None):
+                y_tile: int | None = None, tiling: str = "grid",
+                fuse_update: bool = False, dt: float = 1.0):
+    _check_tiling(tiling)
+    _check_y_tile(y_tile)
     Z = u.shape[2]
     if Z % 128:
         raise ValueError(
@@ -225,14 +360,23 @@ def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True,
     if u.shape[1] % 8:
         raise ValueError(f"Y must be a multiple of 8 (sublane), got {u.shape[1]}")
     if y_tile is not None and y_tile < u.shape[1]:
-        # halo'd blocks are y_tile+2 (edge: +1) rows — never a sublane
-        # multiple, so tiling would silently break the layout contract this
-        # variant exists to enforce
-        raise ValueError(
-            "advect_wide cannot Y-tile (tile+halo rows break the (8,128) "
-            "sublane contract); use advect_dataflow(y_tile=...) or "
-            "advect_fused")
-    return advect_dataflow(u, v, w, p, interpret=interpret)
+        if tiling == "host":
+            # halo'd host blocks are y_tile+2 (edge: +1) rows — never a
+            # sublane multiple, so host tiling would silently break the
+            # layout contract this variant exists to enforce
+            raise ValueError(
+                "advect_wide cannot Y-tile host-side (tile+halo rows break "
+                "the (8,128) sublane contract); use tiling='grid' (default), "
+                "advect_dataflow(y_tile=...) or advect_fused")
+        if y_tile % 8:
+            raise ValueError(
+                f"wide y_tile must be a multiple of 8 (sublane), got {y_tile}")
+    # grid tiling keeps the contract per-tile: the fetch halo is rounded up
+    # to a full sublane (8 rows), so slab row counts and element offsets all
+    # stay multiples of 8 while the stencil only needs 1 halo row.
+    return advect_dataflow(u, v, w, p, interpret=interpret, y_tile=y_tile,
+                           tiling="grid", fuse_update=fuse_update, dt=dt,
+                           _fetch_halo=_WIDE_HALO)
 
 
 # ---------------------------------------------------------------------------
@@ -240,24 +384,34 @@ def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True,
 # ---------------------------------------------------------------------------
 
 
-def _kernel_fused(t1_ref, t2_ref, u_ref, v_ref, w_ref,
+def _kernel_fused(t1_ref, t2_ref, ym_ref, u_ref, v_ref, w_ref,
                   ou_ref, ov_ref, ow_ref,
-                  ubuf, vbuf, wbuf, *, X, T, dt):
+                  ubuf, vbuf, wbuf, *, X, Y, TY, S, T, dt):
     """T stacked 3-slice rings: level k holds the step-k fields.
 
-    At grid step i the newly-arrived input slice x=i lands in level 0's ring;
-    level k (k=1..T) then computes its slice x=i-k from level k-1's ring.
-    Level k-1's slice x=j is stored at grid step j+k-1, so for every level
-    the (x-1, x, x+1) operands sit at ring slots ((i+1)%3, (i+2)%3, i%3) and
-    every level writes slot i%3 — the same rotation as v2, T-deep.
+    At grid step (t, i) the newly-arrived input slice x=i of tile t's slab
+    lands in level 0's ring; level k (k=1..T) then computes its slice x=i-k
+    from level k-1's ring. Level k-1's slice x=j is stored at grid step
+    j+k-1, so for every level the (x-1, x, x+1) operands sit at ring slots
+    ((i+1)%3, (i+2)%3, i%3) and every level writes slot i%3 — the same
+    rotation as v2, T-deep.
 
     Startup/tail slices (x<0 or x>X-1) are garbage but provably walled off:
     a level's x=0 / x=X-1 output is a masked copy of its centre operand, and
-    the depth-1 stencil cannot carry values past an unchanging slice.
+    the depth-1 stencil cannot carry values past an unchanging slice. The
+    same wall swallows the previous tile's stale ring content at each tile
+    switch, so the ring needs no explicit per-tile reset.
+
+    `ym_ref` is the slab's row-interior mask (1.0 = the row's source may be
+    applied); all-ones reproduces the plain boundary behaviour, while the
+    distributed depth-T halo exchange passes its global-interior mask so
+    wrapped ppermute rows stay frozen walls.
     """
-    i = pl.program_id(0)
+    t = pl.program_id(0)
+    i = pl.program_id(1)
     slot = jax.lax.rem(i, 3)
     m, c = jax.lax.rem(i + 1, 3), jax.lax.rem(i + 2, 3)
+    row_ok = (ym_ref[...] > 0.0)[:, None]
     for buf, ref in ((ubuf, u_ref), (vbuf, v_ref), (wbuf, w_ref)):
         buf[0, slot] = ref[0]
     outs = None
@@ -271,58 +425,93 @@ def _kernel_fused(t1_ref, t2_ref, u_ref, v_ref, w_ref,
         interior = (j >= 1) & (j <= X - 2)
         new = []
         for cen, s in ((args[1], su), (args[4], sv), (args[7], sw)):
-            src = jnp.where(interior, _pad_edges(s), 0.0).astype(cen.dtype)
+            src = jnp.where(interior & row_ok, _pad_edges(s),
+                            0.0).astype(cen.dtype)
             new.append(cen + dt * src)
         if k < T:
             ubuf[k, slot], vbuf[k, slot], wbuf[k, slot] = new
         else:
             outs = new
+    start = _own_start(t, Y, TY, S, T)
     for ref, val in zip((ou_ref, ov_ref, ow_ref), outs):
-        ref[0] = val
+        ref[0] = jax.lax.dynamic_slice(val, (start, 0), (TY, val.shape[1]))
 
 
 def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
-                 interpret: bool = True, y_tile: int | None = None):
+                 interpret: bool = True, y_tile: int | None = None,
+                 tiling: str = "grid", y_interior_mask=None):
     """v4: advance the fields T explicit-Euler steps in ONE HBM pass.
 
     Returns the advanced `(u, v, w)` (not sources — the step is fused into
-    the kernel). With `y_tile`, each y-block carries a T-deep halo so the
-    register is VMEM-bounded at ``fused_register_bytes`` irrespective of Y.
+    the kernel). With `y_tile`, each in-grid tile's slab carries a T-deep
+    halo so the register is VMEM-bounded at ``fused_register_bytes``
+    irrespective of Y. `y_interior_mask` (shape (Y,), nonzero = source may
+    be applied) lets callers freeze extra rows beyond the domain edges —
+    the distributed depth-T halo exchange uses it to wall off wrapped
+    ppermute rows while composing with in-grid tiles.
     """
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
-    if y_tile is not None and y_tile < u.shape[1]:
+    _check_tiling(tiling)
+    _check_y_tile(y_tile)
+    X, Y, Z = u.shape
+    if tiling == "host" and y_tile is not None and y_tile < Y:
+        if y_interior_mask is not None:
+            raise ValueError("y_interior_mask requires the grid-tiled path "
+                             "(tiling='grid')")
         fn = lambda a, b, c: advect_fused(a, b, c, p, T=T, dt=dt,
                                           interpret=interpret)
-        return _y_tiled(fn, u, v, w, y_tile=y_tile, halo=T)
-    X, Y, Z = u.shape
-    in_spec = pl.BlockSpec((1, Y, Z), lambda i: (jnp.minimum(i, X - 1), 0, 0))
-    out_spec = pl.BlockSpec((1, Y, Z),
-                            lambda i: (jnp.clip(i - T, 0, X - 1), 0, 0))
+        return _y_tiled_host(fn, u, v, w, y_tile=y_tile, halo=T)
+    TY, S, n_ty = _grid_geometry(Y, y_tile, T)
+    ym = (jnp.ones((Y,), jnp.float32) if y_interior_mask is None
+          else jnp.asarray(y_interior_mask, jnp.float32))
+    if ym.shape != (Y,):
+        raise ValueError(f"y_interior_mask must have shape ({Y},), "
+                         f"got {ym.shape}")
+    in_spec = pl.BlockSpec((1, S, Z),
+                           lambda t, i: (jnp.minimum(i, X - 1),
+                                         _slab_lo(t, Y, TY, S, T), 0),
+                           indexing_mode=pl.Unblocked())
+    out_spec = pl.BlockSpec((1, TY, Z),
+                            lambda t, i: (jnp.clip(i - T, 0, X - 1),
+                                          _out_lo(t, Y, TY), 0),
+                            indexing_mode=pl.Unblocked())
+    ym_spec = pl.BlockSpec((S,), lambda t, i: (_slab_lo(t, Y, TY, S, T),),
+                           indexing_mode=pl.Unblocked())
     t1 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc1])
     t2 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc2])
-    tz_spec = pl.BlockSpec((Z + 2,), lambda i: (0,))
+    tz_spec = pl.BlockSpec((Z + 2,), lambda t, i: (0,))
     out_shape = [jax.ShapeDtypeStruct((X, Y, Z), u.dtype)] * 3
     fn = pl.pallas_call(
-        functools.partial(_kernel_fused, X=X, T=T, dt=dt),
-        grid=(X + T,),
-        in_specs=[tz_spec, tz_spec, in_spec, in_spec, in_spec],
+        functools.partial(_kernel_fused, X=X, Y=Y, TY=TY, S=S, T=T, dt=dt),
+        grid=(n_ty, X + T),
+        in_specs=[tz_spec, tz_spec, ym_spec, in_spec, in_spec, in_spec],
         out_specs=[out_spec] * 3,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((T, 3, Y, Z), u.dtype) for _ in range(3)],
+        scratch_shapes=[pltpu.VMEM((T, 3, S, Z), u.dtype) for _ in range(3)],
         interpret=interpret,
     )
-    return fn(t1, t2, u, v, w)
+    return fn(t1, t2, ym, u, v, w)
+
+
+# ---------------------------------------------------------------------------
+# analytic VMEM / HBM traffic models
+# ---------------------------------------------------------------------------
 
 
 def fused_register_bytes(T: int, y_rows: int, Z: int, itemsize: int = 4,
-                         y_tile: int | None = None) -> int:
+                         y_tile: int | None = None,
+                         halo: int | None = None) -> int:
     """VMEM footprint of v4's shift register: 3 fields x 3T slices.
 
-    With Y-tiling each resident slice has ``y_tile + 2T`` rows (tile + halo)
-    no matter how large the grid's Y is — the Fig. 8 scaling contract.
+    With Y-tiling each resident slice has ``y_tile + 2*halo`` rows (tile +
+    slab halo; halo defaults to T, the fused contamination depth) no matter
+    how large the grid's Y is — the Fig. 8 scaling contract, identical for
+    the in-grid and host-tiled paths. Pass ``halo=8`` (the sublane-rounded
+    fetch halo) to size the `wide` grid-tiled ring with T=1.
     """
-    rows = y_rows if y_tile is None else min(y_tile + 2 * T, y_rows)
+    h = T if halo is None else halo
+    rows = y_rows if y_tile is None else min(y_tile + 2 * h, y_rows)
     return 3 * (3 * T) * rows * Z * itemsize
 
 
@@ -332,25 +521,73 @@ def _n_y_tiles(Y: int, y_tile: int | None) -> int:
     return -(-Y // y_tile)
 
 
+def _host_overlap_rows(Y: int, y_tile: int | None, halo: int) -> int:
+    """Rows the HOST loop restages per x-slice: 2*halo per interior tile
+    boundary. The host path tiles ANY y_tile >= 1 (edge blocks just clamp
+    their halo), so this uses the plain ceil-div tile count — deliberately
+    unlike `_grid_geometry`, whose untiled fallback models the in-grid
+    kernel refusing slabs that cannot fit (`y_tile + 2*halo > Y`).
+    `core.roofline.stencil_tiling_bytes_factor` is this same formula as a
+    multiplier; tests pin the two together.
+    """
+    return 2 * halo * (_n_y_tiles(Y, y_tile) - 1)
+
+
+def _check_wide_model_tile(Y: int, y_tile: int | None,
+                           grid_tiled: bool) -> None:
+    """Mirror advect_wide's tiling contract in the analytic models: no host
+    path exists at all, and the in-grid path needs a sublane-multiple
+    tile."""
+    if y_tile is None or y_tile >= Y:
+        return
+    if not grid_tiled:
+        raise ValueError("wide cannot Y-tile host-side; model grid_tiled=True"
+                         " or use dataflow/fused")
+    if y_tile % 8:
+        raise ValueError(
+            f"wide y_tile must be a multiple of 8 (sublane), got {y_tile}; "
+            "no such execution path exists to model")
+
+
 def hbm_bytes_model(X: int, Y: int, Z: int, itemsize: int, variant: str,
-                    *, T: int = 1, y_tile: int | None = None) -> int:
+                    *, T: int = 1, y_tile: int | None = None,
+                    grid_tiled: bool = True,
+                    fuse_update: bool = True) -> int:
     """Analytic HBM traffic per advection call (for the Fig. 3/9 tables).
 
     `T` is the number of explicit-Euler steps the call advances: the
     pre-fusion variants pay a full read+write pass per step, while `fused`
-    streams each field in and out ONCE for all T steps (plus the y-halo
-    overlap when tiled) — the ~T× amortisation of Fig. 9.
+    streams each field in and out ONCE for all T steps — the ~T×
+    amortisation of Fig. 9.
+
+    `grid_tiled=True` (the kernels' default path) models the in-grid
+    `(y_tile, x)` tiling at compulsory traffic: outputs are written in
+    place (the host loop's write-side halo duplication is gone outright)
+    and the read-side stencil halo is charged to VMEM slab residency
+    rather than HBM, so the HBM term carries ZERO halo overlap — every
+    domain byte moves exactly once per pass, independent of `y_tile`.
+    The relocated halo bytes are reported by ``vmem_halo_bytes_model``.
+    (This is the analytic contract for the Fig. 3/8/9 tables; the
+    interpret-mode reference implementation still materialises each
+    slab window per grid step.) `grid_tiled=False` models the retained
+    host-side loop (`tiling="host"`), which restages `2*halo` rows per
+    interior tile boundary from HBM on BOTH the read and write side.
+
+    `fuse_update=False` additionally charges the separate explicit-Euler
+    update pass the non-fused variants pay when the update is NOT fused
+    into the kernel (read field + read source + write field per step —
+    dense contiguous arrays, so no lane penalty); `fuse_update=True`
+    matches kernels run with their `fuse_update=True` flag (and `fused`,
+    where the update is inherently in-kernel).
     """
     slice_b = Y * Z * itemsize
     lane_eff = 1.0 if Z % 128 == 0 else (Z % 128) / 128.0
-    if variant == "wide" and y_tile is not None and y_tile < Y:
-        # mirror advect_wide: tiling breaks the sublane contract, so there
-        # is no such execution path to model
-        raise ValueError("wide cannot Y-tile; model dataflow or fused")
-    n_ty = _n_y_tiles(Y, y_tile)
+    if variant == "wide":
+        _check_wide_model_tile(Y, y_tile, grid_tiled)
     halo = T if variant == "fused" else 1
-    # interior tile boundaries each re-read `halo` rows from both sides
-    overlap_rows = 2 * halo * (n_ty - 1)
+    # host tiling: interior tile boundaries each re-read `halo` rows from
+    # both sides; in-grid tiling serves those rows from VMEM instead
+    overlap_rows = 0 if grid_tiled else _host_overlap_rows(Y, y_tile, halo)
     tiled_slice_b = (Y + overlap_rows) * Z * itemsize
     if variant == "blocked":
         reads = T * 3 * 3 * X * tiled_slice_b  # 3 fields x 3 views x X slices
@@ -362,10 +599,45 @@ def hbm_bytes_model(X: int, Y: int, Z: int, itemsize: int, variant: str,
         reads = T * 3 * 7 * X * slice_b        # naive per-point gathers (7-point)
     else:
         raise ValueError(variant)
-    # each tile's kernel writes its full slab (halo rows included, trimmed
-    # host-side), so the overlap is paid on the write side too — except
-    # pointwise, which has no tiled execution path
+    # host tiling: each block's kernel writes its full slab (halo rows
+    # included, trimmed host-side), so the overlap is paid on the write side
+    # too — except pointwise, which has no tiled execution path. In-grid
+    # tiling writes every output row exactly once (overlap_rows == 0).
     w_slice_b = slice_b if variant == "pointwise" else tiled_slice_b
     writes = (1 if variant == "fused" else T) * 3 * X * w_slice_b
     eff = lane_eff if variant != "wide" else 1.0
-    return int((reads + writes) / eff)
+    total = (reads + writes) / eff
+    if not fuse_update and variant != "fused":
+        # unfused host-side `f + dt*s` pass: read field + read source +
+        # write field, per field per step (contiguous, no lane penalty)
+        total += T * 3 * 3 * X * slice_b
+    return int(total)
+
+
+def vmem_halo_bytes_model(X: int, Y: int, Z: int, itemsize: int,
+                          variant: str, *, T: int = 1,
+                          y_tile: int | None = None) -> int:
+    """Halo re-read bytes the in-grid path serves from VMEM instead of HBM.
+
+    This is the read-side overlap the host-tiled model charges to HBM
+    (`2*halo` rows per interior tile boundary, per x-slice, per field,
+    per view for `blocked`), relocated on-chip: the slab rows are already
+    resident in the persistent shift register when the tile's stencil
+    re-reads them. The halo is the slab's FETCH halo — T for `fused`,
+    the sublane-rounded 8 rows for `wide` (matching what
+    ``fused_register_bytes(halo=8)`` sizes), 1 for the other source
+    kernels — and the untiled fallback (`y_tile + 2*halo > Y`, where the
+    kernel runs a single full-domain tile) is mirrored, so configs with
+    no tiled execution report zero. The host path's write-side overlap
+    has no VMEM counterpart — in-grid outputs are simply written once.
+    """
+    if variant == "pointwise":
+        return 0   # no tiled execution path
+    if variant == "wide":
+        _check_wide_model_tile(Y, y_tile, grid_tiled=True)
+    halo = {"fused": T, "wide": _WIDE_HALO}.get(variant, 1)
+    _, _, n_ty = _grid_geometry(Y, y_tile, halo)
+    overlap_rows = 2 * halo * (n_ty - 1)
+    views = 3 if variant == "blocked" else 1
+    passes = 1 if variant == "fused" else T
+    return passes * views * 3 * X * overlap_rows * Z * itemsize

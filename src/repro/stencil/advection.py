@@ -56,7 +56,10 @@ class AdvectionDomain:
     interpret: bool = True
     dtype: str = "float32"
     fuse_T: int = 4                   # fused (v4): Euler steps per HBM pass
-    y_tile: Optional[int] = None      # halo-overlapped y-blocks (VMEM bound)
+    y_tile: Optional[int] = None      # y-tiles (VMEM-bounded register)
+    tiling: str = "grid"              # "grid": in-grid (y_tile, x) 2D grid;
+                                      # "host": retained per-block loop
+    fuse_update: bool = False         # v1-v3: fold f + dt*s into the kernel
     dt: float = 1.0
 
     def __post_init__(self):
@@ -74,24 +77,25 @@ class AdvectionDomain:
         p = self.params
         v = self.variant
         if v == "reference":
-            fn = lambda u, vv, w: REF.pw_advect_ref(u, vv, w, p)
-        elif v == "blocked":
-            fn = lambda u, vv, w: K.advect_blocked(u, vv, w, p,
-                                                   interpret=self.interpret,
-                                                   y_tile=self.y_tile)
-        elif v == "dataflow":
-            fn = lambda u, vv, w: K.advect_dataflow(u, vv, w, p,
-                                                    interpret=self.interpret,
-                                                    y_tile=self.y_tile)
-        elif v == "wide":
-            fn = lambda u, vv, w: K.advect_wide(u, vv, w, p,
-                                                interpret=self.interpret,
-                                                y_tile=self.y_tile)
+            if self.fuse_update:
+                fn = lambda u, vv, w: REF.pw_step_ref(u, vv, w, p, self.dt)
+            else:
+                fn = lambda u, vv, w: REF.pw_advect_ref(u, vv, w, p)
+        elif v in ("blocked", "dataflow", "wide"):
+            kern = {"blocked": K.advect_blocked, "dataflow": K.advect_dataflow,
+                    "wide": K.advect_wide}[v]
+            fn = lambda u, vv, w: kern(u, vv, w, p,
+                                       interpret=self.interpret,
+                                       y_tile=self.y_tile,
+                                       tiling=self.tiling,
+                                       fuse_update=self.fuse_update,
+                                       dt=self.dt)
         elif v == "fused":
             fn = lambda u, vv, w: K.advect_fused(u, vv, w, p, T=self.fuse_T,
                                                  dt=self.dt,
                                                  interpret=self.interpret,
-                                                 y_tile=self.y_tile)
+                                                 y_tile=self.y_tile,
+                                                 tiling=self.tiling)
         else:
             raise ValueError(v)
         object.__setattr__(self, "_kernel", jax.jit(fn))
@@ -104,16 +108,20 @@ class AdvectionDomain:
     def sources(self, u, v, w):
         if self.variant == "fused":
             raise ValueError("fused advances fields in-kernel; use step()")
+        if self.fuse_update:
+            raise ValueError("fuse_update kernels advance fields in-kernel; "
+                             "use step()")
         return self.kernel()(u, v, w)
 
     def step(self, u, v, w, dt: Optional[float] = None):
-        """One advection update. For `fused` this is the fast path: the
-        kernel advances `fuse_T` Euler substeps of size `self.dt` in a single
-        HBM pass (dt override is rejected there — it is baked into the
-        kernel)."""
-        if self.variant == "fused":
+        """One advection update. For `fused` (and the v1-v3 rungs with
+        `fuse_update=True`) this is the fast path: the kernel advances the
+        fields in a single HBM pass with dt baked in (dt override is
+        rejected there), instead of writing sources and paying an extra
+        full-field read at update time."""
+        if self.variant == "fused" or self.fuse_update:
             if dt is not None and dt != self.dt:
-                raise ValueError("fused bakes dt into the kernel; set "
+                raise ValueError("the fused-update kernel bakes dt in; set "
                                  "AdvectionDomain(dt=...) instead")
             return self.kernel()(u, v, w)
         dt = self.dt if dt is None else dt
@@ -140,17 +148,41 @@ class AdvectionDomain:
         return cells * REF.flops_per_cell() * self.substeps_per_step()
 
     def hbm_bytes_per_step(self) -> int:
-        """Modelled HBM bytes per step() call (fused: per T-step pass)."""
+        """Modelled HBM bytes per step() call (fused: per T-step pass).
+
+        Prices the configured execution path: in-grid vs host tiling, and
+        whether the Euler update is fused in-kernel or paid as a separate
+        full-field pass (always separate for `reference`).
+        """
+        fused_upd = self.variant == "fused" or self.fuse_update
         return K.hbm_bytes_model(self.X, self.Y, self.Z,
                                  jnp.dtype(self.dtype).itemsize,
                                  self.variant if self.variant != "reference"
                                  else "pointwise",
                                  T=self.substeps_per_step(),
-                                 y_tile=self.y_tile)
+                                 y_tile=self.y_tile,
+                                 grid_tiled=self.tiling == "grid",
+                                 fuse_update=fused_upd)
+
+    def vmem_halo_bytes_per_step(self) -> int:
+        """Halo re-read bytes served from VMEM by the in-grid tiled path."""
+        if self.tiling != "grid":
+            return 0
+        return K.vmem_halo_bytes_model(self.X, self.Y, self.Z,
+                                       jnp.dtype(self.dtype).itemsize,
+                                       self.variant
+                                       if self.variant != "reference"
+                                       else "pointwise",
+                                       T=self.substeps_per_step(),
+                                       y_tile=self.y_tile)
 
     def vmem_register_bytes(self) -> int:
         """VMEM shift-register footprint of the current configuration."""
         depth = self.fuse_T if self.variant == "fused" else 1
         itemsize = jnp.dtype(self.dtype).itemsize
+        # wide's grid-tiled slab carries the sublane-rounded fetch halo
+        halo = K._WIDE_HALO if (self.variant == "wide"
+                                and self.tiling == "grid"
+                                and self.y_tile is not None) else None
         return K.fused_register_bytes(depth, self.Y, self.Z, itemsize,
-                                      y_tile=self.y_tile)
+                                      y_tile=self.y_tile, halo=halo)

@@ -13,19 +13,28 @@ advances T Euler substeps on the halo'd slab before trimming — amortising
 both the HBM pass *and* the collective over T steps (each step contaminates
 one more halo row, so depth-T halos are exactly consumed after T substeps).
 
+`local_kernel="fused"` runs that per-shard slab update through the v4
+Pallas kernel instead of the jnp reference loop, composing the depth-T
+exchange with the kernel's in-grid `(y_tile, x)` tiling: the shard's slab
+streams through ONE kernel launch whose VMEM register is bounded by
+`y_tile` while the wrapped (periodic-ppermute) rows are frozen via the
+kernel's `y_interior_mask` — the same global-interior mask the reference
+loop applies per substep.
+
 Runs under `shard_map` over the `data` axis of any mesh (smoke-tested on the
 host mesh; the production mesh shards y 16-way per pod).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.kernels.advection import advection as K
 from repro.kernels.advection.ref import (AdvectParams, pw_advect_ref,
                                          pw_step_ref)
 
@@ -89,7 +98,10 @@ def make_distributed_advect(mesh: Mesh, params: AdvectParams,
 
 
 def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
-                          axis: str = "data", T: int = 1, dt: float = 1.0):
+                          axis: str = "data", T: int = 1, dt: float = 1.0,
+                          local_kernel: str = "reference",
+                          y_tile: Optional[int] = None,
+                          interpret: bool = True):
     """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
 
     The wrapped ppermute is periodic, so the first/last shard's outer halo
@@ -98,12 +110,22 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
     values past an unchanging row: the global-boundary row is a wall, the
     wrapped rows never contaminate the trimmed result.
 
+    `local_kernel` selects the per-shard slab update: "reference" is the
+    jnp T-substep loop; "fused" streams the slab through the v4 Pallas
+    kernel (one HBM pass for all T substeps), passing the global-interior
+    mask as the kernel's `y_interior_mask` and composing with the kernel's
+    in-grid `(y_tile, x)` tiling via `y_tile` — the shard slab keeps a
+    VMEM-bounded register no matter how wide the shard is.
+
     Wire cost: T rows per neighbour per exchange, so bytes-on-wire per
     substep are flat in T while the exchange *count* falls as 1/T —
     latency-bound small halos amortise T×.
     """
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
+    if local_kernel not in ("reference", "fused"):
+        raise ValueError(f"local_kernel must be 'reference' or 'fused', "
+                         f"got {local_kernel!r}")
 
     n_shards = mesh.shape[axis]
 
@@ -125,17 +147,27 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
         Yl = u.shape[1]
         gy = idx * Yl - T + jnp.arange(Yl + 2 * T)   # global row per slab row
         interior_y = (gy >= 1) & (gy <= n * Yl - 2)
-        m = interior_y[None, :, None]
-        for _ in range(T):
-            su, sv, sw = pw_advect_ref(us, vs, ws, params)
-            us = us + dt * jnp.where(m, su, 0.0)
-            vs = vs + dt * jnp.where(m, sv, 0.0)
-            ws = ws + dt * jnp.where(m, sw, 0.0)
+        if local_kernel == "fused":
+            us, vs, ws = K.advect_fused(
+                us, vs, ws, params, T=T, dt=dt, interpret=interpret,
+                y_tile=y_tile,
+                y_interior_mask=interior_y.astype(jnp.float32))
+        else:
+            m = interior_y[None, :, None]
+            for _ in range(T):
+                su, sv, sw = pw_advect_ref(us, vs, ws, params)
+                us = us + dt * jnp.where(m, su, 0.0)
+                vs = vs + dt * jnp.where(m, sv, 0.0)
+                ws = ws + dt * jnp.where(m, sw, 0.0)
         return tuple(f[:, T:T + Yl, :] for f in (us, vs, ws))
 
     spec = P(None, axis, None)
+    # pallas_call has no shard_map replication rule on this jax; the fused
+    # local kernel therefore needs check_rep=False (outputs are fully
+    # sharded along `axis` anyway, so nothing is lost)
     fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
-                   out_specs=(spec, spec, spec))
+                   out_specs=(spec, spec, spec),
+                   check_rep=local_kernel != "fused")
     return jax.jit(fn)
 
 

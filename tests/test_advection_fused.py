@@ -45,19 +45,22 @@ def test_fused_t1_equals_one_euler_step():
     assert max_err(out, [np.asarray(e, np.float64) for e in expect]) < 1e-6
 
 
-def test_fused_ytiled_matches_untiled_nonmultiple_tiles():
-    """y_tile that does NOT divide Y (17 = 3*5 + 2) and tiles smaller than
-    the halo still restitch to the exact untiled result."""
+@pytest.mark.parametrize("tiling", ["grid", "host"])
+def test_fused_ytiled_matches_untiled_nonmultiple_tiles(tiling):
+    """y_tile that does NOT divide Y (17 = 3*5 + 2) and degenerate tiles
+    still restitch to the exact untiled result, on both the in-grid and the
+    retained host-tiled path."""
     shape = (5, 17, 12)
     T = 2
     u, v, w = fields(shape, seed=3)
     p = default_params(shape[2])
     full = advect_fused(u, v, w, p, T=T, dt=DT)
     for y_tile in (5, 7, 64):
-        tiled = advect_fused(u, v, w, p, T=T, dt=DT, y_tile=y_tile)
+        tiled = advect_fused(u, v, w, p, T=T, dt=DT, y_tile=y_tile,
+                             tiling=tiling)
         err = max(float(jnp.max(jnp.abs(a - b)))
                   for a, b in zip(full, tiled))
-        assert err == 0.0, (y_tile, err)
+        assert err == 0.0, (tiling, y_tile, err)
 
 
 def test_fused_boundary_cells_frozen():

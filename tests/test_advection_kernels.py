@@ -52,9 +52,17 @@ def test_wide_requires_alignment():
     u, v, w = fields((4, 16, 128), jnp.float32)
     out = advect_wide(u, v, w, default_params(128))
     assert out[0].shape == (4, 16, 128)
-    # tiled blocks (tile+halo rows) can never satisfy the sublane contract
+    # HOST-tiled blocks (tile+halo rows) can never satisfy the sublane
+    # contract; the in-grid path keeps it per-tile (sublane-rounded halo)
+    # but still rejects non-sublane tile sizes
     with pytest.raises(ValueError):
-        advect_wide(u, v, w, default_params(128), y_tile=8)
+        advect_wide(u, v, w, default_params(128), y_tile=8, tiling="host")
+    with pytest.raises(ValueError):
+        advect_wide(u, v, w, default_params(128), y_tile=12)
+    # y_tile=8 on Y=16 cannot fit a slab (8 + 2*8 > 16): falls back untiled
+    tiled = advect_wide(u, v, w, default_params(128), y_tile=8)
+    for a, b in zip(out, tiled):
+        assert float(jnp.max(jnp.abs(a - b))) == 0.0
 
 
 def test_f64_oracle_bounds_f32_error():
@@ -144,18 +152,20 @@ def test_traffic_model_ladder():
     assert b_wide / (X * Y * 128) < b_flow / (X * Y * 64)
 
 
+@pytest.mark.parametrize("tiling", ["grid", "host"])
 @pytest.mark.parametrize("name,fn", VARIANTS)
-def test_source_kernels_ytiled_match_untiled(name, fn):
-    """Y-tiling (halo-1 blocks) restitches to the exact untiled sources,
-    including a tile size that does not divide Y."""
+def test_source_kernels_ytiled_match_untiled(name, fn, tiling):
+    """Y-tiling — in-grid (2D (y_tile, x) grid) and host-side (halo-1
+    blocks) alike — restitches to the exact untiled sources, including a
+    tile size that does not divide Y."""
     shape = (5, 14, 16)
     u, v, w = fields(shape, jnp.float32, seed=7)
     p = default_params(shape[2])
     full = fn(u, v, w, p)
     for y_tile in (4, 5):
-        tiled = fn(u, v, w, p, y_tile=y_tile)
+        tiled = fn(u, v, w, p, y_tile=y_tile, tiling=tiling)
         err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(full, tiled))
-        assert err == 0.0, (name, y_tile, err)
+        assert err == 0.0, (name, tiling, y_tile, err)
 
 
 def test_flops_per_cell_measured():

@@ -52,33 +52,86 @@ def test_ladder_strictly_reduces_traffic(Z):
 @pytest.mark.parametrize("T", [2, 4, 8])
 def test_fused_amortisation_acceptance(T):
     """Acceptance: fused(T) moves >= 0.75*T x less than dataflow for the
-    same number of steps even with Y-tiling halo overhead (so >= 3x from
-    T=4, the headline criterion)."""
+    same number of steps even with HOST-tiling halo overhead (so >= 3x from
+    T=4, the headline criterion); the in-grid path amortises exactly T."""
     X, Y, Z = 512, 512, 64
     base = hbm_bytes_model(X, Y, Z, 4, "dataflow", T=T)
-    fused = hbm_bytes_model(X, Y, Z, 4, "fused", T=T, y_tile=128)
-    ratio = base / fused
+    fused_host = hbm_bytes_model(X, Y, Z, 4, "fused", T=T, y_tile=128,
+                                 grid_tiled=False)
+    ratio = base / fused_host
     assert ratio >= T * 0.75, (T, ratio)
     if T >= 4:
         assert ratio >= 3.0, (T, ratio)
-    # untiled fused amortises exactly T (no halo overlap)
+    # untiled fused amortises exactly T (no halo overlap) — and so does the
+    # in-grid tiled path, whose halo re-reads are a VMEM, not HBM, cost
     assert hbm_bytes_model(X, Y, Z, 4, "dataflow", T=T) \
         == hbm_bytes_model(X, Y, Z, 4, "fused", T=T) * T
+    assert base == hbm_bytes_model(X, Y, Z, 4, "fused", T=T, y_tile=128,
+                                   grid_tiled=True) * T
 
 
 def test_y_tile_overhead_accounting():
-    """Tiling adds exactly the halo rows, charged on BOTH sides (each tile's
-    kernel re-reads and re-writes its halo): 2*halo rows per interior tile
-    boundary, halo=T for fused and 1 for the source variants."""
+    """HOST tiling adds exactly the halo rows, charged on BOTH sides (each
+    block's kernel re-reads and re-writes its halo): 2*halo rows per
+    interior tile boundary, halo=T for fused and 1 for the source
+    variants. The in-grid path charges none of it."""
     X, Y, Z, T = 16, 256, 128, 4
     untiled = hbm_bytes_model(X, Y, Z, 4, "fused", T=T)
-    tiled = hbm_bytes_model(X, Y, Z, 4, "fused", T=T, y_tile=64)
+    tiled = hbm_bytes_model(X, Y, Z, 4, "fused", T=T, y_tile=64,
+                            grid_tiled=False)
     n_tiles = 4
     halo_rows = 2 * T * (n_tiles - 1)
     assert tiled - untiled == 2 * 3 * X * halo_rows * Z * 4  # read + write
     d_untiled = hbm_bytes_model(X, Y, Z, 4, "dataflow")
-    d_tiled = hbm_bytes_model(X, Y, Z, 4, "dataflow", y_tile=64)
+    d_tiled = hbm_bytes_model(X, Y, Z, 4, "dataflow", y_tile=64,
+                              grid_tiled=False)
     assert d_tiled - d_untiled == 2 * 3 * X * 2 * 1 * (n_tiles - 1) * Z * 4
+
+
+def test_grid_tiled_charges_zero_hbm_halo_overlap():
+    """The in-grid (y_tile, x) path: HBM bytes equal the untiled compulsory
+    traffic for EVERY tile size — halo overlap relocates to the VMEM term —
+    and are strictly below the host-tiled bytes whenever y_tile < Y."""
+    from repro.kernels.advection.advection import vmem_halo_bytes_model
+    X, Y, Z = 16, 256, 128
+    for variant, T in (("blocked", 1), ("dataflow", 1), ("wide", 2),
+                       ("fused", 4)):
+        untiled = hbm_bytes_model(X, Y, Z, 4, variant, T=T)
+        # wide's sweep keeps the sublane contract the model now enforces
+        tiles = (32, 64, 96, 256) if variant == "wide" else (32, 64, 100, 256)
+        for y_tile in tiles:
+            grid = hbm_bytes_model(X, Y, Z, 4, variant, T=T, y_tile=y_tile,
+                                   grid_tiled=True)
+            assert grid == untiled, (variant, y_tile)
+            vmem = vmem_halo_bytes_model(X, Y, Z, 4, variant, T=T,
+                                         y_tile=y_tile)
+            if y_tile < Y:
+                if variant != "wide":   # wide has no host path to compare
+                    host = hbm_bytes_model(X, Y, Z, 4, variant, T=T,
+                                           y_tile=y_tile, grid_tiled=False)
+                    assert grid < host, (variant, y_tile)
+                assert vmem > 0, (variant, y_tile)
+            else:
+                assert vmem == 0, (variant, y_tile)
+    # the relocated read-side halo bytes match the host model's read overlap
+    n_tiles, halo = 4, 1
+    vmem = vmem_halo_bytes_model(X, Y, Z, 4, "dataflow", y_tile=64)
+    assert vmem == 3 * X * 2 * halo * (n_tiles - 1) * Z * 4
+
+
+def test_fuse_update_accounting():
+    """fuse_update=False charges the separate Euler-update pass (read field
+    + read source + write field per field per step); fused kernels and
+    fuse_update=True kernels do not pay it."""
+    X, Y, Z, T = 16, 64, 128, 3
+    for variant in ("blocked", "dataflow", "wide", "pointwise"):
+        fused_upd = hbm_bytes_model(X, Y, Z, 4, variant, T=T)
+        unfused = hbm_bytes_model(X, Y, Z, 4, variant, T=T,
+                                  fuse_update=False)
+        assert unfused - fused_upd == T * 3 * 3 * X * Y * Z * 4, variant
+    # v4 fuses the update by construction: the flag is a no-op there
+    assert hbm_bytes_model(X, Y, Z, 4, "fused", T=T, fuse_update=False) \
+        == hbm_bytes_model(X, Y, Z, 4, "fused", T=T)
 
 
 def test_hbm_bytes_model_rejects_unknown_variant():
@@ -87,12 +140,38 @@ def test_hbm_bytes_model_rejects_unknown_variant():
 
 
 def test_hbm_bytes_model_mirrors_wide_tiling_contract():
-    """advect_wide refuses y_tile, so the model must not price it."""
+    """advect_wide refuses HOST y-tiling and non-sublane tiles, so the
+    models must not price either; the in-grid path keeps the sublane
+    contract per-tile and is priced."""
+    from repro.kernels.advection.advection import vmem_halo_bytes_model
     with pytest.raises(ValueError):
-        hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=16)
-    # degenerate tile (>= Y) is the untiled path and stays legal
-    assert hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=64) \
+        hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=16, grid_tiled=False)
+    with pytest.raises(ValueError):   # non-sublane tile: no execution path
+        hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=12)
+    with pytest.raises(ValueError):
+        vmem_halo_bytes_model(8, 64, 128, 4, "wide", y_tile=12)
+    assert hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=16) \
         == hbm_bytes_model(8, 64, 128, 4, "wide")
+    # degenerate tile (>= Y) is the untiled path and stays legal either way
+    assert hbm_bytes_model(8, 64, 128, 4, "wide", y_tile=64,
+                           grid_tiled=False) \
+        == hbm_bytes_model(8, 64, 128, 4, "wide")
+
+
+def test_host_overlap_factor_matches_roofline_factor():
+    """One geometry, two surfaces: hbm_bytes_model's host-tiled overlap and
+    roofline.stencil_tiling_bytes_factor must agree exactly — this pins the
+    two implementations together against drift."""
+    X, Z = 8, 128
+    for Y, y_tile in ((256, 64), (256, 100), (512, 128)):
+        for variant, T in (("blocked", 2), ("dataflow", 3), ("fused", 4)):
+            halo = T if variant == "fused" else 1
+            host = hbm_bytes_model(X, Y, Z, 4, variant, T=T, y_tile=y_tile,
+                                   grid_tiled=False)
+            untiled = hbm_bytes_model(X, Y, Z, 4, variant, T=T)
+            f = R.stencil_tiling_bytes_factor(Y, y_tile, halo,
+                                              grid_tiled=False)
+            assert host == pytest.approx(untiled * f), (variant, Y, y_tile)
 
 
 def test_register_bytes_model():
@@ -145,6 +224,26 @@ def test_stencil_ai_scales_linearly_in_T(fpc, bpc, T):
 def test_stencil_ai_rejects_bad_T():
     with pytest.raises(ValueError):
         R.stencil_arithmetic_intensity(53.0, 8.0, fusion_T=0)
+
+
+def test_stencil_tiling_bytes_factor():
+    """In-grid tiling keeps AI at the compulsory-traffic value; host tiling
+    deflates it by exactly the halo restaging factor."""
+    Y, y_tile, halo = 256, 64, 4
+    assert R.stencil_tiling_bytes_factor(Y, y_tile, halo) == 1.0
+    assert R.stencil_tiling_bytes_factor(Y, None, halo, grid_tiled=False) \
+        == 1.0
+    f = R.stencil_tiling_bytes_factor(Y, y_tile, halo, grid_tiled=False)
+    assert f == pytest.approx((Y + 2 * halo * 3) / Y)
+    ai = R.stencil_arithmetic_intensity(53.0, 32.0, fusion_T=4)
+    ai_host = R.stencil_arithmetic_intensity(53.0, 32.0, fusion_T=4,
+                                             tiling_bytes_factor=f)
+    assert ai_host == pytest.approx(ai / f)
+    # a deflated AI can only push the required fusion depth up
+    assert R.stencil_ridge_T(53.0, 32.0, tiling_bytes_factor=f) \
+        >= R.stencil_ridge_T(53.0, 32.0)
+    with pytest.raises(ValueError):
+        R.stencil_arithmetic_intensity(53.0, 32.0, tiling_bytes_factor=0.5)
 
 
 def test_stencil_ridge_T_crosses_ridge():

@@ -96,3 +96,46 @@ def test_fused_distributed_step_matches_oracle():
                             "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout
+
+
+KERNEL_CODE = textwrap.dedent("""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.stencil.distributed import (make_distributed_step,
+                                           reference_global_step)
+    from repro.stencil.advection import stratus_fields
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import compat_make_mesh
+
+    # local_kernel="fused": the per-shard slab streams through the v4
+    # Pallas kernel (global-interior mask freezing the wrapped rows),
+    # composed with the kernel's in-grid (y_tile, x) tiling.
+    mesh = compat_make_mesh((4,), ("data",))
+    sh = NamedSharding(mesh, P(None, "data", None))
+    for (X, Y, Z) in [(6, 16, 12), (5, 24, 16)]:
+        for T in (1, 2, 4):
+            for y_tile in (None, 3):
+                u, v, w = stratus_fields(X, Y, Z)
+                p = default_params(Z)
+                fn = make_distributed_step(mesh, p, T=T, dt=0.01,
+                                           local_kernel="fused",
+                                           y_tile=y_tile)
+                out = fn(*(jax.device_put(t, sh) for t in (u, v, w)))
+                ref = reference_global_step(u, v, w, p, T=T, dt=0.01)
+                err = max(float(jnp.max(jnp.abs(a - b)))
+                          for a, b in zip(out, ref))
+                assert err < 1e-5, (X, Y, Z, T, y_tile, err)
+    print("OK")
+""")
+
+
+def test_distributed_step_fused_local_kernel_matches_oracle():
+    r = subprocess.run([sys.executable, "-c", KERNEL_CODE],
+                       capture_output=True, text=True, cwd=".", timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
