@@ -117,6 +117,41 @@ def stencil_tiling_bytes_factor(Y: int, y_tile: Optional[int], halo: int,
     return (Y + 2 * halo * (n_tiles - 1)) / Y
 
 
+def halo_wire_bytes_model(X: int, Y: int, Z: int, itemsize: int, *,
+                          nx: int = 1, ny: int = 1, T: int = 1,
+                          n_fields: int = 3) -> int:
+    """Per-shard bytes SENT on the wire for ONE depth-T halo exchange of
+    the 2D (nx, ny)-decomposed stencil step (one exchange per T substeps).
+
+    The exchange is two-phase, x-then-y (`stencil.distributed.
+    make_distributed_step`): phase 1 trades ``2 * T * (Y/ny) * Z`` x-planes
+    of the raw shard along the x ring; phase 2 trades ``2 * T *
+    (X/nx + 2T) * Z`` y-rows of the x-EXTENDED slab — the extra ``2T``
+    columns are the four corner blocks riding phase 2, so no diagonal
+    sends exist to price. An undecomposed axis (nx==1 / ny==1) moves
+    nothing. Multi-hop depth-T exchanges send the same byte total (hop k
+    carries the k-away neighbour's share), so the model is hop-count
+    independent; `stencil.distributed.count_exchange_wire_bytes` counts
+    the implementation's actual ppermute operands and the scaling2d
+    benchmark gates the two against each other exactly.
+
+    Feeds ``RooflineTerms.ici_wire_bytes`` -> ``collective_s``: divide a
+    step's wire bytes by T for the per-substep collective term.
+    """
+    if nx < 1 or ny < 1:
+        raise ValueError(f"mesh shape must be >= 1, got ({nx}, {ny})")
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
+    if X % nx or Y % ny:
+        raise ValueError(f"grid ({X}, {Y}) not divisible by mesh "
+                         f"({nx}, {ny}); shard_map requires even shards")
+    Xl, Yl = X // nx, Y // ny
+    phase_x = 2 * T * Yl * Z if nx > 1 else 0
+    x_ext = Xl + (2 * T if nx > 1 else 0)
+    phase_y = 2 * T * x_ext * Z if ny > 1 else 0
+    return (phase_x + phase_y) * n_fields * itemsize
+
+
 def stencil_arithmetic_intensity(flops_per_cell: float,
                                  bytes_per_cell_pass: float,
                                  fusion_T: int = 1,

@@ -384,7 +384,7 @@ def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True,
 # ---------------------------------------------------------------------------
 
 
-def _kernel_fused(t1_ref, t2_ref, ym_ref, u_ref, v_ref, w_ref,
+def _kernel_fused(t1_ref, t2_ref, xm_ref, ym_ref, u_ref, v_ref, w_ref,
                   ou_ref, ov_ref, ow_ref,
                   ubuf, vbuf, wbuf, *, X, Y, TY, S, T, dt):
     """T stacked 3-slice rings: level k holds the step-k fields.
@@ -405,7 +405,11 @@ def _kernel_fused(t1_ref, t2_ref, ym_ref, u_ref, v_ref, w_ref,
     `ym_ref` is the slab's row-interior mask (1.0 = the row's source may be
     applied); all-ones reproduces the plain boundary behaviour, while the
     distributed depth-T halo exchange passes its global-interior mask so
-    wrapped ppermute rows stay frozen walls.
+    wrapped ppermute rows stay frozen walls. `xm_ref` is the per-slice
+    analogue for the x dimension: slice j's sources are applied only when
+    xm[j] is nonzero, so a 2D (x, y) decomposition can freeze wrapped
+    x-halo planes the same way (the slab-edge wall at j=0 / j=X-1 stays
+    structural either way).
     """
     t = pl.program_id(0)
     i = pl.program_id(1)
@@ -422,7 +426,8 @@ def _kernel_fused(t1_ref, t2_ref, ym_ref, u_ref, v_ref, w_ref,
                 wbuf[k - 1, m], wbuf[k - 1, c], wbuf[k - 1, slot]]
         su, sv, sw = _source_slices(*args, 0.0 + t1_ref[0], t1_ref[1],
                                     t1_ref[2:], t2_ref[2:])
-        interior = (j >= 1) & (j <= X - 2)
+        x_ok = xm_ref[pl.ds(jnp.clip(j, 0, X - 1), 1)][0] > 0.0
+        interior = (j >= 1) & (j <= X - 2) & x_ok
         new = []
         for cen, s in ((args[1], su), (args[4], sv), (args[7], sw)):
             src = jnp.where(interior & row_ok, _pad_edges(s),
@@ -439,7 +444,8 @@ def _kernel_fused(t1_ref, t2_ref, ym_ref, u_ref, v_ref, w_ref,
 
 def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
                  interpret: bool = True, y_tile: int | None = None,
-                 tiling: str = "grid", y_interior_mask=None):
+                 tiling: str = "grid", y_interior_mask=None,
+                 x_interior_mask=None):
     """v4: advance the fields T explicit-Euler steps in ONE HBM pass.
 
     Returns the advanced `(u, v, w)` (not sources — the step is fused into
@@ -448,7 +454,9 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
     irrespective of Y. `y_interior_mask` (shape (Y,), nonzero = source may
     be applied) lets callers freeze extra rows beyond the domain edges —
     the distributed depth-T halo exchange uses it to wall off wrapped
-    ppermute rows while composing with in-grid tiles.
+    ppermute rows while composing with in-grid tiles. `x_interior_mask`
+    (shape (X,)) is the x-plane analogue, used by the 2D (x, y) mesh
+    decomposition to freeze wrapped x-halo planes.
     """
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
@@ -456,8 +464,8 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
     _check_y_tile(y_tile)
     X, Y, Z = u.shape
     if tiling == "host" and y_tile is not None and y_tile < Y:
-        if y_interior_mask is not None:
-            raise ValueError("y_interior_mask requires the grid-tiled path "
+        if y_interior_mask is not None or x_interior_mask is not None:
+            raise ValueError("interior masks require the grid-tiled path "
                              "(tiling='grid')")
         fn = lambda a, b, c: advect_fused(a, b, c, p, T=T, dt=dt,
                                           interpret=interpret)
@@ -468,6 +476,11 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
     if ym.shape != (Y,):
         raise ValueError(f"y_interior_mask must have shape ({Y},), "
                          f"got {ym.shape}")
+    xm = (jnp.ones((X,), jnp.float32) if x_interior_mask is None
+          else jnp.asarray(x_interior_mask, jnp.float32))
+    if xm.shape != (X,):
+        raise ValueError(f"x_interior_mask must have shape ({X},), "
+                         f"got {xm.shape}")
     in_spec = pl.BlockSpec((1, S, Z),
                            lambda t, i: (jnp.minimum(i, X - 1),
                                          _slab_lo(t, Y, TY, S, T), 0),
@@ -478,6 +491,7 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
                             indexing_mode=pl.Unblocked())
     ym_spec = pl.BlockSpec((S,), lambda t, i: (_slab_lo(t, Y, TY, S, T),),
                            indexing_mode=pl.Unblocked())
+    xm_spec = pl.BlockSpec((X,), lambda t, i: (0,))
     t1 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc1])
     t2 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc2])
     tz_spec = pl.BlockSpec((Z + 2,), lambda t, i: (0,))
@@ -485,13 +499,14 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
     fn = pl.pallas_call(
         functools.partial(_kernel_fused, X=X, Y=Y, TY=TY, S=S, T=T, dt=dt),
         grid=(n_ty, X + T),
-        in_specs=[tz_spec, tz_spec, ym_spec, in_spec, in_spec, in_spec],
+        in_specs=[tz_spec, tz_spec, xm_spec, ym_spec,
+                  in_spec, in_spec, in_spec],
         out_specs=[out_spec] * 3,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((T, 3, S, Z), u.dtype) for _ in range(3)],
         interpret=interpret,
     )
-    return fn(t1, t2, ym, u, v, w)
+    return fn(t1, t2, xm, ym, u, v, w)
 
 
 # ---------------------------------------------------------------------------

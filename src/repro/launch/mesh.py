@@ -22,6 +22,15 @@ def compat_make_mesh(shape, axes):
                          axis_types=(axis_type.Auto,) * len(axes))
 
 
+def make_stencil_mesh(nx: int, ny: int, *, x_axis: str = "x",
+                      y_axis: str = "y"):
+    """(nx, ny) device mesh for the 2D-decomposed stencil step: each shard
+    owns an (X/nx, Y/ny, Z) slab under
+    `stencil.distributed.make_distributed_step(axis=y_axis, x_axis=x_axis)`.
+    """
+    return compat_make_mesh((nx, ny), (x_axis, y_axis))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

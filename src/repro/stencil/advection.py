@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import roofline as R
 from repro.kernels.advection import advection as K
 from repro.kernels.advection import ref as REF
 
@@ -61,6 +62,10 @@ class AdvectionDomain:
                                       # "host": retained per-block loop
     fuse_update: bool = False         # v1-v3: fold f + dt*s into the kernel
     dt: float = 1.0
+    mesh_nx: int = 1                  # 2D (x, y) mesh decomposition shape,
+    mesh_ny: int = 1                  # for the per-shard accounting below
+                                      # (step() itself stays single-shard;
+                                      # make_distributed_step runs the mesh)
 
     def __post_init__(self):
         object.__setattr__(self, "params",
@@ -147,15 +152,13 @@ class AdvectionDomain:
         cells = (self.X - 2) * (self.Y - 2) * (self.Z - 2)
         return cells * REF.flops_per_cell() * self.substeps_per_step()
 
-    def hbm_bytes_per_step(self) -> int:
-        """Modelled HBM bytes per step() call (fused: per T-step pass).
-
-        Prices the configured execution path: in-grid vs host tiling, and
-        whether the Euler update is fused in-kernel or paid as a separate
-        full-field pass (always separate for `reference`).
-        """
+    def _hbm_bytes_pass(self, X: int, Y: int) -> int:
+        """One kernel pass over an (X, Y, Z) extent on the configured
+        execution path — the single pricing point `hbm_bytes_per_step`
+        (global) and `hbm_bytes_per_shard_step` (halo'd shard slab) share,
+        so the two can never desynchronise."""
         fused_upd = self.variant == "fused" or self.fuse_update
-        return K.hbm_bytes_model(self.X, self.Y, self.Z,
+        return K.hbm_bytes_model(X, Y, self.Z,
                                  jnp.dtype(self.dtype).itemsize,
                                  self.variant if self.variant != "reference"
                                  else "pointwise",
@@ -163,6 +166,15 @@ class AdvectionDomain:
                                  y_tile=self.y_tile,
                                  grid_tiled=self.tiling == "grid",
                                  fuse_update=fused_upd)
+
+    def hbm_bytes_per_step(self) -> int:
+        """Modelled HBM bytes per step() call (fused: per T-step pass).
+
+        Prices the configured execution path: in-grid vs host tiling, and
+        whether the Euler update is fused in-kernel or paid as a separate
+        full-field pass (always separate for `reference`).
+        """
+        return self._hbm_bytes_pass(self.X, self.Y)
 
     def vmem_halo_bytes_per_step(self) -> int:
         """Halo re-read bytes served from VMEM by the in-grid tiled path."""
@@ -175,6 +187,37 @@ class AdvectionDomain:
                                        else "pointwise",
                                        T=self.substeps_per_step(),
                                        y_tile=self.y_tile)
+
+    def shard_shape(self) -> Tuple[int, int]:
+        """Owned (Xl, Yl) per-shard dims on the (mesh_nx, mesh_ny) mesh."""
+        if self.mesh_nx < 1 or self.mesh_ny < 1:
+            raise ValueError(f"mesh shape must be >= 1, got "
+                             f"({self.mesh_nx}, {self.mesh_ny})")
+        if self.X % self.mesh_nx or self.Y % self.mesh_ny:
+            raise ValueError(
+                f"grid ({self.X}, {self.Y}) not divisible by mesh "
+                f"({self.mesh_nx}, {self.mesh_ny}); shard_map requires "
+                "even shards")
+        return self.X // self.mesh_nx, self.Y // self.mesh_ny
+
+    def hbm_bytes_per_shard_step(self) -> int:
+        """Per-shard HBM bytes per step(): the kernel pass over the halo'd
+        (Xl+2T, Yl+2T, Z) shard slab `make_distributed_step` streams — the
+        quantity that must FALL as the mesh grows for the 268M grid to
+        become per-device feasible (the scaling2d gate)."""
+        Xl, Yl = self.shard_shape()
+        T = self.substeps_per_step()
+        Xs = Xl + (2 * T if self.mesh_nx > 1 else 0)
+        Ys = Yl + (2 * T if self.mesh_ny > 1 else 0)
+        return self._hbm_bytes_pass(Xs, Ys)
+
+    def halo_wire_bytes_per_step(self) -> int:
+        """Per-shard wire bytes for the ONE depth-T exchange a distributed
+        step() performs (zero on a 1x1 mesh)."""
+        return R.halo_wire_bytes_model(self.X, self.Y, self.Z,
+                                       jnp.dtype(self.dtype).itemsize,
+                                       nx=self.mesh_nx, ny=self.mesh_ny,
+                                       T=self.substeps_per_step())
 
     def vmem_register_bytes(self) -> int:
         """VMEM shift-register footprint of the current configuration."""

@@ -1,28 +1,56 @@
 """Distributed PW advection: halo exchange overlapped with interior compute.
 
 The paper's §IV overlap (DMA chunks vs kernel pool) maps chip-to-chip on TPU:
-the y-decomposed domain needs depth-1 halos, exchanged with
+the decomposed domain needs depth-1 halos, exchanged with
 `lax.ppermute` while the *interior* — which needs no halo — computes.
 The data dependence is structured so XLA can schedule the collective-permute
 concurrently with the interior stencil (interior result does not consume the
-permuted edges), then the two boundary y-rows are patched.
+permuted edges), then the boundary bands are patched.
 
 Temporal fusion (the v4 kernel) makes the halo depth T-dependent:
 `make_distributed_step(..., T=...)` exchanges T rows per side ONCE, then
 advances T Euler substeps on the halo'd slab before trimming — amortising
 both the HBM pass *and* the collective over T steps (each step contaminates
 one more halo row, so depth-T halos are exactly consumed after T substeps).
+When T exceeds a shard's local extent the exchange goes multi-hop: hop k is
+a distance-k ppermute fetching the k-away neighbour's share directly, so
+ceil(T/local) permutes per side move exactly T rows total.
 
-`local_kernel="fused"` runs that per-shard slab update through the v4
+2D (x, y) decomposition: pass `x_axis=` and each shard owns an
+(X/nx, Y/ny, Z) slab. The exchange is two-phase, X-THEN-Y: phase 1 trades
+depth-T x-planes of the raw shard along the x ring; phase 2 trades depth-T
+y-rows of the x-EXTENDED slab along the y ring. The corner contract lives
+entirely in that ordering — a y-neighbour's x-extended rows already contain
+its x-halo columns, so the four (T, T, Z) corner blocks ride phase 2 and no
+diagonal (8-neighbour) communication is ever issued. Reordering the phases
+(or exchanging y on the unextended slab) silently zeroes the corners; the
+scaling2d benchmark's counted-vs-modelled wire-byte gate and the corner
+regression test pin the contract.
+
+`local_kernel="fused"` runs the per-shard slab update through the v4
 Pallas kernel instead of the jnp reference loop, composing the depth-T
 exchange with the kernel's in-grid `(y_tile, x)` tiling: the shard's slab
 streams through ONE kernel launch whose VMEM register is bounded by
-`y_tile` while the wrapped (periodic-ppermute) rows are frozen via the
-kernel's `y_interior_mask` — the same global-interior mask the reference
-loop applies per substep.
+`y_tile` while the wrapped (periodic-ppermute) rows/planes are frozen via
+the kernel's `(x_interior_mask, y_interior_mask)` — the same
+global-interior masks the reference loop applies per substep.
 
-Runs under `shard_map` over the `data` axis of any mesh (smoke-tested on the
-host mesh; the production mesh shards y 16-way per pod).
+`overlap=True` splits each shard's update into an interior pass (owned
+slab only — no data dependence on any ppermute, so XLA may schedule it
+concurrently with both exchange phases, the multi-device analogue of the
+paper's DMA/compute overlap) and a boundary pass on the halo'd slab; the
+T-deep bands adjacent to a cut are then selected from the boundary pass,
+everything else from the interior pass.
+
+check_rep caveat: `pallas_call` has no shard_map replication rule on the
+pinned jax, so any `local_kernel="fused"` step is built with
+`check_rep=False`. Outputs are fully sharded along the mesh axes anyway, so
+no replication information is lost — but shard_map will no longer error if
+a future edit accidentally consumes an unreduced value; the distributed
+equivalence tests are the guard.
+
+Runs under `shard_map` over any mesh axes (smoke-tested on the host mesh;
+`launch.mesh.make_stencil_mesh` builds the (nx, ny) production shape).
 """
 from __future__ import annotations
 
@@ -31,6 +59,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -39,18 +68,43 @@ from repro.kernels.advection.ref import (AdvectParams, pw_advect_ref,
                                          pw_step_ref)
 
 
-def _exchange_halos(f, axis: str, n: int, depth: int = 1):
-    """Send my edge y-rows to neighbours; receive theirs. Returns (lo, hi).
+def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
+    """Fetch `depth` rows (dim=1) or planes (dim=0) per side from the ring
+    of shards on mesh axis `axis`. Returns (hi_from_prev, lo_from_next):
+    hi = the `depth` rows just below my slab (tails of my predecessors),
+    lo = the `depth` rows just above it (heads of my successors).
 
-    lo = neighbour's last `depth` rows (go below my slab), hi = their first.
-    `n` is the static axis size (jax.lax.axis_size is not available on the
-    pinned jax, and ppermute's pair table must be static anyway).
+    Multi-hop: when `depth` exceeds the local extent L, hop k (a
+    distance-k ppermute with a static pair table — `n` is passed in
+    because `jax.lax.axis_size` does not exist on the pinned jax) fetches
+    the k-away neighbour's share directly: hop 1 moves min(L, depth) rows,
+    hop k moves min(L, depth-(k-1)L), so ceil(depth/L) permutes per side
+    carry exactly `depth` rows total — bytes-on-wire are hop-count
+    independent. The ring is periodic; rows that wrap past the global
+    domain carry wrong data by construction and MUST be frozen by the
+    caller's global-interior mask.
     """
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-    bwd = [(i, (i - 1) % n) for i in range(n)]
-    hi_from_prev = jax.lax.ppermute(f[:, -depth:, :], axis, fwd)  # top -> next
-    lo_from_next = jax.lax.ppermute(f[:, :depth, :], axis, bwd)   # bottom -> prev
-    return hi_from_prev, lo_from_next
+    L = f.shape[dim]
+    hops = -(-depth // L)
+
+    def part(g, lo, hi):
+        idx = [slice(None)] * g.ndim
+        idx[dim] = slice(lo, hi)
+        return g[tuple(idx)]
+
+    hi_parts, lo_parts = [], []
+    for k in range(1, hops + 1):
+        cnt = min(L, depth - (k - 1) * L)
+        fwd = [(i, (i + k) % n) for i in range(n)]
+        bwd = [(i, (i - k) % n) for i in range(n)]
+        # tail of the k-away predecessor -> me; head of the k-away successor
+        hi_parts.append(jax.lax.ppermute(part(f, L - cnt, L), axis, fwd))
+        lo_parts.append(jax.lax.ppermute(part(f, 0, cnt), axis, bwd))
+    if hops == 1:
+        return hi_parts[0], lo_parts[0]
+    # hi: farthest predecessor first so global coordinates stay ascending
+    return (jnp.concatenate(hi_parts[::-1], axis=dim),
+            jnp.concatenate(lo_parts, axis=dim))
 
 
 def make_distributed_advect(mesh: Mesh, params: AdvectParams,
@@ -98,28 +152,52 @@ def make_distributed_advect(mesh: Mesh, params: AdvectParams,
 
 
 def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
-                          axis: str = "data", T: int = 1, dt: float = 1.0,
+                          axis: str = "data", x_axis: Optional[str] = None,
+                          T: int = 1, dt: float = 1.0,
                           local_kernel: str = "reference",
                           y_tile: Optional[int] = None,
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          overlap: bool = False):
     """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
 
-    The wrapped ppermute is periodic, so the first/last shard's outer halo
-    rows carry wrapped (wrong) data — but every substep masks the source to
-    zero outside the *global* interior, and a depth-1 stencil cannot carry
+    `axis` is the mesh axis decomposing y. With `x_axis` the step runs on a
+    2D (x, y) device mesh — each shard owns an (X/nx, Y/ny, Z) slab and the
+    exchange is the two-phase x-then-y ordering described in the module
+    docstring (corners ride phase 2; no diagonal sends). An axis of size 1
+    exchanges nothing along that direction.
+
+    The wrapped ppermute is periodic, so shards at the global edges receive
+    wrapped (wrong) halo data — but every substep masks the source to zero
+    outside the *global* interior, and a depth-1 stencil cannot carry
     values past an unchanging row: the global-boundary row is a wall, the
-    wrapped rows never contaminate the trimmed result.
+    wrapped rows never contaminate the trimmed result. The same mask
+    argument lifts the old single-hop T <= local-extent restriction: the
+    multi-hop `_exchange_halos` fetches arbitrarily deep halos, so the only
+    hard bound left is T <= global extent - 2 along each decomposed axis
+    (beyond that no interior cell exists whose depth-T cone the ring can
+    serve).
 
     `local_kernel` selects the per-shard slab update: "reference" is the
     jnp T-substep loop; "fused" streams the slab through the v4 Pallas
     kernel (one HBM pass for all T substeps), passing the global-interior
-    mask as the kernel's `y_interior_mask` and composing with the kernel's
-    in-grid `(y_tile, x)` tiling via `y_tile` — the shard slab keeps a
-    VMEM-bounded register no matter how wide the shard is.
+    masks as the kernel's `(x_interior_mask, y_interior_mask)` and
+    composing with the kernel's in-grid `(y_tile, x)` tiling via `y_tile`
+    — the shard slab keeps a VMEM-bounded register no matter how wide the
+    shard is.
 
-    Wire cost: T rows per neighbour per exchange, so bytes-on-wire per
-    substep are flat in T while the exchange *count* falls as 1/T —
-    latency-bound small halos amortise T×.
+    `overlap=True` additionally computes the halo-independent interior of
+    each shard in a pass that consumes NO ppermute output, so XLA is free
+    to run it concurrently with both exchange phases (the paper's §IV
+    DMA/compute overlap, chip-to-chip); only the T-deep boundary bands then
+    wait on the exchange. The boundary pass covers the whole slab (the
+    repo's established overlap idiom, cf. `make_distributed_advect`) — the
+    cost is one extra local pass, the win is that the exchange latency is
+    hidden behind a full interior update.
+
+    Wire cost: T rows per neighbour per exchange (per `roofline.
+    halo_wire_bytes_model`), so bytes-on-wire per substep are flat in T
+    while the exchange *count* falls as 1/T — latency-bound small halos
+    amortise T×.
     """
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
@@ -127,48 +205,145 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
         raise ValueError(f"local_kernel must be 'reference' or 'fused', "
                          f"got {local_kernel!r}")
 
-    n_shards = mesh.shape[axis]
+    n_y = mesh.shape[axis]
+    n_x = mesh.shape[x_axis] if x_axis is not None else 1
+
+    def _substeps(us, vs, ws, x_int, y_int, tile):
+        """T masked Euler substeps on a (halo'd) slab; None mask = all-interior
+        (the slab edge is then the true boundary, walled structurally)."""
+        if local_kernel == "fused":
+            return K.advect_fused(
+                us, vs, ws, params, T=T, dt=dt, interpret=interpret,
+                y_tile=tile,
+                x_interior_mask=(None if x_int is None
+                                 else x_int.astype(jnp.float32)),
+                y_interior_mask=(None if y_int is None
+                                 else y_int.astype(jnp.float32)))
+        m = jnp.ones((), jnp.bool_)
+        if x_int is not None:
+            m = m & x_int[:, None, None]
+        if y_int is not None:
+            m = m & y_int[None, :, None]
+        for _ in range(T):
+            su, sv, sw = pw_advect_ref(us, vs, ws, params)
+            us = us + dt * jnp.where(m, su, 0.0)
+            vs = vs + dt * jnp.where(m, sv, 0.0)
+            ws = ws + dt * jnp.where(m, sw, 0.0)
+        return us, vs, ws
 
     def local(u, v, w):
-        n = n_shards
-        idx = jax.lax.axis_index(axis)
-        if T > u.shape[1]:
+        Xl, Yl, Z = u.shape
+        X_g, Y_g = n_x * Xl, n_y * Yl
+        dx = T if n_x > 1 else 0
+        dy = T if n_y > 1 else 0
+        if dy and T > Y_g - 2:
             raise ValueError(
-                f"halo depth T={T} exceeds the local shard width "
-                f"{u.shape[1]} (single-hop exchange); lower T or use "
-                "fewer shards")
-        halos = [_exchange_halos(f, axis, n, depth=T) for f in (u, v, w)]
+                f"halo depth T={T} exceeds the decomposable global Y "
+                f"extent ({Y_g} rows, interior {Y_g - 2}); lower T")
+        if dx and T > X_g - 2:
+            raise ValueError(
+                f"halo depth T={T} exceeds the decomposable global X "
+                f"extent ({X_g} planes, interior {X_g - 2}); lower T")
+        iy = jax.lax.axis_index(axis)
+        ix = jax.lax.axis_index(x_axis) if dx else None
 
-        def slab(f, h):
-            prev_hi, next_lo = h
-            return jnp.concatenate([prev_hi, f, next_lo], axis=1)
+        # ---- two-phase exchange: x first, then y on the x-extended slab
+        # (phase 2's rows carry phase 1's corner columns — see module doc)
+        fields = (u, v, w)
+        if dx:
+            xh = [_exchange_halos(f, x_axis, n_x, depth=T, dim=0)
+                  for f in fields]
+            fields = tuple(jnp.concatenate([h[0], f, h[1]], axis=0)
+                           for f, h in zip(fields, xh))
+        if dy:
+            yh = [_exchange_halos(f, axis, n_y, depth=T, dim=1)
+                  for f in fields]
+            fields = tuple(jnp.concatenate([h[0], f, h[1]], axis=1)
+                           for f, h in zip(fields, yh))
 
-        us, vs, ws = (slab(f, h) for f, h in zip((u, v, w), halos))
-        Yl = u.shape[1]
-        gy = idx * Yl - T + jnp.arange(Yl + 2 * T)   # global row per slab row
-        interior_y = (gy >= 1) & (gy <= n * Yl - 2)
-        if local_kernel == "fused":
-            us, vs, ws = K.advect_fused(
-                us, vs, ws, params, T=T, dt=dt, interpret=interpret,
-                y_tile=y_tile,
-                y_interior_mask=interior_y.astype(jnp.float32))
-        else:
-            m = interior_y[None, :, None]
-            for _ in range(T):
-                su, sv, sw = pw_advect_ref(us, vs, ws, params)
-                us = us + dt * jnp.where(m, su, 0.0)
-                vs = vs + dt * jnp.where(m, sv, 0.0)
-                ws = ws + dt * jnp.where(m, sw, 0.0)
-        return tuple(f[:, T:T + Yl, :] for f in (us, vs, ws))
+        # ---- global-interior masks over the slab coordinates
+        x_int = y_int = None
+        if dx:
+            gx = ix * Xl - dx + jnp.arange(Xl + 2 * dx)
+            x_int = (gx >= 1) & (gx <= X_g - 2)
+        if dy:
+            gy = iy * Yl - dy + jnp.arange(Yl + 2 * dy)
+            y_int = (gy >= 1) & (gy <= Y_g - 2)
 
-    spec = P(None, axis, None)
+        # ---- boundary pass (consumes the exchange), trimmed to owned rows
+        us, vs, ws = _substeps(*fields, x_int, y_int, y_tile)
+        out = tuple(f[dx:dx + Xl, dy:dy + Yl, :] for f in (us, vs, ws))
+        if not (overlap and (dx or dy)):
+            return out
+
+        # ---- interior pass: owned slab only, no ppermute dependence.
+        # Shard-cut edges act as walls contaminating < T cells inward; the
+        # select below discards exactly those bands.
+        ox_int = oy_int = None
+        if dx:
+            ogx = ix * Xl + jnp.arange(Xl)
+            ox_int = (ogx >= 1) & (ogx <= X_g - 2)
+        if dy:
+            ogy = iy * Yl + jnp.arange(Yl)
+            oy_int = (ogy >= 1) & (ogy <= Y_g - 2)
+        inner = _substeps(u, v, w, ox_int, oy_int, y_tile)
+        sx = jnp.arange(Xl)
+        ok_x = jnp.ones((Xl,), jnp.bool_) if not dx else (
+            ((ix == 0) | (sx >= T)) & ((ix == n_x - 1) | (sx < Xl - T)))
+        sy = jnp.arange(Yl)
+        ok_y = jnp.ones((Yl,), jnp.bool_) if not dy else (
+            ((iy == 0) | (sy >= T)) & ((iy == n_y - 1) | (sy < Yl - T)))
+        sel = (ok_x[:, None] & ok_y[None, :])[:, :, None]
+        return tuple(jnp.where(sel, i, b) for i, b in zip(inner, out))
+
+    spec = (P(None, axis, None) if x_axis is None
+            else P(x_axis, axis, None))
     # pallas_call has no shard_map replication rule on this jax; the fused
     # local kernel therefore needs check_rep=False (outputs are fully
-    # sharded along `axis` anyway, so nothing is lost)
+    # sharded along the mesh axes anyway, so nothing is lost — see the
+    # module-docstring caveat)
     fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
                    out_specs=(spec, spec, spec),
                    check_rep=local_kernel != "fused")
     return jax.jit(fn)
+
+
+def _iter_jaxprs(val):
+    core = jax.core
+    if isinstance(val, core.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, core.Jaxpr):
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _iter_jaxprs(v)
+
+
+def count_exchange_wire_bytes(fn, *args) -> int:
+    """Per-shard bytes `fn` puts on the wire: the summed operand sizes of
+    every `ppermute` in its (recursively walked) jaxpr.
+
+    Inside `shard_map` tracing shapes are per-shard, so each ppermute
+    operand is exactly one shard's send buffer. This is the measured
+    counterpart of `roofline.halo_wire_bytes_model`; the scaling2d
+    benchmark gates the two against each other exactly.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    total = 0
+
+    def walk(jaxpr):
+        nonlocal total
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "ppermute":
+                for var in eqn.invars:
+                    aval = var.aval
+                    total += int(np.prod(aval.shape)) * aval.dtype.itemsize
+            for pval in eqn.params.values():
+                for sub in _iter_jaxprs(pval):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return total
 
 
 def reference_global(u, v, w, params: AdvectParams):

@@ -1,0 +1,23 @@
+"""Shared runner for multi-device subprocess tests.
+
+The device count must be fixed by XLA_FLAGS before jax initialises, so
+multi-device cases run their code in a child interpreter. The env contract
+lives HERE, once: JAX_PLATFORMS=cpu is pinned both in the child env and
+(belt-and-braces) by the code blocks themselves — without it the scrubbed
+env lets jax probe a TPU backend and libtpu burns ~2 minutes on
+GCP-metadata retries before the CPU fallback (the old timeout flake).
+"""
+import subprocess
+import sys
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+       "JAX_PLATFORMS": "cpu"}
+
+
+def run_ok(code: str, timeout: int = 600) -> None:
+    """Run `code` in a child interpreter; assert exit 0 and an OK sentinel
+    (so a child that dies before its asserts still fails the test)."""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=".", timeout=timeout, env=dict(ENV))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout, r.stdout[-2000:]

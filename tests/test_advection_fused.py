@@ -119,6 +119,51 @@ def test_domain_fused_step_and_advance():
         dom.sources(u, v, w)
 
 
+# --- x_interior_mask: the 2D-decomposition hook ----------------------------
+
+def test_fused_x_interior_mask_matches_masked_reference_loop():
+    """The kernel's per-slice x mask reproduces the 2D distributed halo
+    semantics: masked planes are frozen walls, exactly like the y row mask;
+    grid tiling does not change a bit of it; all-ones is a bitwise no-op."""
+    from repro.kernels.advection.ref import pw_advect_ref
+    X, Y, Z, T = 8, 12, 10, 3
+    u, v, w = fields((X, Y, Z), seed=8)
+    p = default_params(Z)
+    base = advect_fused(u, v, w, p, T=T, dt=DT)
+    ones = advect_fused(u, v, w, p, T=T, dt=DT,
+                        x_interior_mask=jnp.ones((X,)))
+    for a, b in zip(base, ones):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    xm = np.ones((X,), np.float32)
+    xm[:3] = 0.0                     # e.g. wrapped x-halo planes of a shard
+    m = jnp.asarray(xm)[:, None, None] > 0
+    us, vs, ws = u, v, w
+    for _ in range(T):
+        su, sv, sw = pw_advect_ref(us, vs, ws, p)
+        us = us + DT * jnp.where(m, su, 0.0)
+        vs = vs + DT * jnp.where(m, sv, 0.0)
+        ws = ws + DT * jnp.where(m, sw, 0.0)
+    out = advect_fused(u, v, w, p, T=T, dt=DT, x_interior_mask=jnp.asarray(xm))
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(out, (us, vs, ws)))
+    assert err < 1e-6, err
+    tiled = advect_fused(u, v, w, p, T=T, dt=DT, y_tile=4,
+                         x_interior_mask=jnp.asarray(xm))
+    for a, b in zip(tiled, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_x_interior_mask_contract_checks():
+    X, Y, Z = 6, 18, 8
+    u, v, w = fields((X, Y, Z), seed=9)
+    p = default_params(Z)
+    with pytest.raises(ValueError):   # shape must match X
+        advect_fused(u, v, w, p, T=2, x_interior_mask=jnp.ones((X + 1,)))
+    with pytest.raises(ValueError):   # host tiling cannot thread the mask
+        advect_fused(u, v, w, p, T=2, y_tile=6, tiling="host",
+                     x_interior_mask=jnp.ones((X,)))
+
+
 # --- VMEM budget: the Y-tiled register is bounded irrespective of Y --------
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half a v5e's 16 MiB VMEM, for head-

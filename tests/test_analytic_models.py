@@ -184,6 +184,76 @@ def test_register_bytes_model():
         == fused_register_bytes(2, 16, 8, 4)
 
 
+# --- halo_wire_bytes_model: the 2D-decomposition collective term ----------
+
+def test_halo_wire_bytes_model_geometry():
+    """x-then-y two-phase pricing: phase x moves raw-shard planes, phase y
+    moves x-EXTENDED rows (the 2T extra columns are the corner blocks), an
+    undecomposed axis moves nothing."""
+    X, Y, Z, item, T = 64, 32, 16, 4, 3
+    assert R.halo_wire_bytes_model(X, Y, Z, item, nx=1, ny=1, T=T) == 0
+    y_only = R.halo_wire_bytes_model(X, Y, Z, item, nx=1, ny=4, T=T)
+    assert y_only == 3 * item * 2 * T * X * Z          # rows are Xl == X wide
+    x_only = R.halo_wire_bytes_model(X, Y, Z, item, nx=4, ny=1, T=T)
+    assert x_only == 3 * item * 2 * T * Y * Z          # planes are Yl == Y
+    both = R.halo_wire_bytes_model(X, Y, Z, item, nx=4, ny=4, T=T)
+    Xl, Yl = X // 4, Y // 4
+    assert both == 3 * item * (2 * T * Yl * Z          # phase x
+                               + 2 * T * (Xl + 2 * T) * Z)   # phase y + corners
+    corner_term = 3 * item * 2 * T * 2 * T * Z
+    no_ext = 3 * item * (2 * T * Yl * Z + 2 * T * Xl * Z)
+    assert both - no_ext == corner_term
+
+
+def test_halo_wire_bytes_model_monotone_and_errors():
+    X, Y, Z, item = 64, 32, 16, 4
+    for T in (2, 3, 8):
+        assert R.halo_wire_bytes_model(X, Y, Z, item, nx=2, ny=2, T=T) \
+            > R.halo_wire_bytes_model(X, Y, Z, item, nx=2, ny=2, T=T - 1)
+    with pytest.raises(ValueError):
+        R.halo_wire_bytes_model(X, Y, Z, item, nx=3, ny=1)   # 64 % 3
+    with pytest.raises(ValueError):
+        R.halo_wire_bytes_model(X, Y, Z, item, nx=1, ny=5)
+    with pytest.raises(ValueError):
+        R.halo_wire_bytes_model(X, Y, Z, item, nx=0, ny=1)
+    with pytest.raises(ValueError):
+        R.halo_wire_bytes_model(X, Y, Z, item, T=0)
+
+
+def test_halo_wire_bytes_feed_collective_term():
+    """The modelled exchange bytes drive RooflineTerms.collective_s; deep
+    meshes on small shards eventually go collective-bound — the regime the
+    scaling2d sweep maps."""
+    wire = R.halo_wire_bytes_model(4096, 1024, 64, 4, nx=16, ny=16, T=8)
+    t = R.RooflineTerms(
+        flops_per_dev=1e6, hbm_bytes_per_dev=1e3,
+        ici_wire_bytes=wire, dcn_wire_bytes=0.0, n_chips=256)
+    assert t.collective_s == pytest.approx(wire / R.ICI_BW)
+    assert t.bound == "collective"
+
+
+def test_domain_per_shard_accounting():
+    from repro.stencil.advection import AdvectionDomain
+    one = AdvectionDomain(4096, 1024, 64, variant="fused", fuse_T=4,
+                          y_tile=128)
+    assert one.halo_wire_bytes_per_step() == 0
+    assert one.hbm_bytes_per_shard_step() == one.hbm_bytes_per_step()
+    prev = one.hbm_bytes_per_shard_step()
+    for nx, ny in ((2, 1), (2, 2), (4, 4), (16, 16)):
+        dom = AdvectionDomain(4096, 1024, 64, variant="fused", fuse_T=4,
+                              y_tile=128, mesh_nx=nx, mesh_ny=ny)
+        b = dom.hbm_bytes_per_shard_step()
+        assert b < prev, (nx, ny)     # strong scaling: per-shard pass falls
+        prev = b
+        assert dom.halo_wire_bytes_per_step() == R.halo_wire_bytes_model(
+            4096, 1024, 64, 4, nx=nx, ny=ny, T=4)
+        assert dom.shard_shape() == (4096 // nx, 1024 // ny)
+    with pytest.raises(ValueError):
+        AdvectionDomain(10, 8, 8, mesh_nx=3).shard_shape()
+    with pytest.raises(ValueError):
+        AdvectionDomain(10, 8, 8, mesh_ny=3).halo_wire_bytes_per_step()
+
+
 # --- pipeline_model invariants --------------------------------------------
 
 @settings(max_examples=100, deadline=None)

@@ -1,0 +1,70 @@
+"""Opt-in compiled-mode (interpret=False) smoke: does Mosaic accept the
+grid-tiled kernels' `pl.Unblocked` element offsets on real TPU tiling?
+(ROADMAP open item — everything else in the suite runs interpret-mode.)
+
+Off by default everywhere: set ``REPRO_COMPILED=1`` on a TPU host to run
+(`REPRO_COMPILED=1 python -m pytest -m compiled`). Without the env var, or
+on a non-TPU backend, the tests skip cleanly — so the fast tier stays
+green on CPU CI and the cases light up the moment a TPU is attached.
+"""
+import os
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.compiled
+
+_opted_in = pytest.mark.skipif(
+    os.environ.get("REPRO_COMPILED") != "1",
+    reason="compiled-mode smoke is opt-in: set REPRO_COMPILED=1 on a TPU "
+           "host")
+
+
+def _require_tpu():
+    import jax
+    if jax.default_backend() != "tpu":
+        pytest.skip("compiled-mode smoke needs a TPU backend (Mosaic); "
+                    f"got {jax.default_backend()!r}")
+
+
+@_opted_in
+@pytest.mark.parametrize("y_tile", [None, 8])
+def test_compiled_fused_grid_tiled_matches_interpret(y_tile):
+    """One tiny grid-tiled v4 launch with interpret=False: Mosaic must
+    lower the Unblocked element-offset BlockSpecs and reproduce the
+    interpret-mode result."""
+    _require_tpu()
+    import jax.numpy as jnp
+
+    from repro.kernels.advection.advection import advect_fused
+    from repro.kernels.advection.ref import default_params
+    from repro.stencil.advection import stratus_fields
+
+    X, Y, Z, T = 6, 24, 128, 2   # lane-aligned Z; slab fits VMEM easily
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    ref = advect_fused(u, v, w, p, T=T, dt=0.01, y_tile=y_tile,
+                       interpret=True)
+    out = advect_fused(u, v, w, p, T=T, dt=0.01, y_tile=y_tile,
+                       interpret=False)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@_opted_in
+def test_compiled_dataflow_grid_tiled_smoke():
+    _require_tpu()
+    from repro.kernels.advection.advection import advect_dataflow
+    from repro.kernels.advection.ref import default_params
+    from repro.stencil.advection import stratus_fields
+
+    X, Y, Z = 5, 16, 128
+    u, v, w = stratus_fields(X, Y, Z, seed=1)
+    p = default_params(Z)
+    ref = advect_dataflow(u, v, w, p, y_tile=4, interpret=True)
+    out = advect_dataflow(u, v, w, p, y_tile=4, interpret=False)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)

@@ -5,9 +5,9 @@ import pytest
 
 pytestmark = pytest.mark.slow  # multi-minute module; -m "slow or not slow"
 
-import subprocess
-import sys
 import textwrap
+
+from _subproc import run_ok
 
 CODE = textwrap.dedent("""
     import os
@@ -39,15 +39,7 @@ CODE = textwrap.dedent("""
 
 
 def test_halo_exchange_matches_oracle():
-    r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
-                       text=True, cwd=".", timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            # without this the scrubbed env lets jax probe a
-                            # TPU backend: ~2 min of libtpu metadata retries
-                            # before the CPU fallback — the old timeout flake
-                            "JAX_PLATFORMS": "cpu"})
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "OK" in r.stdout
+    run_ok(CODE, timeout=300)
 
 
 FUSED_CODE = textwrap.dedent("""
@@ -90,12 +82,7 @@ FUSED_CODE = textwrap.dedent("""
 
 
 def test_fused_distributed_step_matches_oracle():
-    r = subprocess.run([sys.executable, "-c", FUSED_CODE],
-                       capture_output=True, text=True, cwd=".", timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "JAX_PLATFORMS": "cpu"})
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "OK" in r.stdout
+    run_ok(FUSED_CODE, timeout=300)
 
 
 KERNEL_CODE = textwrap.dedent("""
@@ -133,9 +120,4 @@ KERNEL_CODE = textwrap.dedent("""
 
 
 def test_distributed_step_fused_local_kernel_matches_oracle():
-    r = subprocess.run([sys.executable, "-c", KERNEL_CODE],
-                       capture_output=True, text=True, cwd=".", timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "JAX_PLATFORMS": "cpu"})
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "OK" in r.stdout
+    run_ok(KERNEL_CODE, timeout=300)
