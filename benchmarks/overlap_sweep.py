@@ -1,0 +1,239 @@
+"""Exchange-overlap sweep: how much of the depth-T halo exchange each
+engine hides — the paper's §IV DMA/compute overlap priced at the
+chip-to-chip level, written to ``BENCH_overlap.json``.
+
+Row families:
+
+  * ``modelled[]`` — the 268M-cell grid on growing (nx, ny) meshes, one
+    entry per (mesh, T) with the three engine configurations priced side
+    by side: `overlap=False` (exchange fully exposed), the collective
+    engine with overlap (XLA *may* hide it —
+    `roofline.XLA_OVERLAP_DISCOUNT`), and the in-kernel remote-DMA engine
+    (owns its issue/wait schedule). GATES: hidden + exposed reconstruct
+    ``collective_s`` exactly, and modelled EXPOSED wire seconds fall
+    STRICTLY, `remote_dma < collective+overlap < overlap=False`, for every
+    swept point.
+  * ``counted[]`` — subprocess on 4 forced host devices: the remote-DMA
+    step's jaxpr-counted wire bytes (`count_exchange_wire_bytes`; the
+    emulation sends one ppermute operand per DMA band message) GATED ==
+    `halo_wire_bytes_model` == `remote_dma_schedule_wire_bytes` EXACTLY,
+    and the engine's outputs GATED BITWISE-equal to the collective engine.
+  * ``measured[]`` — interpret-mode wallclock of both engines on the
+    reduced grid (informational; interpret mode serialises everything).
+
+Every gate is an explicit ``SystemExit`` raise (python -O safe). CI runs
+``--quick`` in the benchmark-smoke job.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+try:                        # package context (benchmarks.run / -m)
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
+
+from benchmarks.common import emit
+from repro.stencil.advection import PAPER_GRIDS, AdvectionDomain
+
+GRID = PAPER_GRIDS["268M"]                       # (4096, 1024, 64)
+MESHES = [(2, 2), (4, 4), (8, 8), (16, 8), (16, 16)]
+T_SWEEP = (4, 8)
+Y_TILE = 128
+
+CONFIGS = (                 # (label, exchange, overlap)
+    ("no_overlap", "collective", False),
+    ("collective_overlap", "collective", True),
+    ("remote_dma", "remote_dma", True),
+)
+
+
+def _modelled_rows():
+    X, Y, Z = GRID
+    rows = []
+    for T in T_SWEEP:
+        for nx, ny in MESHES:
+            dom0 = AdvectionDomain(X, Y, Z, variant="fused", fuse_T=T,
+                                   y_tile=Y_TILE, mesh_nx=nx, mesh_ny=ny)
+            row = {"grid": [X, Y, Z], "mesh": [nx, ny], "devices": nx * ny,
+                   "T": T, "y_tile": Y_TILE,
+                   "wire_bytes": dom0.halo_wire_bytes_per_step(),
+                   "configs": {}}
+            for label, ex, ov in CONFIGS:
+                dom = AdvectionDomain(X, Y, Z, variant="fused", fuse_T=T,
+                                      y_tile=Y_TILE, mesh_nx=nx, mesh_ny=ny,
+                                      exchange=ex, overlap=ov)
+                t = dom.roofline_terms()
+                if not math.isclose(t.collective_hidden_s
+                                    + t.collective_exposed_s,
+                                    t.collective_s, rel_tol=1e-12):
+                    raise SystemExit(
+                        f"overlap gate: hidden {t.collective_hidden_s} + "
+                        f"exposed {t.collective_exposed_s} != collective "
+                        f"{t.collective_s} at ({nx},{ny}) T={T} {label}")
+                if t.ici_wire_bytes != row["wire_bytes"]:
+                    raise SystemExit(
+                        f"overlap gate: wire bytes diverged between "
+                        f"engine configs at ({nx},{ny}) T={T} {label}: "
+                        f"{t.ici_wire_bytes} != {row['wire_bytes']}")
+                row["configs"][label] = {
+                    "overlap_efficiency": t.overlap_efficiency,
+                    "collective_s": t.collective_s,
+                    "collective_hidden_s": t.collective_hidden_s,
+                    "collective_exposed_s": t.collective_exposed_s,
+                    "overlapped_step_time_s": t.overlapped_step_time_s,
+                    "bound": t.bound,
+                }
+            c = row["configs"]
+            exposed = [c[label]["collective_exposed_s"]
+                       for label, _, _ in CONFIGS]
+            # THE acceptance gate: each rung of the overlap ladder strictly
+            # cuts the exposed wire time vs the overlap=False baseline
+            if not (exposed[2] < exposed[1] < exposed[0]):
+                raise SystemExit(
+                    f"overlap gate: exposed wire seconds not strictly "
+                    f"falling (no_overlap {exposed[0]} -> collective "
+                    f"{exposed[1]} -> remote_dma {exposed[2]}) at "
+                    f"({nx},{ny}) T={T}")
+            emit(f"overlap.modelled.T{T}.{nx}x{ny}",
+                 c["remote_dma"]["overlapped_step_time_s"] * 1e6,
+                 f"exposed_us_no_overlap={exposed[0]*1e6:.2f};"
+                 f"exposed_us_collective={exposed[1]*1e6:.2f};"
+                 f"exposed_us_remote_dma={exposed[2]*1e6:.2f}")
+            rows.append(row)
+    return rows
+
+
+_SUB_CODE = textwrap.dedent("""
+    import json, os, sys, time
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.roofline import halo_wire_bytes_model
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.stencil.advection import stratus_fields
+    from repro.stencil.distributed import (count_exchange_wire_bytes,
+                                           make_distributed_step,
+                                           remote_dma_schedule_wire_bytes)
+
+    cfg = json.loads(sys.argv[1])
+    X, Y, Z = cfg["grid"]
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    counted, measured = [], []
+    for nx, ny in cfg["meshes"]:
+        mesh = make_stencil_mesh(nx, ny)
+        sh = NamedSharding(mesh, P("x", "y", None))
+        args = [jax.device_put(t, sh) for t in (u, v, w)]
+        for T in cfg["T"]:
+            for ov in (False, True):
+                kw = dict(axis="y", x_axis="x", T=T, dt=0.01,
+                          local_kernel="fused", overlap=ov,
+                          y_tile=cfg["y_tile"])
+                fc = make_distributed_step(mesh, p, exchange="collective",
+                                           **kw)
+                fr = make_distributed_step(mesh, p, exchange="remote_dma",
+                                           **kw)
+                oc, orr = fc(*args), fr(*args)
+                diff = max(float(jnp.max(jnp.abs(a - b)))
+                           for a, b in zip(oc, orr))
+                got = count_exchange_wire_bytes(fr, u, v, w)
+                model = halo_wire_bytes_model(X, Y, Z, 4, nx=nx, ny=ny,
+                                              T=T)
+                sched = remote_dma_schedule_wire_bytes(
+                    X // nx, Y // ny, Z, 4, nx=nx, ny=ny, T=T)
+                counted.append({"mesh": [nx, ny], "T": T, "overlap": ov,
+                                "counted_wire_bytes": got,
+                                "modelled_wire_bytes": model,
+                                "schedule_wire_bytes": sched,
+                                "bitwise_diff_vs_collective": diff})
+                if ov:
+                    ts = {}
+                    for name, fn in (("collective", fc),
+                                     ("remote_dma", fr)):
+                        samples = []
+                        for _ in range(cfg["iters"]):
+                            t0 = time.perf_counter()
+                            jax.block_until_ready(fn(*args))
+                            samples.append(time.perf_counter() - t0)
+                        ts[name] = sorted(samples)[len(samples) // 2] * 1e6
+                    measured.append({"mesh": [nx, ny], "T": T,
+                                     "interpret_us": ts})
+    print(json.dumps({"counted": counted, "measured": measured}))
+""")
+
+
+def _subprocess_rows(smoke: bool):
+    """Counted wire bytes + bitwise engine equivalence on 4 forced host
+    devices (the scaling2d subprocess idiom: device count must be fixed by
+    XLA_FLAGS before jax initialises)."""
+    cfg = {"grid": [8, 12, 16], "y_tile": 5, "iters": 1 if smoke else 3,
+           "meshes": [[2, 2]] if smoke else [[2, 2], [1, 4], [4, 1]],
+           "T": [2] if smoke else [1, 2, 3]}
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.update({
+        "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+        "PYTHONPATH": os.pathsep.join(
+            [os.path.join(root, "src"), root,
+             env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+    })
+    r = subprocess.run([sys.executable, "-c", _SUB_CODE, json.dumps(cfg)],
+                       capture_output=True, text=True, cwd=root, env=env,
+                       timeout=900)
+    if r.returncode != 0:
+        raise SystemExit(f"overlap subprocess failed:\n{r.stderr[-3000:]}")
+    payload = json.loads(r.stdout.strip().splitlines()[-1])
+    for row in payload["counted"]:
+        if not (row["counted_wire_bytes"] == row["modelled_wire_bytes"]
+                == row["schedule_wire_bytes"]):
+            raise SystemExit(
+                f"overlap gate: counted {row['counted_wire_bytes']} / "
+                f"modelled {row['modelled_wire_bytes']} / schedule "
+                f"{row['schedule_wire_bytes']} wire bytes differ for {row}")
+        if row["bitwise_diff_vs_collective"] != 0.0:
+            raise SystemExit(
+                f"overlap gate: remote_dma outputs differ from collective "
+                f"by {row['bitwise_diff_vs_collective']} for {row} — the "
+                "engines must be bitwise equal")
+        emit(f"overlap.counted.{row['mesh'][0]}x{row['mesh'][1]}.T{row['T']}"
+             f".{'ov' if row['overlap'] else 'noov'}", 0.0,
+             f"wire_B={row['counted_wire_bytes']};bitwise_equal=True")
+    for row in payload["measured"]:
+        emit(f"overlap.measured.{row['mesh'][0]}x{row['mesh'][1]}"
+             f".T{row['T']}", row["interpret_us"]["remote_dma"],
+             f"collective_us={row['interpret_us']['collective']:.1f};"
+             "note=interpret_mode_serialises_everything")
+    return payload["counted"], payload["measured"]
+
+
+def run(smoke: bool = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    modelled = _modelled_rows()
+    counted, measured = _subprocess_rows(smoke)
+    payload = {
+        "modelled": modelled, "counted": counted, "measured": measured,
+        "itemsize": 4,
+        "contract": "modelled exposed collective seconds strictly fall "
+                    "remote_dma < collective+overlap < overlap=False at "
+                    "every (mesh, T); hidden+exposed == collective_s; "
+                    "counted ppermute bytes == halo_wire_bytes_model == "
+                    "remote_dma_schedule_wire_bytes exactly; remote_dma "
+                    "outputs bitwise-equal to collective",
+    }
+    out_path = os.path.join(os.getcwd(), "BENCH_overlap.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("overlap.json_written", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    run(smoke=_bootstrap.smoke_arg())

@@ -40,7 +40,7 @@ except ImportError:         # script context: benchmarks/ is sys.path[0]
     import _bootstrap
 
 from benchmarks.common import emit
-from repro.core.roofline import HBM_PER_CHIP, RooflineTerms
+from repro.core.roofline import HBM_PER_CHIP
 from repro.stencil.advection import PAPER_GRIDS, AdvectionDomain
 
 ITEM = 4  # f32
@@ -64,10 +64,7 @@ def _row(dom, nx, ny, T):
     n_dev = nx * ny
     shard_hbm = dom.hbm_bytes_per_shard_step()
     wire = dom.halo_wire_bytes_per_step()
-    terms = RooflineTerms(flops_per_dev=dom.flops_per_step() / n_dev,
-                          hbm_bytes_per_dev=shard_hbm,
-                          ici_wire_bytes=wire, dcn_wire_bytes=0.0,
-                          n_chips=n_dev)
+    terms = dom.roofline_terms()
     Xl, Yl = dom.shard_shape()
     # steady-state HBM residency per shard: fields in+out + the VMEM ring's
     # HBM shadow is negligible; the point is the 268M grid fitting

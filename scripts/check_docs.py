@@ -1,0 +1,115 @@
+"""Docs checker: the documentation tier's executable contract.
+
+1. Every fenced code block in README.md / docs/*.md tagged with a
+   preceding ``<!-- docs-check -->`` marker is executed line-by-line as a
+   shell command from the repo root — quoted commands that rot fail CI,
+   so the quickstart can be trusted.
+2. Every ``BENCH_*.json`` artifact in the tree must appear in the
+   `benchmarks/README.md` schema tables — no unpriced, undocumented
+   benchmark artifacts.
+
+Run from anywhere: ``python scripts/check_docs.py``. All failures are
+explicit ``SystemExit`` raises (python -O safe). CI runs this as the
+`docs` job.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MARKER = "<!-- docs-check -->"
+FENCE = re.compile(r"^```")
+
+
+def tagged_blocks(path: str):
+    """Yield (lineno, [command, ...]) for each docs-check-tagged fence."""
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == MARKER:
+            j = i + 1
+            while j < len(lines) and not FENCE.match(lines[j].strip()):
+                if lines[j].strip():
+                    raise SystemExit(
+                        f"{path}:{i + 1}: {MARKER} must be immediately "
+                        "followed by a fenced code block")
+                j += 1
+            if j >= len(lines):
+                raise SystemExit(f"{path}:{i + 1}: {MARKER} with no fence")
+            block, j = [], j + 1
+            while j < len(lines) and not FENCE.match(lines[j].strip()):
+                cmd = lines[j].strip()
+                if cmd and not cmd.startswith("#"):
+                    block.append(cmd)
+                j += 1
+            if j >= len(lines):
+                raise SystemExit(
+                    f"{path}:{i + 1}: docs-check fence never closed — "
+                    "refusing to treat the rest of the file as commands")
+            yield i + 1, block
+            i = j
+        i += 1
+
+
+def run_tagged_commands() -> int:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        docs += sorted(os.path.join(docs_dir, n)
+                       for n in os.listdir(docs_dir) if n.endswith(".md"))
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")  # never probe libtpu in CI
+    n = 0
+    for path in docs:
+        if not os.path.exists(path):
+            raise SystemExit(f"documented file missing: {path}")
+        for lineno, block in tagged_blocks(path):
+            for cmd in block:
+                rel = os.path.relpath(path, ROOT)
+                print(f"[docs-check] {rel}:{lineno}$ {cmd}", flush=True)
+                r = subprocess.run(cmd, shell=True, cwd=ROOT, env=env)
+                if r.returncode != 0:
+                    raise SystemExit(
+                        f"{rel}:{lineno}: documented command failed "
+                        f"(exit {r.returncode}): {cmd}")
+                n += 1
+    if n == 0:
+        raise SystemExit("no docs-check-tagged commands found — the docs "
+                         "tier must quote at least the tier-1 command")
+    return n
+
+
+def check_bench_index() -> int:
+    with open(os.path.join(ROOT, "benchmarks", "README.md"),
+              encoding="utf-8") as f:
+        schema_doc = f.read()
+    found = set()
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".github")]
+        for name in filenames:
+            if name.startswith("BENCH_") and name.endswith(".json"):
+                found.add(name)
+    if not found:
+        raise SystemExit("no BENCH_*.json artifacts found in the tree")
+    missing = sorted(n for n in found if n not in schema_doc)
+    if missing:
+        raise SystemExit(
+            f"BENCH artifacts missing from benchmarks/README.md schema "
+            f"tables: {missing}")
+    return len(found)
+
+
+def main() -> None:
+    n_cmds = run_tagged_commands()
+    n_bench = check_bench_index()
+    print(f"docs-check OK: {n_cmds} documented commands executed, "
+          f"{n_bench} BENCH artifacts indexed")
+
+
+if __name__ == "__main__":
+    main()

@@ -78,10 +78,23 @@ Grid-tiled execution contract (the `y_tile` path, `tiling="grid"`):
   overhead" regime) for BENCH_tiling.json. `wide` still rejects host
   tiling (tile+halo rows cannot satisfy its sublane contract there).
 
+Distributed composition (the 2D (x, y) mesh decomposition of PR 3 and the
+exchange engines of PR 4): `stencil.distributed.make_distributed_step`
+streams each (X/nx, Y/ny, Z) shard's halo'd slab through the v4 kernel with
+ONE depth-T two-phase x-then-y exchange per T substeps (corners ride the y
+phase on the x-extended slab), freezing wrapped periodic halo planes/rows
+via `(x_interior_mask, y_interior_mask)`. `halo_band_exchange_dma` (below)
+is the in-kernel transport for that exchange: the T-deep boundary bands
+move by `pltpu.make_async_remote_copy` issued from inside a Pallas kernel
+into double-buffered recv slabs, instead of trusting XLA to schedule a
+`ppermute` — the paper's §IV "do the data movement yourself" lesson at the
+chip-to-chip level.
+
 Validated with interpret=True against ref.pw_advect_ref, the f64 oracle, and
 the multi-step f64 oracle (fused) across shape/dtype/T/y_tile sweeps in
 tests/test_advection_kernels.py, tests/test_advection_fused.py and
-tests/test_advection_grid_tiled.py.
+tests/test_advection_grid_tiled.py; the remote-DMA band kernel is
+compiled-TPU-only and rides tests/test_compiled_smoke.py.
 """
 from __future__ import annotations
 
@@ -94,6 +107,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.advection.ref import AdvectParams
+from repro.launch.mesh import dma_neighbor_coords
 
 TILINGS = ("grid", "host")
 _WIDE_HALO = 8   # sublane-rounded fetch halo: keeps wide's (8,128) contract
@@ -507,6 +521,146 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
         interpret=interpret,
     )
     return fn(t1, t2, xm, ym, u, v, w)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel halo-band exchange: async remote DMA (TPU, compiled mode)
+# ---------------------------------------------------------------------------
+
+
+def _band_slice(ref, dim: int, lo: int, size: int):
+    """`size` planes (dim=0) or rows (dim=1) of `ref` starting at `lo`."""
+    if dim == 0:
+        return ref.at[pl.ds(lo, size)]
+    return ref.at[:, pl.ds(lo, size)]
+
+
+def _kernel_band_dma(step_ref, u_ref, v_ref, w_ref,
+                     uhi_ref, ulo_ref, vhi_ref, vlo_ref, whi_ref, wlo_ref,
+                     sbuf, stage_sem, send_sem, recv_sem, *,
+                     axis, mesh_axes, n, depth, dim, L):
+    """One depth-T band exchange along mesh axis `axis`, issued as async
+    remote DMA from INSIDE the kernel — the paper's §IV move of the
+    transfer schedule out of the tooling's hands and into the kernel's.
+
+    Per field and side, the T-deep boundary band is staged through a VMEM
+    send slab (`make_async_copy`) and then `make_async_remote_copy`'d into
+    the ring neighbour's DOUBLE-BUFFERED recv slab (slot = block k % 2).
+    All six sends (3 fields x 2 sides) are started before any wait: the
+    DMAs fly concurrently and the issue order follows the fused ring's
+    consumption order (the x-lo band feeds the ring's earliest grid
+    steps). The entry barrier is the capacity handshake: both neighbours
+    have entered this block's exchange — and therefore vacated the slot
+    being written — before any band lands.
+
+    Scope honesty: ONE call exchanges one block's bands and waits them
+    all before returning; cross-block overlap (block k+1's bands landing
+    in the spare slot while block k's interior computes) is what the slot
+    parity is FOR, but it needs the pipelined multi-block driver that
+    alternates `dma_block_index` across persistent recv slabs — ROADMAPped,
+    not yet driven. What overlaps TODAY is the same thing the collective
+    engine overlaps: `overlap=True`'s interior pass has no data dependence
+    on this kernel's outputs, so it can be scheduled concurrently with
+    the exchange call.
+
+    The traffic is ring-symmetric (everyone sends its tail forward and its
+    head backward), so each device's descriptor pair also waits its OWN
+    incoming bands: `rdma.wait()` blocks on the local send semaphore and
+    on the recv semaphore its predecessor's copy signals.
+    """
+    slot = jax.lax.rem(step_ref[0], 2)
+    coords = [jax.lax.axis_index(a) for a in mesh_axes]
+    fwd = dma_neighbor_coords(mesh_axes, coords, axis, 1, n)
+    bwd = dma_neighbor_coords(mesh_axes, coords, axis, -1, n)
+    barrier = pltpu.get_barrier_semaphore()
+    for dev in (fwd, bwd):
+        pltpu.semaphore_signal(barrier, 1, device_id=dev,
+                               device_id_type=pltpu.DeviceIdType.MESH)
+    pltpu.semaphore_wait(barrier, 2)
+    rdmas = []
+    for fi, (f_ref, hi_ref, lo_ref) in enumerate(
+            ((u_ref, uhi_ref, ulo_ref), (v_ref, vhi_ref, vlo_ref),
+             (w_ref, whi_ref, wlo_ref))):
+        # side 0: my tail -> successor's hi slab (it reads those planes/rows
+        # first); side 1: my head -> predecessor's lo slab
+        for si, (src_lo, dst_ref, dst_dev) in enumerate(
+                ((L - depth, hi_ref, fwd), (0, lo_ref, bwd))):
+            stage = pltpu.make_async_copy(
+                _band_slice(f_ref, dim, src_lo, depth),
+                sbuf.at[fi, si], stage_sem.at[fi, si])
+            stage.start()
+            stage.wait()
+            rdma = pltpu.make_async_remote_copy(
+                src_ref=sbuf.at[fi, si],
+                dst_ref=dst_ref.at[slot],
+                send_sem=send_sem.at[fi, si],
+                recv_sem=recv_sem.at[fi, si],
+                device_id=dst_dev,
+                device_id_type=pltpu.DeviceIdType.MESH)
+            rdma.start()
+            rdmas.append(rdma)
+    for rdma in rdmas:
+        rdma.wait()
+
+
+def halo_band_exchange_dma(u, v, w, *, axis: str, mesh_axes, n: int,
+                           depth: int, dim: int, block_index: int = 0,
+                           collective_id: int = 0):
+    """Exchange depth-`depth` boundary bands of three fields along mesh
+    axis `axis` via in-kernel async remote DMA (TPU compiled mode ONLY —
+    Mosaic semaphores have no interpret/CPU path; `stencil.distributed`
+    runs its schedule-faithful ppermute emulation there instead, and the
+    two are gated bitwise-equal).
+
+    Returns ``((u_hi, u_lo), (v_hi, v_lo), (w_hi, w_lo))`` where `hi` is
+    the band arriving from the ring predecessor (global coordinates just
+    below the shard) and `lo` from the successor — the same contract as
+    the collective `_exchange_halos`, so the caller-side slab assembly and
+    the x-then-y corner ordering are engine-independent. `block_index` is
+    the substep-block number k; the receive slabs are double-buffered on
+    k % 2 (see `_kernel_band_dma`). `collective_id` must differ between
+    the x and y phases so their barrier semaphores stay distinct.
+
+    Single-hop only: `depth` beyond the local extent needs the multi-hop
+    collective engine (`exchange="collective"`); the distance-k
+    `make_async_remote_copy` generalisation is roadmapped.
+    """
+    if dim not in (0, 1):
+        raise ValueError(f"dim must be 0 (x-planes) or 1 (y-rows), got {dim}")
+    L = u.shape[dim]
+    if depth > L:
+        raise NotImplementedError(
+            f"in-kernel remote-DMA exchange is single-hop: depth {depth} "
+            f"exceeds the local extent {L}; use exchange='collective' "
+            "(multi-hop ppermute) for halos deeper than one shard")
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    band_shape = ((depth,) + u.shape[1:] if dim == 0
+                  else (u.shape[0], depth) + u.shape[2:])
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    smem_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    out_shape = [jax.ShapeDtypeStruct((2,) + band_shape, u.dtype)
+                 for _ in range(6)]
+    fn = pl.pallas_call(
+        functools.partial(_kernel_band_dma, axis=axis,
+                          mesh_axes=tuple(mesh_axes), n=n, depth=depth,
+                          dim=dim, L=L),
+        in_specs=[smem_spec, any_spec, any_spec, any_spec],
+        out_specs=[any_spec] * 6,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((3, 2) + band_shape, u.dtype),   # staged send bands
+            pltpu.SemaphoreType.DMA((3, 2)),            # HBM->VMEM staging
+            pltpu.SemaphoreType.DMA((3, 2)),            # remote send
+            pltpu.SemaphoreType.DMA((3, 2)),            # remote recv
+        ],
+        compiler_params=pltpu.TPUCompilerParams(collective_id=collective_id),
+    )
+    step = jnp.full((1,), block_index, jnp.int32)
+    outs = fn(step, u, v, w)
+    slot = block_index % 2
+    sel = [o[slot] for o in outs]
+    return ((sel[0], sel[1]), (sel[2], sel[3]), (sel[4], sel[5]))
 
 
 # ---------------------------------------------------------------------------

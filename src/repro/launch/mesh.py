@@ -31,6 +31,37 @@ def make_stencil_mesh(nx: int, ny: int, *, x_axis: str = "x",
     return compat_make_mesh((nx, ny), (x_axis, y_axis))
 
 
+def ring_neighbor(idx, n: int, delta: int):
+    """Logical ring coordinate of the `delta`-away neighbour on an n-shard
+    mesh axis (wraps periodically — wrapped halo data must be frozen by the
+    caller's global-interior mask, exactly as for the ppermute engine).
+
+    Pure index math, usable both host-side and on traced values (Python %
+    on a traced value follows jnp.mod's sign-of-divisor semantics, so
+    delta=-1 at coordinate 0 wraps to n-1): the remote-DMA exchange kernel
+    computes its `make_async_remote_copy` `device_id` mesh coordinates
+    through `dma_neighbor_coords`, which builds the full coordinate tuple.
+    """
+    if n < 1:
+        raise ValueError(f"axis size must be >= 1, got {n}")
+    return (idx + delta) % n
+
+
+def dma_neighbor_coords(mesh_axes, my_coords, axis: str, delta: int,
+                        n: int):
+    """Mesh-coordinate tuple addressing the `delta`-away ring neighbour
+    along `axis` (an n-shard ring), holding every other axis coordinate
+    fixed — the `device_id` (``DeviceIdType.MESH``) the in-kernel
+    remote-DMA exchange kernel (`_kernel_band_dma`) sends its boundary
+    bands to. `mesh_axes`/`my_coords` are parallel over the mesh's axis
+    order; coordinates may be traced values."""
+    if axis not in mesh_axes:
+        raise ValueError(f"axis {axis!r} not in mesh axes {tuple(mesh_axes)}")
+    return tuple(
+        ring_neighbor(c, n, delta) if a == axis else c
+        for a, c in zip(mesh_axes, my_coords))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

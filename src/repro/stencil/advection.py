@@ -2,9 +2,13 @@
 
 `AdvectionDomain` owns the (X, Y, Z) wind fields and steps them with any of
 the kernel-ladder variants (jnp reference = the paper's CPU baseline;
-Pallas blocked/dataflow/wide = the FPGA kernel stages). The stratus-cloud
-test-case initialisation mirrors the paper's standard MONC case sizes
-(Fig. 8: 1M .. 268M grid points at z=64).
+Pallas blocked/dataflow/wide/fused = the FPGA kernel stages v1-v4). The
+stratus-cloud test-case initialisation mirrors the paper's standard MONC
+case sizes (Fig. 8: 1M .. 268M grid points at z=64). A (mesh_nx, mesh_ny)
+configuration additionally prices the 2D-decomposed distributed step —
+per-shard HBM pass, depth-T exchange wire bytes, and (via `exchange` /
+`overlap`) how much of that exchange the configured engine hides behind
+the interior pass (`roofline_terms().collective_exposed_s`).
 """
 from __future__ import annotations
 
@@ -66,8 +70,14 @@ class AdvectionDomain:
     mesh_ny: int = 1                  # for the per-shard accounting below
                                       # (step() itself stays single-shard;
                                       # make_distributed_step runs the mesh)
+    exchange: str = "collective"      # halo-band transport engine and
+    overlap: bool = False             # interior/boundary split, for the
+                                      # overlap-efficiency accounting below
 
     def __post_init__(self):
+        if self.exchange not in ("collective", "remote_dma"):
+            raise ValueError(f"exchange must be 'collective' or "
+                             f"'remote_dma', got {self.exchange!r}")
         object.__setattr__(self, "params",
                            REF.default_params(self.Z,
                                               dtype=jnp.dtype(self.dtype)))
@@ -218,6 +228,34 @@ class AdvectionDomain:
                                        jnp.dtype(self.dtype).itemsize,
                                        nx=self.mesh_nx, ny=self.mesh_ny,
                                        T=self.substeps_per_step())
+
+    def overlap_efficiency(self) -> float:
+        """Modelled fraction of the depth-T exchange the configured engine
+        hides behind the halo-independent interior pass
+        (`roofline.overlap_efficiency_model` over this domain's shard
+        geometry). 0.0 on a 1x1 mesh or with overlap=False."""
+        if self.mesh_nx * self.mesh_ny == 1:
+            return 0.0
+        Xl, Yl = self.shard_shape()
+        frac = R.interior_compute_fraction(Xl, Yl, self.substeps_per_step(),
+                                           nx=self.mesh_nx, ny=self.mesh_ny)
+        return R.overlap_efficiency_model(overlap=self.overlap,
+                                          exchange=self.exchange,
+                                          interior_fraction=frac)
+
+    def roofline_terms(self) -> R.RooflineTerms:
+        """Three-term roofline of one distributed step() on the configured
+        (mesh_nx, mesh_ny) mesh, with the exchange bytes feeding
+        ``collective_s`` and the engine's overlap efficiency splitting it
+        into hidden vs exposed seconds."""
+        n_dev = self.mesh_nx * self.mesh_ny
+        return R.RooflineTerms(
+            flops_per_dev=self.flops_per_step() / n_dev,
+            hbm_bytes_per_dev=self.hbm_bytes_per_shard_step(),
+            ici_wire_bytes=self.halo_wire_bytes_per_step(),
+            dcn_wire_bytes=0.0,
+            n_chips=n_dev,
+            overlap_efficiency=self.overlap_efficiency())
 
     def vmem_register_bytes(self) -> int:
         """VMEM shift-register footprint of the current configuration."""

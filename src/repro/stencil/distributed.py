@@ -1,53 +1,69 @@
-"""Distributed PW advection: halo exchange overlapped with interior compute.
+"""Distributed PW advection: the 2D-decomposed depth-T halo exchange, with
+two interchangeable exchange engines and optional compute overlap.
 
-The paper's §IV overlap (DMA chunks vs kernel pool) maps chip-to-chip on TPU:
-the decomposed domain needs depth-1 halos, exchanged with
-`lax.ppermute` while the *interior* — which needs no halo — computes.
-The data dependence is structured so XLA can schedule the collective-permute
-concurrently with the interior stencil (interior result does not consume the
-permuted edges), then the boundary bands are patched.
+Each shard of the (nx, ny) mesh owns an (X/nx, Y/ny, Z) slab
+(`make_distributed_step(axis="y", x_axis="x")`; an axis of size 1 exchanges
+nothing). ONE depth-T exchange serves T Euler substeps: each substep
+contaminates one more halo row/plane, so depth-T halos are exactly consumed
+after T substeps — the collective is amortised over T exactly like the HBM
+pass the v4 fused kernel amortises. The exchange is two-phase, X-THEN-Y:
+phase 1 trades depth-T x-planes of the raw shard along the x ring; phase 2
+trades depth-T y-rows of the x-EXTENDED slab along the y ring. The corner
+contract lives entirely in that ordering — a y-neighbour's x-extended rows
+already contain its x-halo columns, so the four (T, T, Z) corner blocks
+ride phase 2 and no diagonal (8-neighbour) communication is ever issued.
+Reordering the phases (or exchanging y on the unextended slab) silently
+zeroes the corners; the scaling2d benchmark's counted-vs-modelled wire-byte
+gate and the corner regression test pin the contract. The wrapped ring is
+periodic: halo data that wraps past the global edge is wrong by
+construction and is frozen by the global-interior masks every engine
+shares.
 
-Temporal fusion (the v4 kernel) makes the halo depth T-dependent:
-`make_distributed_step(..., T=...)` exchanges T rows per side ONCE, then
-advances T Euler substeps on the halo'd slab before trimming — amortising
-both the HBM pass *and* the collective over T steps (each step contaminates
-one more halo row, so depth-T halos are exactly consumed after T substeps).
-When T exceeds a shard's local extent the exchange goes multi-hop: hop k is
-a distance-k ppermute fetching the k-away neighbour's share directly, so
-ceil(T/local) permutes per side move exactly T rows total.
+`exchange=` selects the transport for those bands (both engines move
+byte-identical bands through byte-identical phases, so
+`roofline.halo_wire_bytes_model` prices either):
 
-2D (x, y) decomposition: pass `x_axis=` and each shard owns an
-(X/nx, Y/ny, Z) slab. The exchange is two-phase, X-THEN-Y: phase 1 trades
-depth-T x-planes of the raw shard along the x ring; phase 2 trades depth-T
-y-rows of the x-EXTENDED slab along the y ring. The corner contract lives
-entirely in that ordering — a y-neighbour's x-extended rows already contain
-its x-halo columns, so the four (T, T, Z) corner blocks ride phase 2 and no
-diagonal (8-neighbour) communication is ever issued. Reordering the phases
-(or exchanging y on the unextended slab) silently zeroes the corners; the
-scaling2d benchmark's counted-vs-modelled wire-byte gate and the corner
-regression test pin the contract.
+  * ``"collective"`` — `lax.ppermute`, scheduled by XLA. Multi-hop: when T
+    exceeds a shard's local extent, hop k is a distance-k ppermute fetching
+    the k-away neighbour's share directly, so ceil(T/local) permutes per
+    side move exactly T rows total. With `overlap=True` the interior pass
+    has no data dependence on the permutes, so XLA *may* hide the exchange
+    behind it — an opportunity, not a guarantee
+    (`roofline.XLA_OVERLAP_DISCOUNT`).
+  * ``"remote_dma"`` — the paper-faithful §IV endgame: the bands move by
+    `pltpu.make_async_remote_copy` issued from INSIDE a Pallas kernel
+    (`kernels.advection.advection.halo_band_exchange_dma`) into
+    double-buffered recv slabs (slot = substep-block k % 2, so block k+1's
+    bands land while block k computes). The kernel owns its issue/wait
+    schedule instead of trusting XLA. Compiled mode requires a TPU backend
+    (Mosaic semaphores have no CPU lowering) and is single-hop; in
+    interpret mode the engine runs a schedule-faithful emulation — the
+    same per-hop band messages and recv-slab assembly offsets
+    (`_band_schedule`), transported by ppermute — which the tests and
+    BENCH_overlap.json gate BITWISE-equal to the collective engine.
 
 `local_kernel="fused"` runs the per-shard slab update through the v4
 Pallas kernel instead of the jnp reference loop, composing the depth-T
 exchange with the kernel's in-grid `(y_tile, x)` tiling: the shard's slab
 streams through ONE kernel launch whose VMEM register is bounded by
-`y_tile` while the wrapped (periodic-ppermute) rows/planes are frozen via
-the kernel's `(x_interior_mask, y_interior_mask)` — the same
-global-interior masks the reference loop applies per substep.
+`y_tile` while the wrapped (periodic) halo rows/planes are frozen via the
+kernel's `(x_interior_mask, y_interior_mask)` — the same global-interior
+masks the reference loop applies per substep. Because `pallas_call` has no
+shard_map replication rule on the pinned jax, any step using a Pallas
+kernel per shard is built with ``check_rep=False``: outputs are fully
+sharded along the mesh axes anyway so no replication information is lost,
+but shard_map will no longer error if a future edit accidentally consumes
+an unreduced value — the distributed equivalence tests are the guard.
 
 `overlap=True` splits each shard's update into an interior pass (owned
-slab only — no data dependence on any ppermute, so XLA may schedule it
-concurrently with both exchange phases, the multi-device analogue of the
-paper's DMA/compute overlap) and a boundary pass on the halo'd slab; the
-T-deep bands adjacent to a cut are then selected from the boundary pass,
+slab only — no data dependence on any exchange, the §IV DMA/compute
+overlap chip-to-chip) and a boundary pass on the halo'd slab; the T-deep
+bands adjacent to a cut are then selected from the boundary pass,
 everything else from the interior pass.
-
-check_rep caveat: `pallas_call` has no shard_map replication rule on the
-pinned jax, so any `local_kernel="fused"` step is built with
-`check_rep=False`. Outputs are fully sharded along the mesh axes anyway, so
-no replication information is lost — but shard_map will no longer error if
-a future edit accidentally consumes an unreduced value; the distributed
-equivalence tests are the guard.
+`roofline.overlap_efficiency_model` prices how much of the exchange each
+engine hides behind that interior pass, and
+`RooflineTerms.collective_exposed_s` is the wire time left on the critical
+path — the quantity BENCH_overlap.json sweeps.
 
 Runs under `shard_map` over any mesh axes (smoke-tested on the host mesh;
 `launch.mesh.make_stencil_mesh` builds the (nx, ny) production shape).
@@ -66,6 +82,29 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.kernels.advection import advection as K
 from repro.kernels.advection.ref import (AdvectParams, pw_advect_ref,
                                          pw_step_ref)
+
+EXCHANGES = ("collective", "remote_dma")
+
+
+def _band_schedule(L: int, depth: int):
+    """Per-hop band messages of one exchange side, shared by every engine.
+
+    Returns ``[(k, cnt, hi_off, lo_off), ...]``: hop k moves `cnt` =
+    min(L, depth-(k-1)L) planes/rows to/from the k-away ring neighbour, and
+    the received bands land at extended-slab offsets `hi_off` (band from
+    the predecessor side, global coordinates ascending) and `lo_off` (from
+    the successor side). Offsets partition the hi halo [0, depth) and the
+    lo halo [depth+L, depth+L+depth) of the extended slab exactly — the
+    recv-slab addresses the remote-DMA kernel writes and the emulation's
+    assembly both use, and the operand sizes
+    `remote_dma_schedule_wire_bytes` sums.
+    """
+    hops = -(-depth // L)
+    sched = []
+    for k in range(1, hops + 1):
+        cnt = min(L, depth - (k - 1) * L)
+        sched.append((k, cnt, depth - (k - 1) * L - cnt, depth + k * L))
+    return sched
 
 
 def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
@@ -107,9 +146,75 @@ def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
             jnp.concatenate(lo_parts, axis=dim))
 
 
+def _exchange_remote_dma_emulated(f, axis: str, n: int, depth: int,
+                                  dim: int):
+    """Interpret-mode transport for the `remote_dma` engine: the DMA
+    kernel's exact schedule — one contiguous band message per (side, hop),
+    each landing at its `_band_schedule` recv-slab offset in a
+    zero-initialised extended slab — with `lax.ppermute` standing in for
+    `make_async_remote_copy` (Mosaic semaphores have no CPU path). Wire
+    accounting is unchanged: one ppermute operand per band message, so
+    `count_exchange_wire_bytes` prices this engine identically to the
+    collective one. Returns the extended slab directly (the engine owns
+    its assembly, unlike `_exchange_halos`' (hi, lo) contract); the tests
+    gate it bitwise-equal against the collective concatenation.
+    """
+    L = f.shape[dim]
+
+    def band(g, lo, hi):
+        idx = [slice(None)] * g.ndim
+        idx[dim] = slice(lo, hi)
+        return g[tuple(idx)]
+
+    ext_shape = list(f.shape)
+    ext_shape[dim] += 2 * depth
+    ext = jnp.zeros(tuple(ext_shape), f.dtype)
+
+    def place(acc, buf, off):
+        idx = [slice(None)] * acc.ndim
+        idx[dim] = slice(off, off + buf.shape[dim])
+        return acc.at[tuple(idx)].set(buf)
+
+    ext = place(ext, f, depth)   # owned block
+    for k, cnt, hi_off, lo_off in _band_schedule(L, depth):
+        fwd = [(i, (i + k) % n) for i in range(n)]
+        bwd = [(i, (i - k) % n) for i in range(n)]
+        ext = place(ext, jax.lax.ppermute(band(f, L - cnt, L), axis, fwd),
+                    hi_off)
+        ext = place(ext, jax.lax.ppermute(band(f, 0, cnt), axis, bwd),
+                    lo_off)
+    return ext
+
+
+def remote_dma_schedule_wire_bytes(Xl: int, Yl: int, Z: int, itemsize: int,
+                                   *, nx: int = 1, ny: int = 1,
+                                   T: int = 1, n_fields: int = 3) -> int:
+    """Per-shard sent bytes of the remote-DMA engine's actual schedule:
+    the summed `_band_schedule` message sizes over both sides of the
+    two-phase x-then-y exchange (phase 2 operands are x-EXTENDED — the
+    corner blocks). Computed from the messages the engine issues, NOT from
+    `roofline.halo_wire_bytes_model`'s closed form; the overlap tests and
+    BENCH_overlap.json gate the two EXACTLY equal, pinning the DMA
+    schedule to the priced model."""
+    total = 0
+    if nx > 1:
+        total += sum(2 * cnt * Yl * Z
+                     for _, cnt, _, _ in _band_schedule(Xl, T))
+    x_ext = Xl + (2 * T if nx > 1 else 0)
+    if ny > 1:
+        total += sum(2 * cnt * x_ext * Z
+                     for _, cnt, _, _ in _band_schedule(Yl, T))
+    return total * n_fields * itemsize
+
+
 def make_distributed_advect(mesh: Mesh, params: AdvectParams,
                             axis: str = "data"):
-    """Returns jit(advect) over fields sharded (None, axis, None) in y."""
+    """Returns jit(advect) over fields sharded (None, axis, None) in y.
+
+    LEGACY rung: the original 1D depth-1 source-only exchange, kept as the
+    minimal overlap exemplar. New work composes depth-T halos, the 2D
+    x-then-y phases and the exchange engines via `make_distributed_step`.
+    """
 
     n_shards = mesh.shape[axis]
 
@@ -157,7 +262,9 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
                           local_kernel: str = "reference",
                           y_tile: Optional[int] = None,
                           interpret: bool = True,
-                          overlap: bool = False):
+                          overlap: bool = False,
+                          exchange: str = "collective",
+                          dma_block_index: int = 0):
     """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
 
     `axis` is the mesh axis decomposing y. With `x_axis` the step runs on a
@@ -166,16 +273,27 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
     docstring (corners ride phase 2; no diagonal sends). An axis of size 1
     exchanges nothing along that direction.
 
-    The wrapped ppermute is periodic, so shards at the global edges receive
-    wrapped (wrong) halo data — but every substep masks the source to zero
-    outside the *global* interior, and a depth-1 stencil cannot carry
-    values past an unchanging row: the global-boundary row is a wall, the
-    wrapped rows never contaminate the trimmed result. The same mask
-    argument lifts the old single-hop T <= local-extent restriction: the
-    multi-hop `_exchange_halos` fetches arbitrarily deep halos, so the only
-    hard bound left is T <= global extent - 2 along each decomposed axis
-    (beyond that no interior cell exists whose depth-T cone the ring can
-    serve).
+    Every exchange engine's wrapped ring is periodic, so shards at the
+    global edges receive wrapped (wrong) halo data — but every substep
+    masks the source to zero outside the *global* interior, and a depth-1
+    stencil cannot carry values past an unchanging row: the global-boundary
+    row is a wall, the wrapped rows never contaminate the trimmed result.
+    The same mask argument lifts the old single-hop T <= local-extent
+    restriction on the collective engine: multi-hop `_exchange_halos`
+    fetches arbitrarily deep halos, so the only hard bound left there is
+    T <= global extent - 2 along each decomposed axis (beyond that no
+    interior cell exists whose depth-T cone the ring can serve).
+
+    `exchange` selects the band transport (module docstring): "collective"
+    is XLA-scheduled ppermute; "remote_dma" issues the bands from inside a
+    Pallas kernel via `pltpu.make_async_remote_copy` in compiled mode
+    (TPU-only — any other backend raises RuntimeError at build time;
+    single-hop, so T must fit the local extent) and runs the
+    schedule-faithful ppermute emulation in interpret mode (bitwise-equal
+    to "collective" — the gate CI runs). `dma_block_index` is the substep
+    block number k, selecting the engine's double-buffered recv slot
+    (k % 2): a pipelined multi-block driver rebuilds with alternating
+    parity so block k+1's bands land beside block k's.
 
     `local_kernel` selects the per-shard slab update: "reference" is the
     jnp T-substep loop; "fused" streams the slab through the v4 Pallas
@@ -186,24 +304,37 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
     shard is.
 
     `overlap=True` additionally computes the halo-independent interior of
-    each shard in a pass that consumes NO ppermute output, so XLA is free
-    to run it concurrently with both exchange phases (the paper's §IV
-    DMA/compute overlap, chip-to-chip); only the T-deep boundary bands then
-    wait on the exchange. The boundary pass covers the whole slab (the
-    repo's established overlap idiom, cf. `make_distributed_advect`) — the
-    cost is one extra local pass, the win is that the exchange latency is
-    hidden behind a full interior update.
+    each shard in a pass that consumes NO exchange output, so it can run
+    concurrently with both exchange phases (the paper's §IV DMA/compute
+    overlap, chip-to-chip); only the T-deep boundary bands then wait on
+    the exchange. The boundary pass covers the whole slab (the repo's
+    established overlap idiom, cf. `make_distributed_advect`) — the cost
+    is one extra local pass, the win is that the exchange latency is
+    hidden behind a full interior update; how much is hidden per engine is
+    `roofline.overlap_efficiency_model`'s business.
 
     Wire cost: T rows per neighbour per exchange (per `roofline.
-    halo_wire_bytes_model`), so bytes-on-wire per substep are flat in T
-    while the exchange *count* falls as 1/T — latency-bound small halos
-    amortise T×.
+    halo_wire_bytes_model`, identical for both engines), so bytes-on-wire
+    per substep are flat in T while the exchange *count* falls as 1/T —
+    latency-bound small halos amortise T×.
     """
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
     if local_kernel not in ("reference", "fused"):
         raise ValueError(f"local_kernel must be 'reference' or 'fused', "
                          f"got {local_kernel!r}")
+    if exchange not in EXCHANGES:
+        raise ValueError(f"exchange must be one of {EXCHANGES}, "
+                         f"got {exchange!r}")
+    if exchange == "remote_dma" and not interpret:
+        backend = jax.default_backend()
+        if backend != "tpu":
+            raise RuntimeError(
+                f"exchange='remote_dma' in compiled mode issues "
+                f"pltpu.make_async_remote_copy from inside a Pallas kernel "
+                f"and needs a TPU backend (Mosaic); this process is running "
+                f"{backend!r}. Use exchange='collective', or interpret=True "
+                "for the schedule-faithful emulation.")
 
     n_y = mesh.shape[axis]
     n_x = mesh.shape[x_axis] if x_axis is not None else 1
@@ -248,18 +379,31 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
         ix = jax.lax.axis_index(x_axis) if dx else None
 
         # ---- two-phase exchange: x first, then y on the x-extended slab
-        # (phase 2's rows carry phase 1's corner columns — see module doc)
+        # (phase 2's rows carry phase 1's corner columns — see module doc).
+        # `_extend` is the engine dispatch; every engine returns the same
+        # extended slab, so the corner contract is engine-independent.
+        def _extend(fields, ax_name, n, dim, cid):
+            if exchange == "remote_dma":
+                if interpret:
+                    return tuple(
+                        _exchange_remote_dma_emulated(f, ax_name, n, T, dim)
+                        for f in fields)
+                bands = K.halo_band_exchange_dma(
+                    *fields, axis=ax_name, mesh_axes=mesh.axis_names,
+                    n=n, depth=T, dim=dim, block_index=dma_block_index,
+                    collective_id=cid)
+                return tuple(jnp.concatenate([hi, f, lo], axis=dim)
+                             for f, (hi, lo) in zip(fields, bands))
+            hs = [_exchange_halos(f, ax_name, n, depth=T, dim=dim)
+                  for f in fields]
+            return tuple(jnp.concatenate([h[0], f, h[1]], axis=dim)
+                         for f, h in zip(fields, hs))
+
         fields = (u, v, w)
         if dx:
-            xh = [_exchange_halos(f, x_axis, n_x, depth=T, dim=0)
-                  for f in fields]
-            fields = tuple(jnp.concatenate([h[0], f, h[1]], axis=0)
-                           for f, h in zip(fields, xh))
+            fields = _extend(fields, x_axis, n_x, 0, 0)
         if dy:
-            yh = [_exchange_halos(f, axis, n_y, depth=T, dim=1)
-                  for f in fields]
-            fields = tuple(jnp.concatenate([h[0], f, h[1]], axis=1)
-                           for f, h in zip(fields, yh))
+            fields = _extend(fields, axis, n_y, 1, 1)
 
         # ---- global-interior masks over the slab coordinates
         x_int = y_int = None
@@ -276,7 +420,7 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
         if not (overlap and (dx or dy)):
             return out
 
-        # ---- interior pass: owned slab only, no ppermute dependence.
+        # ---- interior pass: owned slab only, no exchange dependence.
         # Shard-cut edges act as walls contaminating < T cells inward; the
         # select below discards exactly those bands.
         ox_int = oy_int = None
@@ -298,13 +442,14 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
 
     spec = (P(None, axis, None) if x_axis is None
             else P(x_axis, axis, None))
-    # pallas_call has no shard_map replication rule on this jax; the fused
-    # local kernel therefore needs check_rep=False (outputs are fully
-    # sharded along the mesh axes anyway, so nothing is lost — see the
-    # module-docstring caveat)
+    # check_rep=False whenever a Pallas kernel runs per shard (the fused
+    # local kernel, or the compiled remote-DMA exchange) — rationale in the
+    # module docstring, documented once there.
+    uses_pallas = (local_kernel == "fused"
+                   or (exchange == "remote_dma" and not interpret))
     fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
                    out_specs=(spec, spec, spec),
-                   check_rep=local_kernel != "fused")
+                   check_rep=not uses_pallas)
     return jax.jit(fn)
 
 
@@ -324,9 +469,15 @@ def count_exchange_wire_bytes(fn, *args) -> int:
     every `ppermute` in its (recursively walked) jaxpr.
 
     Inside `shard_map` tracing shapes are per-shard, so each ppermute
-    operand is exactly one shard's send buffer. This is the measured
-    counterpart of `roofline.halo_wire_bytes_model`; the scaling2d
-    benchmark gates the two against each other exactly.
+    operand is exactly one shard's send buffer. This covers BOTH interpret
+    engines — the collective exchange and the remote-DMA emulation, whose
+    band messages are one ppermute operand each. The compiled remote-DMA
+    kernel's transfers live inside a `pallas_call` and are priced instead
+    by `remote_dma_schedule_wire_bytes` (the same `_band_schedule` message
+    sizes the kernel issues), which the overlap tests pin to
+    `roofline.halo_wire_bytes_model` exactly. This function is the
+    measured counterpart of that model; the scaling2d and overlap
+    benchmarks gate the two against each other exactly.
     """
     closed = jax.make_jaxpr(fn)(*args)
     total = 0
