@@ -1,0 +1,270 @@
+"""Pipelined multi-block driver sweep: `make_distributed_run(n_blocks=K)`
+— K substep-blocks in ONE traced program, the remote-DMA engine's
+double-buffered recv slots alternating on a TRACED block counter — priced
+and gated, written to ``BENCH_pipeline.json``.
+
+Row families:
+
+  * ``modelled[]`` — the 268M-cell grid on growing (nx, ny) meshes, one
+    entry per (mesh, T) with the per-block exchange priced across the
+    K sweep: `remote_dma` hiding is cross-block (the spare recv slot —
+    `roofline.pipeline_efficiency_model`, one pipeline-fill block paid),
+    `collective` is the K-independent within-block figure. GATES:
+    hidden + exposed reconstruct ``collective_s`` exactly at every K, and
+    the remote-DMA exposed wire seconds fall STRICTLY MONOTONICALLY in K
+    (the steady state approaches the interior-fraction bound).
+  * ``counted[]`` — subprocess on 4 forced host devices, swept across
+    HOP COUNTS (T below and above the local extent): the K-block run's
+    jaxpr-counted wire bytes (`count_exchange_wire_bytes` walks the
+    `fori_loop` body ONCE) GATED == `halo_wire_bytes_model` ==
+    `remote_dma_schedule_wire_bytes` == the single-block step's count at
+    EVERY hop count — one trace for all K blocks, no per-block retrace —
+    and the K-block output GATED BITWISE-equal to K sequential
+    `make_distributed_step` calls with alternating `dma_block_index`
+    parity AND to the K-block collective run.
+
+Every gate is an explicit ``SystemExit`` raise (python -O safe). CI runs
+``--quick`` in the benchmark-smoke job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+try:                        # package context (benchmarks.run / -m)
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
+
+from benchmarks.common import emit
+from repro.stencil.advection import PAPER_GRIDS, AdvectionDomain
+
+GRID = PAPER_GRIDS["268M"]                       # (4096, 1024, 64)
+MESHES = [(4, 4), (16, 8), (16, 16)]
+T_SWEEP = (4, 8)
+K_SWEEP = (1, 2, 4, 16, 64)
+Y_TILE = 128
+
+
+def _modelled_rows():
+    X, Y, Z = GRID
+    rows = []
+    for T in T_SWEEP:
+        for nx, ny in MESHES:
+            row = {"grid": [X, Y, Z], "mesh": [nx, ny], "devices": nx * ny,
+                   "T": T, "y_tile": Y_TILE, "blocks": {}}
+            dma_exposed = []
+            for K in K_SWEEP:
+                entry = {}
+                for label, ex in (("remote_dma", "remote_dma"),
+                                  ("collective", "collective")):
+                    dom = AdvectionDomain(X, Y, Z, variant="fused",
+                                          fuse_T=T, y_tile=Y_TILE,
+                                          mesh_nx=nx, mesh_ny=ny,
+                                          exchange=ex, overlap=True,
+                                          n_blocks=K)
+                    # price the PIPELINED schedule at every K, including
+                    # the honest K=1 (remote-DMA waits fully serialised) —
+                    # roofline_terms() keeps the single-block figure there
+                    # for BENCH_overlap back-compat
+                    t = dataclasses.replace(
+                        dom.roofline_terms(),
+                        overlap_efficiency=dom.pipeline_efficiency())
+                    if "wire_bytes" not in row:
+                        row["wire_bytes"] = t.ici_wire_bytes
+                    elif t.ici_wire_bytes != row["wire_bytes"]:
+                        raise SystemExit(
+                            f"pipeline gate: wire bytes diverged at "
+                            f"({nx},{ny}) T={T} K={K} {label}: "
+                            f"{t.ici_wire_bytes} != {row['wire_bytes']}")
+                    if not math.isclose(t.collective_hidden_s
+                                        + t.collective_exposed_s,
+                                        t.collective_s, rel_tol=1e-12):
+                        raise SystemExit(
+                            f"pipeline gate: hidden+exposed != collective "
+                            f"at ({nx},{ny}) T={T} K={K} {label}")
+                    entry[label] = {
+                        "pipeline_efficiency": t.overlap_efficiency,
+                        "collective_s": t.collective_s,
+                        "collective_hidden_s": t.collective_hidden_s,
+                        "collective_exposed_s": t.collective_exposed_s,
+                        "overlapped_step_time_s": t.overlapped_step_time_s,
+                        "bound": t.bound,
+                        "overlapped_bound": t.overlapped_bound,
+                    }
+                dma_exposed.append(
+                    entry["remote_dma"]["collective_exposed_s"])
+                row["blocks"][str(K)] = entry
+            # THE modelled gate: pipelining strictly cuts the remote-DMA
+            # engine's per-block exposed wire seconds as K grows (one
+            # fill block amortised over more and more hidden blocks)
+            if not all(b < a for a, b in zip(dma_exposed, dma_exposed[1:])):
+                raise SystemExit(
+                    f"pipeline gate: remote_dma exposed seconds not "
+                    f"strictly falling in K at ({nx},{ny}) T={T}: "
+                    f"{dma_exposed}")
+            emit(f"pipeline.modelled.T{T}.{nx}x{ny}",
+                 row["blocks"][str(K_SWEEP[-1])]["remote_dma"][
+                     "overlapped_step_time_s"] * 1e6,
+                 f"exposed_us_K1={dma_exposed[0]*1e6:.2f};"
+                 f"exposed_us_K{K_SWEEP[-1]}={dma_exposed[-1]*1e6:.2f}")
+            rows.append(row)
+    return rows
+
+
+_SUB_CODE = textwrap.dedent("""
+    import json, os, sys
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.roofline import halo_wire_bytes_model
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.stencil.advection import stratus_fields
+    from repro.stencil.distributed import (count_exchange_wire_bytes,
+                                           make_distributed_run,
+                                           make_distributed_step,
+                                           reference_global_step,
+                                           remote_dma_schedule_wire_bytes)
+
+    cfg = json.loads(sys.argv[1])
+    X, Y, Z = cfg["grid"]
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    K = cfg["n_blocks"]
+    rows = []
+    for nx, ny, T, lk in cfg["cases"]:
+        mesh = make_stencil_mesh(nx, ny)
+        sh = NamedSharding(mesh, P("x", "y", None))
+        args = [jax.device_put(t, sh) for t in (u, v, w)]
+        kw = dict(axis="y", x_axis="x", T=T, dt=0.005, local_kernel=lk,
+                  overlap=True)
+        runs = {ex: make_distributed_run(mesh, p, n_blocks=K, exchange=ex,
+                                         **kw)
+                for ex in ("collective", "remote_dma")}
+        outs = {ex: fn(*args) for ex, fn in runs.items()}
+        diff_engines = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                           zip(outs["collective"], outs["remote_dma"]))
+        # K sequential one-block steps, dma_block_index alternating parity
+        seq = args
+        for k in range(K):
+            seq = make_distributed_step(mesh, p, exchange="remote_dma",
+                                        dma_block_index=k, **kw)(*seq)
+        diff_seq = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                       zip(outs["remote_dma"], seq))
+        ref = reference_global_step(u, v, w, p, T=K * T, dt=0.005)
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                  zip(outs["remote_dma"], ref))
+        counted_run = count_exchange_wire_bytes(runs["remote_dma"], u, v, w)
+        counted_step = count_exchange_wire_bytes(
+            make_distributed_step(mesh, p, exchange="remote_dma", **kw),
+            u, v, w)
+        model = halo_wire_bytes_model(X, Y, Z, 4, nx=nx, ny=ny, T=T)
+        sched = remote_dma_schedule_wire_bytes(X // nx, Y // ny, Z, 4,
+                                               nx=nx, ny=ny, T=T)
+        hops = [-(-T // (X // nx)) if nx > 1 else 0,
+                -(-T // (Y // ny)) if ny > 1 else 0]
+        rows.append({"mesh": [nx, ny], "T": T, "n_blocks": K,
+                     "local_kernel": lk, "hops_xy": hops,
+                     "counted_run_wire_bytes": counted_run,
+                     "counted_step_wire_bytes": counted_step,
+                     "modelled_wire_bytes": model,
+                     "schedule_wire_bytes": sched,
+                     "bitwise_diff_engines": diff_engines,
+                     "bitwise_diff_vs_sequential": diff_seq,
+                     "max_err_vs_oracle": err})
+    print(json.dumps({"counted": rows}))
+""")
+
+
+def _subprocess_rows(smoke: bool):
+    """K-block bitwise + trace-once + wire-byte gates on 4 forced host
+    devices, swept across hop counts (the scaling2d subprocess idiom)."""
+    # (nx, ny, T, local_kernel): Yl = 4 on the (1, 4) mesh, so T = 2/6/10
+    # takes 1/2/3 band messages (hops) per side; the (2, 2) case runs
+    # multi-hop in x (Xl = 3 < T = 4) and single-hop in y through the
+    # fused local kernel.
+    cases = ([[1, 4, 2, "reference"], [1, 4, 6, "reference"],
+              [2, 2, 4, "fused"]] if smoke else
+             [[1, 4, 2, "reference"], [1, 4, 6, "reference"],
+              [1, 4, 10, "reference"], [2, 2, 2, "fused"],
+              [2, 2, 4, "fused"]])
+    cfg = {"grid": [6, 16, 12], "n_blocks": 3, "cases": cases}
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.update({
+        "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+        "PYTHONPATH": os.pathsep.join(
+            [os.path.join(root, "src"), root,
+             env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+    })
+    r = subprocess.run([sys.executable, "-c", _SUB_CODE, json.dumps(cfg)],
+                       capture_output=True, text=True, cwd=root, env=env,
+                       timeout=900)
+    if r.returncode != 0:
+        raise SystemExit(f"pipeline subprocess failed:\n{r.stderr[-3000:]}")
+    payload = json.loads(r.stdout.strip().splitlines()[-1])
+    for row in payload["counted"]:
+        if not (row["counted_run_wire_bytes"]
+                == row["counted_step_wire_bytes"]
+                == row["modelled_wire_bytes"]
+                == row["schedule_wire_bytes"]):
+            raise SystemExit(
+                f"pipeline gate: K-block counted "
+                f"{row['counted_run_wire_bytes']} / single-step counted "
+                f"{row['counted_step_wire_bytes']} / modelled "
+                f"{row['modelled_wire_bytes']} / schedule "
+                f"{row['schedule_wire_bytes']} wire bytes differ for {row} "
+                "— the K-block jaxpr must contain the step body exactly "
+                "once (no per-block retrace) at every hop count")
+        if row["bitwise_diff_engines"] != 0.0:
+            raise SystemExit(
+                f"pipeline gate: K-block remote_dma differs from "
+                f"collective by {row['bitwise_diff_engines']} for {row}")
+        if row["bitwise_diff_vs_sequential"] != 0.0:
+            raise SystemExit(
+                f"pipeline gate: K-block run differs from K sequential "
+                f"alternating-parity steps by "
+                f"{row['bitwise_diff_vs_sequential']} for {row}")
+        if row["max_err_vs_oracle"] >= 1e-4:
+            raise SystemExit(
+                f"pipeline gate: K-block run drifted "
+                f"{row['max_err_vs_oracle']} from the global oracle "
+                f"for {row}")
+        emit(f"pipeline.counted.{row['mesh'][0]}x{row['mesh'][1]}"
+             f".T{row['T']}.K{row['n_blocks']}", 0.0,
+             f"wire_B={row['counted_run_wire_bytes']};"
+             f"hops_xy={row['hops_xy']};bitwise_equal=True")
+    return payload["counted"]
+
+
+def run(smoke: bool = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    modelled = _modelled_rows()
+    counted = _subprocess_rows(smoke)
+    payload = {
+        "modelled": modelled, "counted": counted, "itemsize": 4,
+        "contract": "K-block make_distributed_run output bitwise-equal to "
+                    "K sequential alternating-parity make_distributed_step "
+                    "calls AND to the K-block collective run, at every "
+                    "swept hop count; K-block jaxpr-counted wire bytes == "
+                    "single-step counted == halo_wire_bytes_model == "
+                    "remote_dma_schedule_wire_bytes exactly (step body "
+                    "traced once); modelled remote_dma exposed seconds "
+                    "strictly fall in K; hidden+exposed == collective_s",
+    }
+    out_path = os.path.join(os.getcwd(), "BENCH_pipeline.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("pipeline.json_written", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    run(smoke=_bootstrap.smoke_arg())

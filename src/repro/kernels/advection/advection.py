@@ -86,9 +86,12 @@ phase on the x-extended slab), freezing wrapped periodic halo planes/rows
 via `(x_interior_mask, y_interior_mask)`. `halo_band_exchange_dma` (below)
 is the in-kernel transport for that exchange: the T-deep boundary bands
 move by `pltpu.make_async_remote_copy` issued from inside a Pallas kernel
-into double-buffered recv slabs, instead of trusting XLA to schedule a
-`ppermute` — the paper's §IV "do the data movement yourself" lesson at the
-chip-to-chip level.
+— one copy per `_band_schedule` hop, multi-hop for T beyond the local
+extent — into double-buffered recv slabs whose slot parity is selected by
+a TRACED block counter, so `stencil.distributed.make_distributed_run` can
+alternate slots across K substep-blocks inside one traced program instead
+of trusting XLA to schedule a `ppermute` — the paper's §IV "do the data
+movement yourself" lesson at the chip-to-chip level.
 
 Validated with interpret=True against ref.pw_advect_ref, the f64 oracle, and
 the multi-step f64 oracle (fused) across shape/dtype/T/y_tile sweeps in
@@ -528,6 +531,30 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
 # ---------------------------------------------------------------------------
 
 
+def _band_schedule(L: int, depth: int):
+    """Per-hop band messages of one exchange side, shared by every engine.
+
+    Returns ``[(k, cnt, hi_off, lo_off), ...]``: hop k moves `cnt` =
+    min(L, depth-(k-1)L) planes/rows to/from the k-away ring neighbour, and
+    the received bands land at extended-slab offsets `hi_off` (band from
+    the predecessor side, global coordinates ascending) and `lo_off` (from
+    the successor side). Offsets partition the hi halo [0, depth) and the
+    lo halo [depth+L, depth+L+depth) of the extended slab exactly — the
+    recv-slab addresses the remote-DMA kernel writes and the emulation's
+    assembly both use, and the operand sizes
+    `stencil.distributed.remote_dma_schedule_wire_bytes` sums. Lives in
+    the kernels layer because `_kernel_band_dma` issues exactly one
+    `make_async_remote_copy` per (field, side, hop) entry of this list;
+    `stencil.distributed` re-exports it for the ppermute emulation.
+    """
+    hops = -(-depth // L)
+    sched = []
+    for k in range(1, hops + 1):
+        cnt = min(L, depth - (k - 1) * L)
+        sched.append((k, cnt, depth - (k - 1) * L - cnt, depth + k * L))
+    return sched
+
+
 def _band_slice(ref, dim: int, lo: int, size: int):
     """`size` planes (dim=0) or rows (dim=1) of `ref` starting at `lo`."""
     if dim == 0:
@@ -535,76 +562,95 @@ def _band_slice(ref, dim: int, lo: int, size: int):
     return ref.at[:, pl.ds(lo, size)]
 
 
+def _halo_slice(ref, slot, dim: int, lo: int, size: int):
+    """`size` planes/rows of the `slot` recv slab of a double-buffered
+    `(2,) + band` output ref, starting at halo-local offset `lo`. `slot`
+    may be a traced value (the dynamic DMA parity)."""
+    if dim == 0:
+        return ref.at[slot, pl.ds(lo, size)]
+    return ref.at[slot, :, pl.ds(lo, size)]
+
+
 def _kernel_band_dma(step_ref, u_ref, v_ref, w_ref,
                      uhi_ref, ulo_ref, vhi_ref, vlo_ref, whi_ref, wlo_ref,
-                     sbuf, stage_sem, send_sem, recv_sem, *,
-                     axis, mesh_axes, n, depth, dim, L):
+                     *scratch, axis, mesh_axes, n, depth, dim, L, sched):
     """One depth-T band exchange along mesh axis `axis`, issued as async
     remote DMA from INSIDE the kernel — the paper's §IV move of the
     transfer schedule out of the tooling's hands and into the kernel's.
 
-    Per field and side, the T-deep boundary band is staged through a VMEM
-    send slab (`make_async_copy`) and then `make_async_remote_copy`'d into
-    the ring neighbour's DOUBLE-BUFFERED recv slab (slot = block k % 2).
-    All six sends (3 fields x 2 sides) are started before any wait: the
-    DMAs fly concurrently and the issue order follows the fused ring's
-    consumption order (the x-lo band feeds the ring's earliest grid
-    steps). The entry barrier is the capacity handshake: both neighbours
-    have entered this block's exchange — and therefore vacated the slot
-    being written — before any band lands.
+    Per field, side and `_band_schedule` hop, a boundary band is staged
+    through a VMEM send slab (`make_async_copy`) and then
+    `make_async_remote_copy`'d into the k-away ring neighbour's
+    DOUBLE-BUFFERED recv slab, at the hop's `hi_off`/`lo_off` recv
+    offset (halo-local). All sends (3 fields x 2 sides x hops) are
+    started before any wait: the DMAs fly concurrently and the issue
+    order follows the fused ring's consumption order (the x-lo band
+    feeds the ring's earliest grid steps). The entry barrier is the
+    capacity handshake: every hop partner has entered this block's
+    exchange — and therefore vacated the slot being written — before any
+    band lands.
 
-    Scope honesty: ONE call exchanges one block's bands and waits them
-    all before returning; cross-block overlap (block k+1's bands landing
-    in the spare slot while block k's interior computes) is what the slot
-    parity is FOR, but it needs the pipelined multi-block driver that
-    alternates `dma_block_index` across persistent recv slabs — ROADMAPped,
-    not yet driven. What overlaps TODAY is the same thing the collective
-    engine overlaps: `overlap=True`'s interior pass has no data dependence
-    on this kernel's outputs, so it can be scheduled concurrently with
-    the exchange call.
+    The recv slot is `step_ref[0] % 2` — a TRACED value read from SMEM,
+    so a pipelined multi-block driver (`stencil.distributed.
+    make_distributed_run`) threads the block counter through ONE traced
+    program and alternates parity without retracing: block k+1's bands
+    always have a vacant slot to land in while block k's interior
+    computes. Scope honesty: this call still waits all its DMAs before
+    returning, so realising that cross-block landing needs the driver's
+    ROADMAPped boundary-first continuation — what is delivered here is
+    the dynamic parity and the multi-hop schedule.
 
-    The traffic is ring-symmetric (everyone sends its tail forward and its
-    head backward), so each device's descriptor pair also waits its OWN
-    incoming bands: `rdma.wait()` blocks on the local send semaphore and
-    on the recv semaphore its predecessor's copy signals.
+    The traffic is ring-symmetric (for every hop k, everyone sends its
+    tail forward-k and its head backward-k), so each device's descriptor
+    also waits its OWN incoming bands: `rdma.wait()` blocks on the local
+    send semaphore and on the recv semaphore its hop partner's copy
+    signals.
     """
+    hops = len(sched)
+    sbufs = scratch[:hops]
+    stage_sem, send_sem, recv_sem = scratch[hops:]
     slot = jax.lax.rem(step_ref[0], 2)
     coords = [jax.lax.axis_index(a) for a in mesh_axes]
-    fwd = dma_neighbor_coords(mesh_axes, coords, axis, 1, n)
-    bwd = dma_neighbor_coords(mesh_axes, coords, axis, -1, n)
     barrier = pltpu.get_barrier_semaphore()
-    for dev in (fwd, bwd):
-        pltpu.semaphore_signal(barrier, 1, device_id=dev,
-                               device_id_type=pltpu.DeviceIdType.MESH)
-    pltpu.semaphore_wait(barrier, 2)
+    for k, _, _, _ in sched:
+        for delta in (k, -k):
+            dev = dma_neighbor_coords(mesh_axes, coords, axis, delta, n)
+            pltpu.semaphore_signal(barrier, 1, device_id=dev,
+                                   device_id_type=pltpu.DeviceIdType.MESH)
+    pltpu.semaphore_wait(barrier, 2 * hops)
     rdmas = []
     for fi, (f_ref, hi_ref, lo_ref) in enumerate(
             ((u_ref, uhi_ref, ulo_ref), (v_ref, vhi_ref, vlo_ref),
              (w_ref, whi_ref, wlo_ref))):
-        # side 0: my tail -> successor's hi slab (it reads those planes/rows
-        # first); side 1: my head -> predecessor's lo slab
-        for si, (src_lo, dst_ref, dst_dev) in enumerate(
-                ((L - depth, hi_ref, fwd), (0, lo_ref, bwd))):
-            stage = pltpu.make_async_copy(
-                _band_slice(f_ref, dim, src_lo, depth),
-                sbuf.at[fi, si], stage_sem.at[fi, si])
-            stage.start()
-            stage.wait()
-            rdma = pltpu.make_async_remote_copy(
-                src_ref=sbuf.at[fi, si],
-                dst_ref=dst_ref.at[slot],
-                send_sem=send_sem.at[fi, si],
-                recv_sem=recv_sem.at[fi, si],
-                device_id=dst_dev,
-                device_id_type=pltpu.DeviceIdType.MESH)
-            rdma.start()
-            rdmas.append(rdma)
+        # side 0: my tail -> the k-away successor's hi slab (it reads those
+        # planes/rows first); side 1: my head -> the k-away predecessor's
+        # lo slab. Offsets are `_band_schedule`'s, rebased halo-local.
+        for hk, (k, cnt, hi_off, lo_off) in enumerate(sched):
+            fwd = dma_neighbor_coords(mesh_axes, coords, axis, k, n)
+            bwd = dma_neighbor_coords(mesh_axes, coords, axis, -k, n)
+            for si, (src_lo, dst_ref, dst_dev, dst_off) in enumerate(
+                    ((L - cnt, hi_ref, fwd, hi_off),
+                     (0, lo_ref, bwd, lo_off - (depth + L)))):
+                stage = pltpu.make_async_copy(
+                    _band_slice(f_ref, dim, src_lo, cnt),
+                    sbufs[hk].at[fi, si], stage_sem.at[fi, si, hk])
+                stage.start()
+                stage.wait()
+                rdma = pltpu.make_async_remote_copy(
+                    src_ref=sbufs[hk].at[fi, si],
+                    dst_ref=_halo_slice(dst_ref, slot, dim, dst_off, cnt),
+                    send_sem=send_sem.at[fi, si, hk],
+                    recv_sem=recv_sem.at[fi, si, hk],
+                    device_id=dst_dev,
+                    device_id_type=pltpu.DeviceIdType.MESH)
+                rdma.start()
+                rdmas.append(rdma)
     for rdma in rdmas:
         rdma.wait()
 
 
 def halo_band_exchange_dma(u, v, w, *, axis: str, mesh_axes, n: int,
-                           depth: int, dim: int, block_index: int = 0,
+                           depth: int, dim: int, block_index=0,
                            collective_id: int = 0):
     """Exchange depth-`depth` boundary bands of three fields along mesh
     axis `axis` via in-kernel async remote DMA (TPU compiled mode ONLY —
@@ -613,30 +659,39 @@ def halo_band_exchange_dma(u, v, w, *, axis: str, mesh_axes, n: int,
     two are gated bitwise-equal).
 
     Returns ``((u_hi, u_lo), (v_hi, v_lo), (w_hi, w_lo))`` where `hi` is
-    the band arriving from the ring predecessor (global coordinates just
-    below the shard) and `lo` from the successor — the same contract as
+    the band arriving from the ring predecessors (global coordinates just
+    below the shard) and `lo` from the successors — the same contract as
     the collective `_exchange_halos`, so the caller-side slab assembly and
-    the x-then-y corner ordering are engine-independent. `block_index` is
-    the substep-block number k; the receive slabs are double-buffered on
-    k % 2 (see `_kernel_band_dma`). `collective_id` must differ between
-    the x and y phases so their barrier semaphores stay distinct.
+    the x-then-y corner ordering are engine-independent. Multi-hop: when
+    `depth` exceeds the local extent, `_band_schedule` splits each side
+    into ceil(depth/L) band messages and the kernel issues one
+    `make_async_remote_copy` per (field, side, hop), each landing at its
+    schedule recv offset, so arbitrarily deep halos move without falling
+    back to the collective engine (the caller still bounds
+    T <= global extent - 2 — past that no interior cell exists whose
+    cone the ring can serve).
 
-    Single-hop only: `depth` beyond the local extent needs the multi-hop
-    collective engine (`exchange="collective"`); the distance-k
-    `make_async_remote_copy` generalisation is roadmapped.
+    `block_index` is the substep-block number k — a Python int or a
+    TRACED scalar: the receive slabs are double-buffered on k % 2 and the
+    parity is selected dynamically (SMEM-read slot in the kernel,
+    `dynamic_index_in_dim` on the outputs), so the pipelined multi-block
+    driver alternates slots inside one traced program instead of
+    rebuilding per block. `collective_id` must differ between the x and y
+    phases so their barrier semaphores stay distinct.
     """
     if dim not in (0, 1):
         raise ValueError(f"dim must be 0 (x-planes) or 1 (y-rows), got {dim}")
-    L = u.shape[dim]
-    if depth > L:
-        raise NotImplementedError(
-            f"in-kernel remote-DMA exchange is single-hop: depth {depth} "
-            f"exceeds the local extent {L}; use exchange='collective' "
-            "(multi-hop ppermute) for halos deeper than one shard")
     if depth < 1:
         raise ValueError(f"depth must be >= 1, got {depth}")
+    L = u.shape[dim]
+    sched = _band_schedule(L, depth)
     band_shape = ((depth,) + u.shape[1:] if dim == 0
                   else (u.shape[0], depth) + u.shape[2:])
+
+    def stage_shape(cnt):
+        return ((cnt,) + u.shape[1:] if dim == 0
+                else (u.shape[0], cnt) + u.shape[2:])
+
     any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
     smem_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
     out_shape = [jax.ShapeDtypeStruct((2,) + band_shape, u.dtype)
@@ -644,22 +699,27 @@ def halo_band_exchange_dma(u, v, w, *, axis: str, mesh_axes, n: int,
     fn = pl.pallas_call(
         functools.partial(_kernel_band_dma, axis=axis,
                           mesh_axes=tuple(mesh_axes), n=n, depth=depth,
-                          dim=dim, L=L),
+                          dim=dim, L=L, sched=tuple(sched)),
         in_specs=[smem_spec, any_spec, any_spec, any_spec],
         out_specs=[any_spec] * 6,
         out_shape=out_shape,
-        scratch_shapes=[
-            pltpu.VMEM((3, 2) + band_shape, u.dtype),   # staged send bands
-            pltpu.SemaphoreType.DMA((3, 2)),            # HBM->VMEM staging
-            pltpu.SemaphoreType.DMA((3, 2)),            # remote send
-            pltpu.SemaphoreType.DMA((3, 2)),            # remote recv
-        ],
+        scratch_shapes=(
+            # one staged-send slab per hop, sized to that hop's band
+            [pltpu.VMEM((3, 2) + stage_shape(cnt), u.dtype)
+             for _, cnt, _, _ in sched]
+            + [pltpu.SemaphoreType.DMA((3, 2, len(sched))),  # staging
+               pltpu.SemaphoreType.DMA((3, 2, len(sched))),  # remote send
+               pltpu.SemaphoreType.DMA((3, 2, len(sched)))]  # remote recv
+        ),
         compiler_params=pltpu.TPUCompilerParams(collective_id=collective_id),
     )
-    step = jnp.full((1,), block_index, jnp.int32)
-    outs = fn(step, u, v, w)
-    slot = block_index % 2
-    sel = [o[slot] for o in outs]
+    block = jnp.asarray(block_index, jnp.int32)
+    outs = fn(block.reshape((1,)), u, v, w)
+    # dynamic parity: traced block counters (the pipelined driver's
+    # fori_loop induction variable) select the recv slot without retracing
+    slot = jax.lax.rem(block, 2)
+    sel = [jax.lax.dynamic_index_in_dim(o, slot, 0, keepdims=False)
+           for o in outs]
     return ((sel[0], sel[1]), (sel[2], sel[3]), (sel[4], sel[5]))
 
 

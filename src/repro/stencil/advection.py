@@ -73,11 +73,16 @@ class AdvectionDomain:
     exchange: str = "collective"      # halo-band transport engine and
     overlap: bool = False             # interior/boundary split, for the
                                       # overlap-efficiency accounting below
+    n_blocks: int = 1                 # substep-blocks per pipelined
+                                      # make_distributed_run program
+                                      # (1 = the one-block step)
 
     def __post_init__(self):
         if self.exchange not in ("collective", "remote_dma"):
             raise ValueError(f"exchange must be 'collective' or "
                              f"'remote_dma', got {self.exchange!r}")
+        if self.n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
         object.__setattr__(self, "params",
                            REF.default_params(self.Z,
                                               dtype=jnp.dtype(self.dtype)))
@@ -243,19 +248,44 @@ class AdvectionDomain:
                                           exchange=self.exchange,
                                           interior_fraction=frac)
 
+    def pipeline_efficiency(self) -> float:
+        """Per-block hidden fraction over an `n_blocks`-block pipelined
+        run (`roofline.pipeline_efficiency_model` over this domain's
+        shard geometry): the remote-DMA engine's cross-block
+        double-buffered hiding pays one pipeline-fill block, the
+        collective engine's within-block figure is K-independent. Equals
+        `overlap_efficiency()` for the collective engine; 0.0 on a 1x1
+        mesh, with overlap=False, or for an isolated remote-DMA block
+        (n_blocks=1 — its kernel serialises its own waits)."""
+        if self.mesh_nx * self.mesh_ny == 1:
+            return 0.0
+        Xl, Yl = self.shard_shape()
+        frac = R.interior_compute_fraction(Xl, Yl, self.substeps_per_step(),
+                                           nx=self.mesh_nx, ny=self.mesh_ny)
+        return R.pipeline_efficiency_model(n_blocks=self.n_blocks,
+                                           overlap=self.overlap,
+                                           exchange=self.exchange,
+                                           interior_fraction=frac)
+
     def roofline_terms(self) -> R.RooflineTerms:
         """Three-term roofline of one distributed step() on the configured
         (mesh_nx, mesh_ny) mesh, with the exchange bytes feeding
         ``collective_s`` and the engine's overlap efficiency splitting it
-        into hidden vs exposed seconds."""
+        into hidden vs exposed seconds. With `n_blocks > 1` the split uses
+        the pipelined per-block efficiency (`pipeline_efficiency`) — the
+        terms then price one block of the `make_distributed_run` program;
+        `n_blocks=1` keeps the single-block `overlap_efficiency` figure
+        (back-compat: BENCH_overlap's ladder)."""
         n_dev = self.mesh_nx * self.mesh_ny
+        eff = (self.pipeline_efficiency() if self.n_blocks > 1
+               else self.overlap_efficiency())
         return R.RooflineTerms(
             flops_per_dev=self.flops_per_step() / n_dev,
             hbm_bytes_per_dev=self.hbm_bytes_per_shard_step(),
             ici_wire_bytes=self.halo_wire_bytes_per_step(),
             dcn_wire_bytes=0.0,
             n_chips=n_dev,
-            overlap_efficiency=self.overlap_efficiency())
+            overlap_efficiency=eff)
 
     def vmem_register_bytes(self) -> int:
         """VMEM shift-register footprint of the current configuration."""

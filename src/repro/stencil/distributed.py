@@ -35,12 +35,28 @@ byte-identical bands through byte-identical phases, so
     (`kernels.advection.advection.halo_band_exchange_dma`) into
     double-buffered recv slabs (slot = substep-block k % 2, so block k+1's
     bands land while block k computes). The kernel owns its issue/wait
-    schedule instead of trusting XLA. Compiled mode requires a TPU backend
-    (Mosaic semaphores have no CPU lowering) and is single-hop; in
-    interpret mode the engine runs a schedule-faithful emulation — the
-    same per-hop band messages and recv-slab assembly offsets
-    (`_band_schedule`), transported by ppermute — which the tests and
-    BENCH_overlap.json gate BITWISE-equal to the collective engine.
+    schedule instead of trusting XLA. Multi-hop like the collective
+    engine: one `make_async_remote_copy` per `_band_schedule` hop, each
+    landing at its recv-slab offset, so T beyond the local extent moves
+    without an engine fallback. Compiled mode requires a TPU backend
+    (Mosaic semaphores have no CPU lowering); in interpret mode the
+    engine runs a schedule-faithful emulation — the same per-hop band
+    messages and recv-slab assembly offsets (`_band_schedule`),
+    transported by ppermute — which the tests and BENCH_overlap.json /
+    BENCH_pipeline.json gate BITWISE-equal to the collective engine.
+
+The slot parity is exploited by the pipelined multi-block driver
+`make_distributed_run(n_blocks=K)`: ONE jitted program runs K
+substep-blocks (K*T substeps) with the block counter threaded as a TRACED
+`lax.fori_loop` induction variable into the engine's recv-slot selection,
+so the step body is traced exactly once for any K and alternating parity
+gives block k+1's bands a vacant recv slot to land in while block k's
+interior pass computes. `roofline.pipeline_efficiency_model` prices that
+INTENDED steady-state schedule; the traced body today still orders
+exchange before compute within each block, so realising the cross-block
+landing needs the boundary-first async continuation the ROADMAP lists —
+the gates here are trace-once and bitwise equivalence, not measured
+overlap.
 
 `local_kernel="fused"` runs the per-shard slab update through the v4
 Pallas kernel instead of the jnp reference loop, composing the depth-T
@@ -85,26 +101,11 @@ from repro.kernels.advection.ref import (AdvectParams, pw_advect_ref,
 
 EXCHANGES = ("collective", "remote_dma")
 
-
-def _band_schedule(L: int, depth: int):
-    """Per-hop band messages of one exchange side, shared by every engine.
-
-    Returns ``[(k, cnt, hi_off, lo_off), ...]``: hop k moves `cnt` =
-    min(L, depth-(k-1)L) planes/rows to/from the k-away ring neighbour, and
-    the received bands land at extended-slab offsets `hi_off` (band from
-    the predecessor side, global coordinates ascending) and `lo_off` (from
-    the successor side). Offsets partition the hi halo [0, depth) and the
-    lo halo [depth+L, depth+L+depth) of the extended slab exactly — the
-    recv-slab addresses the remote-DMA kernel writes and the emulation's
-    assembly both use, and the operand sizes
-    `remote_dma_schedule_wire_bytes` sums.
-    """
-    hops = -(-depth // L)
-    sched = []
-    for k in range(1, hops + 1):
-        cnt = min(L, depth - (k - 1) * L)
-        sched.append((k, cnt, depth - (k - 1) * L - cnt, depth + k * L))
-    return sched
+# The per-hop band schedule lives in the kernels layer (`_kernel_band_dma`
+# issues one `make_async_remote_copy` per entry); re-exported here because
+# the ppermute emulation, the wire pricing and the tests all address recv
+# slabs through it.
+_band_schedule = K._band_schedule
 
 
 def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
@@ -256,68 +257,9 @@ def make_distributed_advect(mesh: Mesh, params: AdvectParams,
     return jax.jit(fn)
 
 
-def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
-                          axis: str = "data", x_axis: Optional[str] = None,
-                          T: int = 1, dt: float = 1.0,
-                          local_kernel: str = "reference",
-                          y_tile: Optional[int] = None,
-                          interpret: bool = True,
-                          overlap: bool = False,
-                          exchange: str = "collective",
-                          dma_block_index: int = 0):
-    """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
-
-    `axis` is the mesh axis decomposing y. With `x_axis` the step runs on a
-    2D (x, y) device mesh — each shard owns an (X/nx, Y/ny, Z) slab and the
-    exchange is the two-phase x-then-y ordering described in the module
-    docstring (corners ride phase 2; no diagonal sends). An axis of size 1
-    exchanges nothing along that direction.
-
-    Every exchange engine's wrapped ring is periodic, so shards at the
-    global edges receive wrapped (wrong) halo data — but every substep
-    masks the source to zero outside the *global* interior, and a depth-1
-    stencil cannot carry values past an unchanging row: the global-boundary
-    row is a wall, the wrapped rows never contaminate the trimmed result.
-    The same mask argument lifts the old single-hop T <= local-extent
-    restriction on the collective engine: multi-hop `_exchange_halos`
-    fetches arbitrarily deep halos, so the only hard bound left there is
-    T <= global extent - 2 along each decomposed axis (beyond that no
-    interior cell exists whose depth-T cone the ring can serve).
-
-    `exchange` selects the band transport (module docstring): "collective"
-    is XLA-scheduled ppermute; "remote_dma" issues the bands from inside a
-    Pallas kernel via `pltpu.make_async_remote_copy` in compiled mode
-    (TPU-only — any other backend raises RuntimeError at build time;
-    single-hop, so T must fit the local extent) and runs the
-    schedule-faithful ppermute emulation in interpret mode (bitwise-equal
-    to "collective" — the gate CI runs). `dma_block_index` is the substep
-    block number k, selecting the engine's double-buffered recv slot
-    (k % 2): a pipelined multi-block driver rebuilds with alternating
-    parity so block k+1's bands land beside block k's.
-
-    `local_kernel` selects the per-shard slab update: "reference" is the
-    jnp T-substep loop; "fused" streams the slab through the v4 Pallas
-    kernel (one HBM pass for all T substeps), passing the global-interior
-    masks as the kernel's `(x_interior_mask, y_interior_mask)` and
-    composing with the kernel's in-grid `(y_tile, x)` tiling via `y_tile`
-    — the shard slab keeps a VMEM-bounded register no matter how wide the
-    shard is.
-
-    `overlap=True` additionally computes the halo-independent interior of
-    each shard in a pass that consumes NO exchange output, so it can run
-    concurrently with both exchange phases (the paper's §IV DMA/compute
-    overlap, chip-to-chip); only the T-deep boundary bands then wait on
-    the exchange. The boundary pass covers the whole slab (the repo's
-    established overlap idiom, cf. `make_distributed_advect`) — the cost
-    is one extra local pass, the win is that the exchange latency is
-    hidden behind a full interior update; how much is hidden per engine is
-    `roofline.overlap_efficiency_model`'s business.
-
-    Wire cost: T rows per neighbour per exchange (per `roofline.
-    halo_wire_bytes_model`, identical for both engines), so bytes-on-wire
-    per substep are flat in T while the exchange *count* falls as 1/T —
-    latency-bound small halos amortise T×.
-    """
+def _check_step_config(T: int, local_kernel: str, exchange: str,
+                       interpret: bool) -> None:
+    """Shared build-time validation for the step and run drivers."""
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
     if local_kernel not in ("reference", "fused"):
@@ -336,6 +278,17 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
                 f"{backend!r}. Use exchange='collective', or interpret=True "
                 "for the schedule-faithful emulation.")
 
+
+def _build_local_block(mesh: Mesh, params: AdvectParams, *, axis: str,
+                       x_axis: Optional[str], T: int, dt: float,
+                       local_kernel: str, y_tile: Optional[int],
+                       interpret: bool, overlap: bool, exchange: str):
+    """The per-shard substep-block body shared by `make_distributed_step`
+    (one block, static `dma_block_index`) and `make_distributed_run`
+    (K blocks, the block counter a traced `fori_loop` induction variable
+    feeding the remote-DMA engine's recv-slot parity). Returns
+    ``local_block(u, v, w, block_index) -> (u, v, w)``.
+    """
     n_y = mesh.shape[axis]
     n_x = mesh.shape[x_axis] if x_axis is not None else 1
 
@@ -362,7 +315,7 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
             ws = ws + dt * jnp.where(m, sw, 0.0)
         return us, vs, ws
 
-    def local(u, v, w):
+    def local_block(u, v, w, block_index):
         Xl, Yl, Z = u.shape
         X_g, Y_g = n_x * Xl, n_y * Yl
         dx = T if n_x > 1 else 0
@@ -390,7 +343,7 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
                         for f in fields)
                 bands = K.halo_band_exchange_dma(
                     *fields, axis=ax_name, mesh_axes=mesh.axis_names,
-                    n=n, depth=T, dim=dim, block_index=dma_block_index,
+                    n=n, depth=T, dim=dim, block_index=block_index,
                     collective_id=cid)
                 return tuple(jnp.concatenate([hi, f, lo], axis=dim)
                              for f, (hi, lo) in zip(fields, bands))
@@ -440,6 +393,12 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
         sel = (ok_x[:, None] & ok_y[None, :])[:, :, None]
         return tuple(jnp.where(sel, i, b) for i, b in zip(inner, out))
 
+    return local_block
+
+
+def _wrap_shard_map(local, mesh: Mesh, axis: str, x_axis: Optional[str],
+                    local_kernel: str, exchange: str, interpret: bool):
+    """jit(shard_map(local)) with the repo's spec/check_rep conventions."""
     spec = (P(None, axis, None) if x_axis is None
             else P(x_axis, axis, None))
     # check_rep=False whenever a Pallas kernel runs per shard (the fused
@@ -451,6 +410,135 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
                    out_specs=(spec, spec, spec),
                    check_rep=not uses_pallas)
     return jax.jit(fn)
+
+
+def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
+                          axis: str = "data", x_axis: Optional[str] = None,
+                          T: int = 1, dt: float = 1.0,
+                          local_kernel: str = "reference",
+                          y_tile: Optional[int] = None,
+                          interpret: bool = True,
+                          overlap: bool = False,
+                          exchange: str = "collective",
+                          dma_block_index: int = 0):
+    """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
+
+    `axis` is the mesh axis decomposing y. With `x_axis` the step runs on a
+    2D (x, y) device mesh — each shard owns an (X/nx, Y/ny, Z) slab and the
+    exchange is the two-phase x-then-y ordering described in the module
+    docstring (corners ride phase 2; no diagonal sends). An axis of size 1
+    exchanges nothing along that direction.
+
+    Every exchange engine's wrapped ring is periodic, so shards at the
+    global edges receive wrapped (wrong) halo data — but every substep
+    masks the source to zero outside the *global* interior, and a depth-1
+    stencil cannot carry values past an unchanging row: the global-boundary
+    row is a wall, the wrapped rows never contaminate the trimmed result.
+    The same mask argument lifts the old T <= local-extent restriction on
+    BOTH engines: multi-hop `_exchange_halos` / `halo_band_exchange_dma`
+    fetch arbitrarily deep halos, so the only hard bound left is
+    T <= global extent - 2 along each decomposed axis (beyond that no
+    interior cell exists whose depth-T cone the ring can serve).
+
+    `exchange` selects the band transport (module docstring): "collective"
+    is XLA-scheduled ppermute; "remote_dma" issues the bands from inside a
+    Pallas kernel via `pltpu.make_async_remote_copy` in compiled mode
+    (TPU-only — any other backend raises RuntimeError at build time;
+    multi-hop via one remote copy per `_band_schedule` hop, so T is
+    bounded only by the global extent like the collective engine) and
+    runs the schedule-faithful ppermute emulation in interpret mode
+    (bitwise-equal to "collective" — the gate CI runs). `dma_block_index`
+    is the substep block number k, selecting the engine's double-buffered
+    recv slot (k % 2) DYNAMICALLY — alternating parity never retraces;
+    `make_distributed_run` threads a traced counter through K blocks in
+    one program so block k+1's bands land beside block k's.
+
+    `local_kernel` selects the per-shard slab update: "reference" is the
+    jnp T-substep loop; "fused" streams the slab through the v4 Pallas
+    kernel (one HBM pass for all T substeps), passing the global-interior
+    masks as the kernel's `(x_interior_mask, y_interior_mask)` and
+    composing with the kernel's in-grid `(y_tile, x)` tiling via `y_tile`
+    — the shard slab keeps a VMEM-bounded register no matter how wide the
+    shard is.
+
+    `overlap=True` additionally computes the halo-independent interior of
+    each shard in a pass that consumes NO exchange output, so it can run
+    concurrently with both exchange phases (the paper's §IV DMA/compute
+    overlap, chip-to-chip); only the T-deep boundary bands then wait on
+    the exchange. The boundary pass covers the whole slab (the repo's
+    established overlap idiom, cf. `make_distributed_advect`) — the cost
+    is one extra local pass, the win is that the exchange latency is
+    hidden behind a full interior update; how much is hidden per engine is
+    `roofline.overlap_efficiency_model`'s business.
+
+    Wire cost: T rows per neighbour per exchange (per `roofline.
+    halo_wire_bytes_model`, identical for both engines), so bytes-on-wire
+    per substep are flat in T while the exchange *count* falls as 1/T —
+    latency-bound small halos amortise T×.
+    """
+    _check_step_config(T, local_kernel, exchange, interpret)
+    local_block = _build_local_block(
+        mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+        local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
+        overlap=overlap, exchange=exchange)
+
+    def local(u, v, w):
+        return local_block(u, v, w, dma_block_index)
+
+    return _wrap_shard_map(local, mesh, axis, x_axis, local_kernel,
+                           exchange, interpret)
+
+
+def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
+                         n_blocks: int, axis: str = "data",
+                         x_axis: Optional[str] = None,
+                         T: int = 1, dt: float = 1.0,
+                         local_kernel: str = "reference",
+                         y_tile: Optional[int] = None,
+                         interpret: bool = True,
+                         overlap: bool = False,
+                         exchange: str = "collective"):
+    """Returns jit(run): `n_blocks` substep-blocks (n_blocks * T Euler
+    substeps, ONE depth-T exchange per block) in ONE traced program — the
+    pipelined multi-block driver the remote-DMA engine's double-buffered
+    recv slabs exist for.
+
+    The block counter is a `lax.fori_loop` induction variable threaded —
+    TRACED — into the exchange engine (`dma_block_index` in the one-block
+    `make_distributed_step`): the remote-DMA engine's recv-slot parity is
+    selected dynamically per block (`lax.rem`-indexed, SMEM `step_ref` in
+    the kernel), so alternating parity across blocks costs NO retrace or
+    recompile — the step body appears exactly once in the jaxpr for any
+    `n_blocks`, and block k+1's bands always have a vacant recv slot to
+    land in while block k's interior pass computes.
+    `roofline.pipeline_efficiency_model` prices that INTENDED schedule
+    (one fill block, steady-state hidden fraction); scope honesty: the
+    traced body still orders exchange before compute within a block, so
+    the cross-block landing is what the parity/slots make POSSIBLE, not
+    yet what XLA is forced to do — the boundary-first async continuation
+    is the ROADMAPped follow-on, and `benchmarks/pipeline_sweep.py` gates
+    what IS delivered: one trace for all K blocks and bitwise
+    equivalence. Semantics are exactly K sequential
+    `make_distributed_step` calls with `dma_block_index = 0..K-1` —
+    bitwise, the acceptance gate.
+
+    All other arguments mean what they mean on `make_distributed_step`.
+    """
+    if n_blocks < 1:
+        raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+    _check_step_config(T, local_kernel, exchange, interpret)
+    local_block = _build_local_block(
+        mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+        local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
+        overlap=overlap, exchange=exchange)
+
+    def local(u, v, w):
+        def body(k, carry):
+            return local_block(*carry, k)
+        return jax.lax.fori_loop(0, n_blocks, body, (u, v, w))
+
+    return _wrap_shard_map(local, mesh, axis, x_axis, local_kernel,
+                           exchange, interpret)
 
 
 def _iter_jaxprs(val):
@@ -478,6 +566,12 @@ def count_exchange_wire_bytes(fn, *args) -> int:
     `roofline.halo_wire_bytes_model` exactly. This function is the
     measured counterpart of that model; the scaling2d and overlap
     benchmarks gate the two against each other exactly.
+
+    On a `make_distributed_run` program the `fori_loop` body jaxpr is
+    walked ONCE, so the count is the PER-BLOCK wire bytes independent of
+    `n_blocks` — which is itself the pipeline benchmark's trace-once
+    gate: a driver that unrolled or retraced per block would count K
+    times the model.
     """
     closed = jax.make_jaxpr(fn)(*args)
     total = 0

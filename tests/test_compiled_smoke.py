@@ -91,6 +91,52 @@ def test_compiled_remote_dma_exchange_matches_collective():
 
 
 @_opted_in
+def test_compiled_pipelined_multiblock_multihop_remote_dma():
+    """The pipelined endgame on real hardware: ONE compiled program runs
+    K blocks with the remote-DMA engine's recv-slot parity alternating on
+    the traced block counter, at a T DEEPER than the local extent (2-hop
+    `make_async_remote_copy` schedule). Must match the collective run and
+    K sequential alternating-parity steps. Needs >= 2 TPU devices."""
+    _require_tpu()
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.stencil.advection import stratus_fields
+    from repro.stencil.distributed import (make_distributed_run,
+                                           make_distributed_step)
+
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("pipelined remote-DMA smoke needs >= 2 TPU devices")
+    ny, K = 2, 3
+    X, Y, Z = 6, 8 * ny, 128
+    T = 10                      # Yl = 8 -> 2 hops per side
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    mesh = make_stencil_mesh(1, ny)
+    sh = NamedSharding(mesh, P("x", "y", None))
+    args = [jax.device_put(t, sh) for t in (u, v, w)]
+    kw = dict(axis="y", x_axis="x", T=T, dt=0.01, local_kernel="fused",
+              interpret=False, overlap=True)
+    ref = make_distributed_run(mesh, p, n_blocks=K,
+                               exchange="collective", **kw)(*args)
+    out = make_distributed_run(mesh, p, n_blocks=K,
+                               exchange="remote_dma", **kw)(*args)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    seq = args
+    for k in range(K):
+        seq = make_distributed_step(mesh, p, exchange="remote_dma",
+                                    dma_block_index=k, **kw)(*seq)
+    for a, b in zip(out, seq):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@_opted_in
 def test_compiled_dataflow_grid_tiled_smoke():
     _require_tpu()
     from repro.kernels.advection.advection import advect_dataflow

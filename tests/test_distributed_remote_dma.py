@@ -4,8 +4,9 @@ local_kernel) — the two engines assemble the same extended slab through
 different transports — and the engine's counted wire bytes must match
 `halo_wire_bytes_model` exactly. Multi-device sweeps use the subprocess
 idiom (`tests/_subproc.run_ok`, JAX_PLATFORMS=cpu pinned); fast-tier cases
-cover wiring, ring-neighbour math and the single-hop restriction of the
-compiled DMA kernel.
+cover wiring, ring-neighbour math and the multi-hop trace contract of the
+compiled DMA kernel (one `make_async_remote_copy` per `_band_schedule`
+hop; the pipelined K-block driver rides tests/test_pipeline_driver.py).
 """
 import textwrap
 
@@ -80,18 +81,17 @@ def test_ring_neighbor_math():
         dma_neighbor_coords(("x",), (0,), "z", 1, 2)
 
 
-def test_dma_kernel_is_single_hop():
-    """The compiled in-kernel exchange refuses halos deeper than one shard
-    (multi-hop is the collective engine's job) — checked before any Pallas
-    construction, so it fails fast on any backend."""
+def test_dma_kernel_validates_args():
+    """Argument validation fails fast on any backend, before any Pallas
+    construction. Depth beyond the local extent is NOT an error any more
+    (multi-hop landed — `test_dma_kernel_traces_under_shard_map` traces
+    it); the only remaining depth bound, T > global extent - 2, lives in
+    the step/run drivers."""
     import jax.numpy as jnp
 
     from repro.kernels.advection.advection import halo_band_exchange_dma
 
     f = jnp.zeros((4, 8, 16), jnp.float32)
-    with pytest.raises(NotImplementedError, match="single-hop"):
-        halo_band_exchange_dma(f, f, f, axis="x", mesh_axes=("x",), n=2,
-                               depth=5, dim=0)
     with pytest.raises(ValueError, match="dim"):
         halo_band_exchange_dma(f, f, f, axis="x", mesh_axes=("x",), n=2,
                                depth=2, dim=2)
@@ -102,9 +102,9 @@ def test_dma_kernel_is_single_hop():
 
 def test_dma_kernel_traces_under_shard_map():
     """Abstract tracing of the real `make_async_remote_copy` kernel (both
-    phases, both slot parities) must succeed on any backend — Mosaic
-    lowering is TPU-only, but a trace regression would break the compiled
-    path silently until the next TPU run."""
+    phases, both slot parities, single- AND multi-hop depths) must succeed
+    on any backend — Mosaic lowering is TPU-only, but a trace regression
+    would break the compiled path silently until the next TPU run."""
     import jax
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
@@ -115,17 +115,48 @@ def test_dma_kernel_traces_under_shard_map():
 
     mesh = make_stencil_mesh(1, 1)
     spec = P("x", "y", None)
-    for dim, block in ((0, 0), (1, 1)):
-        def local(u, v, w, dim=dim, block=block):
+    # depth 10 > L=8 rows (2 hops), depth 14 > L=6 planes (3 hops)
+    for dim, depth, block in ((0, 2, 0), (1, 2, 1), (1, 10, 0),
+                              (0, 14, 1)):
+        def local(u, v, w, dim=dim, depth=depth, block=block):
             bands = halo_band_exchange_dma(
                 u, v, w, axis=("x", "y")[dim], mesh_axes=mesh.axis_names,
-                n=1, depth=2, dim=dim, block_index=block,
+                n=4, depth=depth, dim=dim, block_index=block,
                 collective_id=dim)
             (uh, ul), _, _ = bands
             return uh + ul
         fn = shard_map(local, mesh=mesh, in_specs=(spec,) * 3,
                        out_specs=spec, check_rep=False)
         jax.make_jaxpr(fn)(*[jnp.zeros((6, 8, 16), jnp.float32)] * 3)
+
+
+def test_dma_kernel_traces_with_traced_block_index():
+    """The dynamic-parity bugfix: a TRACED block counter (the pipelined
+    driver's fori_loop induction variable) must flow through the recv-slot
+    selection — Python-level `o[slot]` indexing would raise a
+    TracerIntegerConversionError here."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.advection.advection import halo_band_exchange_dma
+    from repro.launch.mesh import make_stencil_mesh
+
+    mesh = make_stencil_mesh(1, 1)
+    spec = P("x", "y", None)
+
+    def local(u, v, w, k):
+        bands = halo_band_exchange_dma(
+            u, v, w, axis="y", mesh_axes=mesh.axis_names, n=4, depth=10,
+            dim=1, block_index=k, collective_id=1)
+        (uh, ul), _, _ = bands
+        return uh + ul
+
+    fn = shard_map(local, mesh=mesh, in_specs=(spec,) * 3 + (P(),),
+                   out_specs=spec, check_rep=False)
+    jax.make_jaxpr(fn)(*[jnp.zeros((6, 8, 16), jnp.float32)] * 3,
+                       jnp.int32(3))
 
 
 # --- slow tier: multi-device bitwise equivalence ---------------------------

@@ -9,7 +9,8 @@ import pytest
 from repro.core import roofline as R
 from repro.core.roofline import (RooflineTerms, halo_wire_bytes_model,
                                  interior_compute_fraction,
-                                 overlap_efficiency_model)
+                                 overlap_efficiency_model,
+                                 pipeline_efficiency_model)
 from repro.stencil.advection import AdvectionDomain
 from repro.stencil.distributed import remote_dma_schedule_wire_bytes
 
@@ -65,6 +66,66 @@ def test_overlap_efficiency_validation():
         _terms(1e9, 1.5)
     with pytest.raises(ValueError, match="overlap_efficiency"):
         _terms(1e9, -0.1)
+
+
+def test_overlapped_bound_ranks_exposed_seconds():
+    """`bound` ranks the raw collective_s; `overlapped_bound` ranks what
+    is actually left on the critical path — a well-hidden exchange must
+    stop reporting 'collective'-bound."""
+    # wire time dominates raw (collective_s = 1.5x memory_s > compute_s),
+    # but 95% of the hideable part is hidden -> exposed falls below the
+    # memory term (hidden = 0.95 * memory_s, exposed = 0.55 * memory_s)
+    t = _terms(1e12 * R.ICI_BW / R.HBM_BW * 1.5, 0.95,
+               flops=1e6, hbm=1e12)
+    assert t.bound == "collective"
+    assert t.collective_exposed_s < t.memory_s
+    assert t.overlapped_bound == "memory"
+    # nothing hidden: the two rankings agree
+    t0 = _terms(3e9, 0.0, flops=1e6, hbm=1e3)
+    assert t0.overlapped_bound == t0.bound == "collective"
+    d = t.as_dict()
+    assert d["overlapped_bound"] == "memory"
+    assert d["bound"] == "collective"
+
+
+# --- pipelined multi-block efficiency model ---------------------------------
+
+def test_pipeline_efficiency_collective_is_k_independent():
+    frac = 0.8
+    for K in (1, 2, 16):
+        assert pipeline_efficiency_model(
+            n_blocks=K, overlap=True, exchange="collective",
+            interior_fraction=frac) == pytest.approx(
+                frac * R.XLA_OVERLAP_DISCOUNT)
+
+
+def test_pipeline_efficiency_remote_dma_fill_penalty():
+    """K=1 hides nothing (the kernel serialises its own waits); K blocks
+    pay exactly one fill block; the steady state approaches the
+    single-block interior-fraction figure from below."""
+    frac = 0.8
+    assert pipeline_efficiency_model(
+        n_blocks=1, overlap=True, exchange="remote_dma",
+        interior_fraction=frac) == 0.0
+    effs = [pipeline_efficiency_model(
+        n_blocks=K, overlap=True, exchange="remote_dma",
+        interior_fraction=frac) for K in (2, 4, 16, 1024)]
+    assert effs == sorted(effs)
+    assert effs[0] == pytest.approx(frac / 2)
+    assert effs[-1] < frac
+    assert effs[-1] == pytest.approx(frac, rel=1e-2)
+
+
+def test_pipeline_efficiency_validation_and_no_overlap():
+    with pytest.raises(ValueError, match="n_blocks"):
+        pipeline_efficiency_model(n_blocks=0, overlap=True)
+    with pytest.raises(ValueError, match="exchange engine"):
+        pipeline_efficiency_model(n_blocks=2, overlap=True,
+                                  exchange="carrier_pigeon")
+    for ex in ("collective", "remote_dma"):
+        assert pipeline_efficiency_model(n_blocks=8, overlap=False,
+                                         exchange=ex,
+                                         interior_fraction=0.9) == 0.0
 
 
 # --- engine efficiency model -----------------------------------------------
@@ -178,6 +239,32 @@ def test_domain_overlap_efficiency_values():
 def test_domain_rejects_unknown_exchange():
     with pytest.raises(ValueError, match="exchange"):
         AdvectionDomain(16, 16, 16, exchange="smoke_signals")
+
+
+def test_domain_pipeline_efficiency_plumbing():
+    """n_blocks threads the pipelined model into roofline_terms (n_blocks
+    > 1), while n_blocks=1 keeps the single-block figure — BENCH_overlap
+    back-compat."""
+    kw = dict(variant="fused", fuse_T=8, mesh_nx=16, mesh_ny=16,
+              overlap=True, exchange="remote_dma")
+    frac = interior_compute_fraction(256, 64, 8, nx=16, ny=16)
+    one = AdvectionDomain(4096, 1024, 64, **kw)
+    assert one.pipeline_efficiency() == 0.0
+    assert one.roofline_terms().overlap_efficiency == pytest.approx(frac)
+    k8 = AdvectionDomain(4096, 1024, 64, n_blocks=8, **kw)
+    assert k8.pipeline_efficiency() == pytest.approx(frac * 7 / 8)
+    assert k8.roofline_terms().overlap_efficiency == pytest.approx(
+        frac * 7 / 8)
+    coll = AdvectionDomain(4096, 1024, 64, variant="fused", fuse_T=8,
+                           mesh_nx=16, mesh_ny=16, overlap=True,
+                           n_blocks=8)
+    assert coll.pipeline_efficiency() == pytest.approx(
+        frac * R.XLA_OVERLAP_DISCOUNT)
+    single = AdvectionDomain(64, 64, 64, variant="fused", overlap=True,
+                             n_blocks=8)
+    assert single.pipeline_efficiency() == 0.0  # nothing to exchange
+    with pytest.raises(ValueError, match="n_blocks"):
+        AdvectionDomain(16, 16, 16, n_blocks=0)
 
 
 # --- compiled-mode backend gate --------------------------------------------

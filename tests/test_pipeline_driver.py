@@ -1,0 +1,202 @@
+"""The pipelined multi-block driver `make_distributed_run`: K substep
+blocks in ONE traced program, block counter threaded as a traced
+`fori_loop` induction variable into the exchange engine's recv-slot
+parity. Fast tier pins the trace-once contract (no per-block retrace) and
+single-device wiring; the slow tier runs the multi-device K-block bitwise
+sweep (vs K sequential alternating-parity steps, vs the collective run,
+multi-hop T included) through the subprocess idiom. `_band_schedule`'s
+invariants are property-tested via the `tests/_prop` shim.
+"""
+import textwrap
+
+import pytest
+
+from _prop import given, settings, st
+from _subproc import run_ok as _run
+
+
+# --- fast tier: _band_schedule property invariants --------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(L=st.integers(1, 64), depth=st.integers(1, 64))
+def test_band_schedule_invariants(L, depth):
+    """For any local extent L and halo depth: hop counts sum exactly to
+    `depth`, hop distances are 1..ceil(depth/L) ascending, and the
+    `hi_off`/`lo_off` bands partition the hi halo [0, depth) and the lo
+    halo [depth+L, depth+L+depth) of the extended slab with no overlap
+    or gap — the recv-slab addresses every engine shares."""
+    from repro.stencil.distributed import _band_schedule
+
+    sched = _band_schedule(L, depth)
+    hops = -(-depth // L)
+    assert [k for k, _, _, _ in sched] == list(range(1, hops + 1))
+    assert all(1 <= cnt <= L for _, cnt, _, _ in sched)
+    assert sum(cnt for _, cnt, _, _ in sched) == depth
+    hi_rows = sorted(r for _, cnt, hi_off, _ in sched
+                     for r in range(hi_off, hi_off + cnt))
+    assert hi_rows == list(range(depth)), (L, depth, sched)
+    lo_rows = sorted(r for _, cnt, _, lo_off in sched
+                     for r in range(lo_off, lo_off + cnt))
+    assert lo_rows == list(range(depth + L, 2 * depth + L)), (L, depth,
+                                                              sched)
+
+
+def test_band_schedule_reexported_from_kernel_layer():
+    """The schedule the DMA kernel issues IS the schedule the emulation
+    and the wire pricing address through — one object, no drift."""
+    from repro.kernels.advection import advection as K
+    from repro.stencil import distributed as D
+
+    assert D._band_schedule is K._band_schedule
+
+
+# --- fast tier: driver wiring + trace-once regression -----------------------
+
+def test_run_driver_rejects_bad_config():
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.stencil.distributed import make_distributed_run
+
+    mesh = make_stencil_mesh(1, 1)
+    p = default_params(8)
+    with pytest.raises(ValueError, match="n_blocks"):
+        make_distributed_run(mesh, p, n_blocks=0)
+    with pytest.raises(ValueError, match="exchange"):
+        make_distributed_run(mesh, p, n_blocks=2, exchange="telepathy")
+    with pytest.raises(ValueError, match="T must be"):
+        make_distributed_run(mesh, p, n_blocks=2, T=0)
+
+
+def test_run_driver_single_device_matches_sequential_and_oracle():
+    """(1, 1) 'mesh': K blocks of the run driver == K sequential step
+    calls (alternating dma_block_index parity) == the global oracle at
+    K*T substeps, for both engines."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.stencil.advection import stratus_fields
+    from repro.stencil.distributed import (make_distributed_run,
+                                           make_distributed_step,
+                                           reference_global_step)
+
+    X, Y, Z, T, K = 6, 10, 8, 2, 3
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    mesh = make_stencil_mesh(1, 1)
+    sh = NamedSharding(mesh, P("x", "y", None))
+    args = [jax.device_put(t, sh) for t in (u, v, w)]
+    ref = reference_global_step(u, v, w, p, T=K * T, dt=0.01)
+    for ex in ("collective", "remote_dma"):
+        kw = dict(axis="y", x_axis="x", T=T, dt=0.01,
+                  local_kernel="fused", overlap=True, exchange=ex)
+        out = make_distributed_run(mesh, p, n_blocks=K, **kw)(*args)
+        seq = args
+        for k in range(K):
+            seq = make_distributed_step(mesh, p, dma_block_index=k,
+                                        **kw)(*seq)
+        diff = max(float(jnp.max(jnp.abs(a - b)))
+                   for a, b in zip(out, seq))
+        assert diff == 0.0, (ex, diff)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(out, ref))
+        assert err < 1e-5, (ex, err)
+
+
+@pytest.mark.parametrize("n_blocks", [3, 5])
+def test_run_driver_traces_step_body_exactly_once(monkeypatch, n_blocks):
+    """The regression the driver exists to fix: K blocks must NOT retrace
+    (let alone recompile) the step body per block. The reference local
+    kernel calls `pw_advect_ref` exactly T times per traced block body —
+    a driver that unrolled or rebuilt per block would trace K*T calls."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.stencil import distributed as dist
+    from repro.stencil.advection import stratus_fields
+
+    T = 2
+    calls = {"n": 0}
+    real = dist.pw_advect_ref
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dist, "pw_advect_ref", counting)
+    mesh = make_stencil_mesh(1, 1)
+    p = default_params(8)
+    u, v, w = stratus_fields(6, 10, 8)
+    sh = NamedSharding(mesh, P("x", "y", None))
+    args = [jax.device_put(t, sh) for t in (u, v, w)]
+    run = dist.make_distributed_run(mesh, p, n_blocks=n_blocks, axis="y",
+                                    x_axis="x", T=T, dt=0.01,
+                                    local_kernel="reference")
+    jax.block_until_ready(run(*args))
+    assert calls["n"] == T, (n_blocks, calls["n"])
+
+
+# --- slow tier: multi-device K-block bitwise + trace-once wire count --------
+
+RUN_SWEEP_CODE = textwrap.dedent("""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.roofline import halo_wire_bytes_model
+    from repro.stencil.distributed import (count_exchange_wire_bytes,
+                                           make_distributed_run,
+                                           make_distributed_step,
+                                           reference_global_step)
+    from repro.stencil.advection import stratus_fields
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+
+    X, Y, Z, K = 6, 16, 12, 3
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+    # (nx, ny, T): Yl = 4 on the (1, 4) mesh, so T=2/6/10 is 1/2/3 hops
+    # per side — T both <= and > the local extent, the acceptance sweep;
+    # (2, 2) runs two-phase with multi-hop x (Xl=3 < T=4).
+    for nx, ny, T, lk in ((1, 4, 2, "fused"), (1, 4, 6, "reference"),
+                          (1, 4, 10, "reference"), (2, 2, 4, "fused")):
+        mesh = make_stencil_mesh(nx, ny)
+        sh = NamedSharding(mesh, P("x", "y", None))
+        args = [jax.device_put(t, sh) for t in (u, v, w)]
+        kw = dict(axis="y", x_axis="x", T=T, dt=0.005, local_kernel=lk,
+                  overlap=True)
+        runs = {ex: make_distributed_run(mesh, p, n_blocks=K, exchange=ex,
+                                         **kw)
+                for ex in ("collective", "remote_dma")}
+        outs = {ex: fn(*args) for ex, fn in runs.items()}
+        diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                   zip(outs["collective"], outs["remote_dma"]))
+        assert diff == 0.0, (nx, ny, T, lk, diff)
+        seq = args
+        for k in range(K):
+            seq = make_distributed_step(mesh, p, exchange="remote_dma",
+                                        dma_block_index=k, **kw)(*seq)
+        diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                   zip(outs["remote_dma"], seq))
+        assert diff == 0.0, (nx, ny, T, lk, diff)
+        # trace-once: the fori_loop body jaxpr carries ONE block's
+        # ppermutes, so the K-block count equals the one-block model
+        got = count_exchange_wire_bytes(runs["remote_dma"], u, v, w)
+        model = halo_wire_bytes_model(X, Y, Z, 4, nx=nx, ny=ny, T=T)
+        assert got == model, (nx, ny, T, got, model)
+        ref = reference_global_step(u, v, w, p, T=K * T, dt=0.005)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(outs["remote_dma"], ref))
+        assert err < 1e-4, (nx, ny, T, lk, err)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_run_driver_multi_device_bitwise_sweep():
+    _run(RUN_SWEEP_CODE)
