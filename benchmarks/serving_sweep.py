@@ -1,0 +1,253 @@
+"""Serving-tier sweep: the batched multi-domain mega-launch priced and
+gated, written to ``BENCH_serving.json``.
+
+Row families:
+
+  * ``modelled[]`` — `roofline.serving_throughput_model` over a padded
+    slot shape at growing batch sizes, single-shard and 2D-mesh-priced
+    (exposed wire seconds from the overlap accounting feeding the
+    per-domain cost). GATES: domains/s STRICTLY RISES with batch all the
+    way to the VMEM-ring-bound maximum (`roofline.serving_max_batch`),
+    and one slot past the bound the model REFUSES (ValueError) rather
+    than extrapolating a layout whose resident rings cannot fit.
+  * ``counted[]`` — the batched kernel itself, in process: the
+    mega-launch output gated BITWISE-equal to per-domain sequential
+    `advect_fused` runs at every swept batch size, and the jaxpr-counted
+    HBM bytes (`count_pallas_hbm_bytes`) gated == batch x
+    `hbm_bytes_model` EXACTLY (lane-aligned Z).
+  * ``engine[]`` — `StencilServingEngine` end to end: mixed-extent
+    requests padded into the mega-launch, streamed states and final
+    outputs gated BITWISE-equal to unpadded sequential runs; executable
+    cache hit/miss counters gated (one miss per configuration); a
+    simulated mid-run device loss + re-shard gated bitwise-equal to the
+    uninterrupted run with exactly one extra recorded miss.
+
+Every gate is an explicit ``SystemExit`` raise (python -O safe). CI runs
+``--quick`` in the benchmark-smoke job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+try:                        # package context (benchmarks.run / -m)
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import roofline as R
+from repro.kernels.advection.advection import (advect_fused,
+                                               advect_fused_batched,
+                                               fused_register_bytes,
+                                               hbm_bytes_model)
+from repro.kernels.advection.ref import default_params
+from repro.serving.stencil_engine import (StencilRequest,
+                                          StencilServingEngine)
+from repro.stencil.advection import AdvectionDomain, stratus_fields
+from repro.stencil.distributed import count_pallas_hbm_bytes
+
+SLOT = (64, 256, 128)       # modelled padded slot shape (lane-aligned Z)
+COUNTED_GRID = (8, 16, 128)  # in-process batched-kernel grid (lane-aligned)
+ENGINE_GRID = (12, 16, 64)   # engine slot shape for the bitwise gates
+
+
+def _modelled_rows(smoke: bool):
+    X, Y, Z = SLOT
+    cases = [  # (T, y_tile, mesh, exchange, n_blocks)
+        (4, 64, (1, 1), "collective", 1),
+        (4, 64, (4, 4), "remote_dma", 4),
+    ] if smoke else [
+        (4, 64, (1, 1), "collective", 1),
+        (8, 32, (1, 1), "collective", 1),
+        (4, 64, (4, 4), "remote_dma", 4),
+        (4, 64, (4, 4), "collective", 1),
+    ]
+    rows = []
+    for T, y_tile, (nx, ny), exchange, n_blocks in cases:
+        base = AdvectionDomain(X, Y, Z, variant="fused", fuse_T=T,
+                               y_tile=y_tile, mesh_nx=nx, mesh_ny=ny,
+                               exchange=exchange, overlap=nx * ny > 1,
+                               n_blocks=n_blocks)
+        ring = fused_register_bytes(T, Y, Z, 4, y_tile=y_tile)
+        max_b = R.serving_max_batch(ring)
+        batches = sorted(set([1, 2, 4, max(max_b // 2, 1), max_b]))
+        tputs = []
+        for b in batches:
+            dom = dataclasses.replace(base, batch=b)
+            if dom.vmem_register_bytes() != ring * b:
+                raise SystemExit(
+                    f"serving gate: AdvectionDomain(batch={b}) ring bytes "
+                    f"{dom.vmem_register_bytes()} != {b} x per-slot {ring}")
+            tputs.append(dom.serving_throughput())
+        if not all(b > a for a, b in zip(tputs, tputs[1:])):
+            raise SystemExit(
+                f"serving gate: modelled domains/s not strictly rising in "
+                f"batch for T={T} mesh=({nx},{ny}): {tputs}")
+        try:
+            dataclasses.replace(base, batch=max_b + 1).serving_throughput()
+        except ValueError:
+            pass
+        else:
+            raise SystemExit(
+                f"serving gate: batch={max_b + 1} must exceed the VMEM "
+                f"ring budget (max {max_b}) and be refused, but was priced")
+        rows.append({"slot": [X, Y, Z], "T": T, "y_tile": y_tile,
+                     "mesh": [nx, ny], "exchange": exchange,
+                     "n_blocks": n_blocks,
+                     "ring_bytes_per_slot": ring, "max_batch": max_b,
+                     "batches": batches,
+                     "domains_per_s": tputs})
+        emit(f"serving.modelled.T{T}.{nx}x{ny}.{exchange}",
+             1e6 / tputs[-1],
+             f"max_batch={max_b};domains_per_s_B1={tputs[0]:.1f};"
+             f"domains_per_s_Bmax={tputs[-1]:.1f}")
+    return rows
+
+
+def _counted_rows(smoke: bool):
+    X, Y, Z = COUNTED_GRID
+    T = 2
+    p = default_params(Z)
+    batches = (1, 3) if smoke else (1, 2, 4)
+    rows = []
+    for B in batches:
+        doms = [stratus_fields(X, Y, Z, seed=s) for s in range(B)]
+        u = jnp.stack([d[0] for d in doms])
+        v = jnp.stack([d[1] for d in doms])
+        w = jnp.stack([d[2] for d in doms])
+
+        def batched(uu, vv, ww):
+            return advect_fused_batched(uu, vv, ww, p, T=T, dt=0.005,
+                                        interpret=True)
+
+        ou, ov, ow = batched(u, v, w)
+        diff = 0.0
+        for b, (du, dv, dw) in enumerate(doms):
+            su, sv, sw = advect_fused(du, dv, dw, p, T=T, dt=0.005,
+                                      interpret=True)
+            diff = max(diff, *(float(jnp.max(jnp.abs(x[b] - y)))
+                               for x, y in ((ou, su), (ov, sv), (ow, sw))))
+        if diff != 0.0:
+            raise SystemExit(
+                f"serving gate: batched mega-launch differs from "
+                f"per-domain sequential advect_fused by {diff} at B={B}")
+        counted = count_pallas_hbm_bytes(batched, u, v, w)
+        model = B * hbm_bytes_model(X, Y, Z, 4, "fused", T=T)
+        if counted != model:
+            raise SystemExit(
+                f"serving gate: jaxpr-counted HBM bytes {counted} != "
+                f"batched model {model} at B={B} — the mega-launch must "
+                "stream exactly B x the per-domain pass")
+        rows.append({"grid": [X, Y, Z], "T": T, "batch": B,
+                     "counted_hbm_bytes": counted,
+                     "modelled_hbm_bytes": model,
+                     "bitwise_diff_vs_sequential": diff})
+        emit(f"serving.counted.B{B}", 0.0,
+             f"hbm_B={counted};bitwise_equal=True")
+    return rows
+
+
+def _engine_rows(smoke: bool):
+    X, Y, Z = ENGINE_GRID
+    T = 2
+    dom = AdvectionDomain(X, Y, Z, variant="fused", fuse_T=T, dt=0.005)
+    p = default_params(Z)
+    sizes = [(X, Y), (6, 8), (4, 10)] if smoke else \
+        [(X, Y), (6, 8), (4, 10), (X, 5), (5, Y), (7, 7)]
+    n_steps = [1 + i % 3 for i in range(len(sizes))]
+
+    def make_requests():
+        reqs = []
+        for i, (Xr, Yr) in enumerate(sizes):
+            u, v, w = stratus_fields(Xr, Yr, Z, seed=i)
+            reqs.append(StencilRequest(uid=i, u=np.asarray(u),
+                                       v=np.asarray(v), w=np.asarray(w),
+                                       n_steps=n_steps[i]))
+        return reqs
+
+    # per-domain sequential oracle on the UNPADDED fields
+    oracle = {}
+    for i, (Xr, Yr) in enumerate(sizes):
+        u, v, w = stratus_fields(Xr, Yr, Z, seed=i)
+        states = []
+        for _ in range(n_steps[i]):
+            u, v, w = advect_fused(u, v, w, p, T=T, dt=0.005, interpret=True)
+            states.append((np.asarray(u), np.asarray(v), np.asarray(w)))
+        oracle[i] = states
+
+    engine = StencilServingEngine(dom, batch_size=2)
+    done = engine.run(make_requests())
+    diff = max(float(np.max(np.abs(np.asarray(a) - b)))
+               for i in done for st, ref in zip(done[i].states, oracle[i])
+               for a, b in zip(st, ref))
+    if diff != 0.0:
+        raise SystemExit(
+            f"serving gate: padded mega-launch engine differs from "
+            f"unpadded sequential runs by {diff}")
+    if any(len(done[i].states) != n_steps[i] for i in done):
+        raise SystemExit("serving gate: streamed state count != n_steps")
+    stats = engine.cache_stats()
+    if stats["misses"] != 1 or stats["entries"] != 1 or stats["hits"] < 1:
+        raise SystemExit(
+            f"serving gate: executable cache should trace once and hit "
+            f"thereafter, got {stats}")
+
+    # simulated device loss: batch 2 -> 1 after the first mega-step
+    faulted = StencilServingEngine(dom, batch_size=2)
+    done_f = faulted.run(make_requests(), lose_device_at=1, reshard_to=1)
+    diff_f = max(float(np.max(np.abs(done_f[i].out[j] - done[i].out[j])))
+                 for i in done for j in range(3))
+    if diff_f != 0.0:
+        raise SystemExit(
+            f"serving gate: re-sharded (device-loss) run differs from "
+            f"uninterrupted run by {diff_f}")
+    stats_f = faulted.cache_stats()
+    if stats_f["misses"] != 2 or stats_f["entries"] != 2:
+        raise SystemExit(
+            f"serving gate: the re-shard must record exactly one extra "
+            f"cache miss (new batch in the key), got {stats_f}")
+    row = {"slot": [X, Y, Z], "T": T, "batch": 2,
+           "request_extents": sizes, "n_steps": n_steps,
+           "bitwise_diff_vs_sequential": diff,
+           "cache_stats": stats,
+           "reshard_bitwise_diff": diff_f,
+           "reshard_cache_stats": stats_f}
+    emit("serving.engine.2slots", 0.0,
+         f"jobs={len(sizes)};bitwise_equal=True;"
+         f"cache_hits={stats['hits']};reshard_ok=True")
+    return [row]
+
+
+def run(smoke: bool = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    payload = {
+        "modelled": _modelled_rows(smoke),
+        "counted": _counted_rows(smoke),
+        "engine": _engine_rows(smoke),
+        "itemsize": 4,
+        "contract": "batched mega-launch bitwise-equal to per-domain "
+                    "sequential advect_fused runs at every batch size "
+                    "(raw kernel AND the padded mixed-extent engine, "
+                    "streamed states included); jaxpr-counted HBM bytes "
+                    "== batch x hbm_bytes_model exactly; modelled "
+                    "domains/s strictly rises with batch until the VMEM "
+                    "ring budget binds and the model refuses past it; "
+                    "executable cache traces once per (shape, T, dtype, "
+                    "n_blocks, exchange, mesh) key and a device-loss "
+                    "re-shard records exactly one extra miss with "
+                    "bitwise-identical outputs",
+    }
+    out_path = os.path.join(os.getcwd(), "BENCH_serving.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("serving.json_written", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    run(smoke=_bootstrap.smoke_arg())

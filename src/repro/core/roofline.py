@@ -27,6 +27,13 @@ HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 DCN_BW = 25e9                # bytes/s per host link (pod-to-pod share), est.
 HBM_PER_CHIP = 16 * 1024**3  # 16 GiB
+VMEM_PER_CORE = 16 * 1024**2  # 16 MiB on-chip vector memory per core
+
+# fixed per-mega-launch dispatch cost the serving tier amortises over its
+# batch slots: host->device launch latency + slot bookkeeping. A modelling
+# assumption (like XLA_OVERLAP_DISCOUNT below), not a measurement — revisit
+# once compiled-mode TPU wallclock lands.
+SERVING_LAUNCH_OVERHEAD_S = 50e-6
 
 
 @dataclass
@@ -248,6 +255,74 @@ def pipeline_efficiency_model(*, n_blocks: int, overlap: bool,
     if exchange == "remote_dma":
         eff *= (n_blocks - 1) / n_blocks
     return eff
+
+
+def serving_max_batch(ring_bytes_per_slot: int, *,
+                      vmem_budget: int = VMEM_PER_CORE) -> int:
+    """Largest batch the mega-launch can carry before the VMEM ring budget
+    binds: each resident slot of the batched-grid layout owns a fused
+    shift-register ring of ``ring_bytes_per_slot``
+    (`kernels.advection.fused_register_bytes`, y-tile-bounded), and the
+    slots' rings must together fit on chip for the batch dimension to
+    pipeline without spilling. Past this point adding slots buys nothing
+    — `serving_throughput_model` refuses rather than extrapolating."""
+    if ring_bytes_per_slot < 1:
+        raise ValueError(f"ring_bytes_per_slot must be >= 1, got "
+                         f"{ring_bytes_per_slot}")
+    if ring_bytes_per_slot > vmem_budget:
+        raise ValueError(
+            f"one slot's ring ({ring_bytes_per_slot} B) already exceeds the "
+            f"VMEM budget ({vmem_budget} B); shrink y_tile or T")
+    return vmem_budget // ring_bytes_per_slot
+
+
+def serving_throughput_model(batch: int, *, hbm_bytes_per_domain: float,
+                             ring_bytes_per_slot: int,
+                             exposed_wire_s_per_domain: float = 0.0,
+                             launch_overhead_s: float =
+                             SERVING_LAUNCH_OVERHEAD_S,
+                             vmem_budget: int = VMEM_PER_CORE,
+                             hbm_bw: float = HBM_BW) -> float:
+    """Domains/s of a `batch`-slot mega-launch serving step.
+
+    One mega-step pays a fixed ``launch_overhead_s`` dispatch cost, then
+    streams every slot's HBM pass (the batched bytes are B x the
+    per-domain `hbm_bytes_model` — slots share nothing) plus each slot's
+    EXPOSED wire seconds (`RooflineTerms.collective_exposed_s` for a
+    distributed slot; 0 single-shard):
+
+        step_s       = launch_overhead_s
+                       + batch * (hbm_bytes/HBM_BW + exposed_wire_s)
+        domains/s    = batch / step_s
+
+    Amortising the fixed launch cost over more slots makes this STRICTLY
+    increasing in `batch` — d(throughput)/d(batch) =
+    overhead / step_s^2 > 0 — saturating toward the pure streaming rate
+    1/(hbm_s + wire_s). It increases only UNTIL the VMEM ring budget
+    binds (`serving_max_batch`): past that the resident slot rings no
+    longer fit and the model refuses (ValueError) instead of pricing a
+    layout that cannot pipeline. BENCH_serving.json gates both halves.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if hbm_bytes_per_domain <= 0:
+        raise ValueError(f"hbm_bytes_per_domain must be > 0, got "
+                         f"{hbm_bytes_per_domain}")
+    if exposed_wire_s_per_domain < 0:
+        raise ValueError(f"exposed_wire_s_per_domain must be >= 0, got "
+                         f"{exposed_wire_s_per_domain}")
+    if launch_overhead_s <= 0:
+        raise ValueError(f"launch_overhead_s must be > 0, got "
+                         f"{launch_overhead_s}")
+    max_b = serving_max_batch(ring_bytes_per_slot, vmem_budget=vmem_budget)
+    if batch > max_b:
+        raise ValueError(
+            f"batch {batch} exceeds the VMEM-ring-bound maximum {max_b} "
+            f"({ring_bytes_per_slot} B/slot against a {vmem_budget} B "
+            "budget)")
+    step_s = launch_overhead_s + batch * (
+        hbm_bytes_per_domain / hbm_bw + exposed_wire_s_per_domain)
+    return batch / step_s
 
 
 def stencil_tiling_bytes_factor(Y: int, y_tile: Optional[int], halo: int,

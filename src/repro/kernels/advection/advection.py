@@ -526,6 +526,76 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
     return fn(t1, t2, xm, ym, u, v, w)
 
 
+def _batch_axis(leaf, base_ndim: int):
+    """vmap in_axis for an optionally slot-batched operand: a leading batch
+    dimension on top of the unbatched rank maps (axis 0), anything else is
+    shared across slots (axis None)."""
+    nd = getattr(leaf, "ndim", 0)
+    if nd == base_ndim:
+        return None
+    if nd == base_ndim + 1:
+        return 0
+    raise ValueError(
+        f"operand rank {nd} is neither the unbatched rank {base_ndim} nor "
+        f"batched rank {base_ndim + 1}")
+
+
+def advect_fused_batched(u, v, w, p, *, T: int = 4, dt: float = 1.0,
+                         interpret: bool = True, y_tile: int | None = None,
+                         tiling: str = "grid", y_interior_mask=None,
+                         x_interior_mask=None):
+    """Batched mega-launch: advance B independent (X, Y, Z) domains with
+    ONE fused-kernel dispatch — the serving tier's packing move.
+
+    `u`, `v`, `w` are slot-stacked ``(B, X, Y, Z)`` fields. The batch rides
+    an outer grid dimension via `jax.vmap` of the fused pallas_call (the
+    vmap-with-shared-ring layout): Pallas's batching rule prepends the
+    slot index to the `(n_ty, X + T)` grid, so slots stream through the
+    SAME VMEM shift-register rings back to back — slot b+1's startup
+    masking walls off slot b's stale ring content exactly as a y-tile
+    switch does, and per-slot outputs are bitwise-identical to B
+    sequential `advect_fused` calls (the BENCH_serving gate).
+
+    `p` is an `AdvectParams` whose leaves are either shared (unbatched) or
+    slot-stacked with a leading B — per-tenant advection coefficients.
+    `x_interior_mask` / `y_interior_mask` may likewise be shared ``(X,)`` /
+    ``(Y,)`` or per-slot ``(B, X)`` / ``(B, Y)``: a request SMALLER than
+    the padded slot shape freezes everything outside its own extent (and
+    its own boundary ring) with zeros in the mask, so the padded run
+    reproduces the unpadded domain bitwise — the serving engine's
+    pack-small-domains contract.
+
+    HBM traffic is exactly B times the per-domain model
+    (``hbm_bytes_model``): the batched pallas_call's field operands and
+    results are the only rank->=3 arrays it touches, which is what
+    `stencil.distributed.count_pallas_hbm_bytes` counts and
+    BENCH_serving.json gates EXACTLY (lane-aligned Z).
+    """
+    for name, f in (("u", u), ("v", v), ("w", w)):
+        if f.ndim != 4:
+            raise ValueError(f"{name} must be slot-stacked (B, X, Y, Z), "
+                             f"got rank {f.ndim}")
+    if not (u.shape == v.shape == w.shape):
+        raise ValueError(f"field shapes differ: {u.shape} {v.shape} "
+                         f"{w.shape}")
+    B, X, Y, Z = u.shape
+    p_axes = AdvectParams(_batch_axis(p.tcx, 0), _batch_axis(p.tcy, 0),
+                          _batch_axis(p.tzc1, 1), _batch_axis(p.tzc2, 1))
+    xm = (jnp.ones((X,), jnp.float32) if x_interior_mask is None
+          else jnp.asarray(x_interior_mask, jnp.float32))
+    ym = (jnp.ones((Y,), jnp.float32) if y_interior_mask is None
+          else jnp.asarray(y_interior_mask, jnp.float32))
+    xm_ax, ym_ax = _batch_axis(xm, 1), _batch_axis(ym, 1)
+
+    def one(uu, vv, ww, pp, xmm, ymm):
+        return advect_fused(uu, vv, ww, pp, T=T, dt=dt, interpret=interpret,
+                            y_tile=y_tile, tiling=tiling,
+                            y_interior_mask=ymm, x_interior_mask=xmm)
+
+    return jax.vmap(one, in_axes=(0, 0, 0, p_axes, xm_ax, ym_ax))(
+        u, v, w, p, xm, ym)
+
+
 # ---------------------------------------------------------------------------
 # in-kernel halo-band exchange: async remote DMA (TPU, compiled mode)
 # ---------------------------------------------------------------------------

@@ -2,10 +2,18 @@
 
     python -m repro.launch.serve --arch qwen3-32b --smoke --requests 8
 Optionally --ckpt-dir to serve trained weights (elastic TP relayout applies).
+
+`--stencil` serves forecast jobs instead of tokens: batched multi-domain
+advection over the fused kernel (`repro.serving.stencil_engine`), with
+`--max-new` bounding each job's fused-step budget and `--lose-device-at`
+injecting a mid-run device loss + re-shard:
+
+    python -m repro.launch.serve --smoke --stencil --requests 4
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -18,16 +26,59 @@ from repro.training import checkpoint as CKPT
 from repro.training import step as TS
 
 
+def _run_stencil(args) -> None:
+    from repro.serving.stencil_engine import (StencilRequest,
+                                              StencilServingEngine)
+    from repro.stencil.advection import AdvectionDomain, stratus_fields
+
+    X, Y, Z, T = (12, 16, 64, 2) if args.smoke else (64, 256, 64, 4)
+    dom = AdvectionDomain(X, Y, Z, variant="fused", fuse_T=T, dt=0.005)
+    engine = StencilServingEngine(dom, batch_size=args.batch_size)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        Xr = int(rng.integers(4, X + 1))
+        Yr = int(rng.integers(4, Y + 1))
+        u, v, w = stratus_fields(Xr, Yr, Z, seed=i)
+        reqs.append(StencilRequest(
+            uid=i, u=np.asarray(u), v=np.asarray(v), w=np.asarray(w),
+            n_steps=int(rng.integers(1, args.max_new + 1))))
+    t0 = time.time()
+    done = engine.run(reqs, lose_device_at=args.lose_device_at)
+    dt_s = time.time() - t0
+    steps = sum(len(r.states) for r in done.values())
+    stats = engine.cache_stats()
+    print(f"[serve] {len(done)} forecast domains, {steps} fused steps "
+          f"(T={T}) in {dt_s:.1f}s; executable cache "
+          f"hits={stats['hits']} misses={stats['misses']}")
+    print(f"[serve] modelled serving throughput at batch={engine.B}: "
+          f"{engine.modelled_throughput():.1f} domains/s")
+    for uid in sorted(done)[:4]:
+        r = done[uid]
+        print(f"  job {uid}: extent {r.out[0].shape}, {len(r.states)} "
+              f"streamed states, |u|max={float(np.abs(r.out[0]).max()):.3f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--stencil", action="store_true",
+                    help="serve batched advection-forecast jobs instead of "
+                         "tokens")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lose-device-at", type=int, default=None,
+                    help="(--stencil) simulate a device loss after this "
+                         "many mega-steps and re-shard to half the slots")
     args = ap.parse_args()
+
+    if args.stencil:
+        _run_stencil(args)
+        return
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     layout = M.make_layout(cfg, tp=1)
@@ -48,7 +99,6 @@ def main() -> None:
                                         int(rng.integers(4, 24))).astype(np.int32),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
-    import time
     t0 = time.time()
     done = engine.run(reqs)
     dt = time.time() - t0

@@ -23,6 +23,7 @@ import numpy as np
 from repro.config import ArchConfig
 from repro.distributed.sharding import HeadLayout
 from repro.models import model as M
+from repro.serving.slots import SlotManager
 
 
 def _to_linear(k: jax.Array, max_len: int) -> jax.Array:
@@ -93,7 +94,10 @@ class ServingEngine:
 
     Slots of a fixed decode batch are filled as requests arrive (kernel-pool
     analogue of the paper's §IV): a finished slot is immediately re-primed
-    with the next queued request while the other slots keep decoding.
+    with the next queued request while the other slots keep decoding. The
+    slot lifecycle (live flags, step budgets, completion) lives in the
+    shared `SlotManager`, which the stencil serving tier
+    (`repro.serving.stencil_engine`) reuses unchanged.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
@@ -105,9 +109,8 @@ class ServingEngine:
         self.max_len = max_len
         self.caches = init_decode_cache(cfg, self.layout, batch_size, max_len)
         self.pos = np.zeros((batch_size,), np.int32)
-        self.live = np.zeros((batch_size,), bool)
-        self.budget = np.zeros((batch_size,), np.int32)
-        self.slot_req: List[Optional[Request]] = [None] * batch_size
+        self.next_token = np.zeros((batch_size,), np.int32)
+        self.slots = SlotManager(batch_size)
         self._decode = jax.jit(functools.partial(
             self._decode_impl, cfg=cfg, layout=self.layout))
 
@@ -119,8 +122,25 @@ class ServingEngine:
         return nxt, caches
 
     # -- slot management ---------------------------------------------------
-    def _prime(self, slot: int, req: Request):
+    def _prime(self, slot: int, req: Request) -> bool:
+        """Prefill `req` into `slot`. Prime time already emits the first
+        new token (the prefill logits' argmax), so a request arrives with
+        `max_new_tokens - 1` decode steps of budget — and one with
+        ``max_new_tokens == 1`` is COMPLETE here: it never occupies the
+        slot, and the caller must collect it instead of decoding an extra
+        token past the budget. Returns True in that complete-at-prime
+        case."""
         cfg, layout = self.cfg, self.layout
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {req.max_new_tokens} "
+                f"(request {req.uid})")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of request {req.uid} has {len(req.prompt)} tokens "
+                f"but max_len is {self.max_len}: the prompt must be shorter "
+                "than max_len (the decode-cache scatter would clip the "
+                "out-of-bounds tail and corrupt decode)")
         prompt = jnp.asarray(req.prompt)[None]
         batch = {"inputs": prompt}
         logits, _, caches = M.forward(self.params, batch, cfg, layout,
@@ -137,36 +157,43 @@ class ServingEngine:
         self.pos[slot] = len(req.prompt) - 1  # next decode writes at prompt_len
         nxt = int(jnp.argmax(logits[0, -1]))
         req.out = [nxt]
-        self.live[slot] = True
-        self.budget[slot] = req.max_new_tokens - 1
-        self.slot_req[slot] = req
-        self.next_token = getattr(self, "next_token",
-                                  np.zeros((self.B,), np.int32))
         self.next_token[slot] = nxt
+        if req.max_new_tokens == 1:
+            return True
+        self.slots.occupy(slot, req, req.max_new_tokens - 1)
+        return False
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         queue = list(requests)
         self.next_token = np.zeros((self.B,), np.int32)
         done: Dict[int, List[int]] = {}
-        while queue or self.live.any():
+        while queue or self.slots.any_live():
             # fill idle slots (chunk arrival overlapping busy slots)
-            for s in range(self.B):
-                if not self.live[s] and queue:
-                    self._prime(s, queue.pop(0))
-            toks = jnp.asarray(self.next_token)
-            pos = jnp.asarray(self.pos + 1)  # position of the new token
+            for s in self.slots.idle_slots():
+                if not queue:
+                    break
+                req = queue.pop(0)
+                if self._prime(s, req):
+                    done[req.uid] = req.out
+            if not self.slots.any_live():
+                continue  # everything primed this round completed at prime
+            # dead slots are masked to a fixed (token 0, pos 0) feed: they
+            # must not replay their previous occupant's stale state through
+            # the decoder (their logits are discarded and a re-prime
+            # overwrites the whole cache slot, so the masked write is inert)
+            live = self.slots.live_mask()
+            toks = jnp.asarray(np.where(live, self.next_token, 0)
+                               .astype(np.int32))
+            pos = jnp.asarray(np.where(live, self.pos + 1, 0)
+                              .astype(np.int32))
             nxt, self.caches = self._decode(self.params, self.caches, toks, pos)
             nxt = np.asarray(nxt)
-            for s in range(self.B):
-                if not self.live[s]:
-                    continue
+            for s in self.slots.live_slots():
                 self.pos[s] += 1
-                req = self.slot_req[s]
+                req = self.slots.request(s)
                 req.out.append(int(nxt[s]))
                 self.next_token[s] = nxt[s]
-                self.budget[s] -= 1
-                if self.budget[s] <= 0 or self.pos[s] + 2 >= self.max_len:
+                if self.slots.tick(s) or self.pos[s] + 2 >= self.max_len:
                     done[req.uid] = req.out
-                    self.live[s] = False
-                    self.slot_req[s] = None
+                    self.slots.release(s)
         return done

@@ -1,0 +1,353 @@
+"""Forecast-as-a-service: batched multi-domain serving over the fused stencil.
+
+The ROADMAP's "heavy traffic from millions of users" is not one huge
+advection domain — it is MANY small ones: a `StencilRequest` is an
+``(initial u/v/w fields, AdvectParams, n_steps)`` forecast job, and the
+`StencilServingEngine` packs up to `batch_size` of them into ONE padded
+mega-launch of the fused kernel (`kernels.advection.advect_fused_batched`
+— the batch rides an outer grid dimension, slots streaming back to back
+through the shared VMEM rings). This is the paper's §IV kernel-pool/DMA
+overlap applied at the product layer: chunked arrival of new forecast
+jobs overlaps the resident jobs' compute, with the slot lifecycle shared
+with the LLM engine via `serving.slots.SlotManager`.
+
+Contracts (gated by BENCH_serving.json and tests/test_stencil_serving.py):
+
+  * Packing is exact, not approximate: a request SMALLER than the padded
+    slot shape is embedded at the origin with per-slot interior masks
+    freezing everything outside its own extent and boundary ring, so the
+    mega-launch's cropped outputs are BITWISE-equal to per-domain
+    sequential `advect_fused` runs on the unpadded fields.
+  * Compiled executables are cached keyed on
+    ``(shape, T, dtype, n_blocks, exchange, mesh)`` with hit/miss
+    counters — one trace per configuration, every later mega-step a hit.
+  * Intermediate states stream back per slot (`StencilRequest.states`,
+    one cropped (u, v, w) snapshot per fused step).
+  * A simulated device loss mid-run re-shards the engine: live slots are
+    re-packed into a smaller batch (a new cache key — the recorded miss),
+    overflow jobs resume from their in-flight state when slots free up,
+    and the completed outputs stay bitwise-equal to an uninterrupted run
+    (the `tests/test_fault_tolerance.py` resume-equals-uninterrupted
+    pattern, on the stencil path).
+  * Per-tenant pricing: `AdvectionDomain(batch=...)` scales the
+    flops/bytes/wire accounting and `roofline.serving_throughput_model`
+    turns it into domains/s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.advection import advection as K
+from repro.kernels.advection.ref import AdvectParams
+from repro.serving.slots import SlotManager
+from repro.stencil.advection import AdvectionDomain
+
+
+@dataclasses.dataclass
+class StencilRequest:
+    """One forecast job: initial fields + coefficients + a step budget.
+
+    `n_steps` counts FUSED steps (each advances `domain.fuse_T` Euler
+    substeps); 0 means the job is complete at prime time and returns its
+    initial fields. `params=None` uses the engine domain's coefficients;
+    a per-tenant `AdvectParams` (same Z) rides the slot's batched leaves.
+    """
+    uid: int
+    u: np.ndarray                        # (Xr, Yr, Z) initial fields
+    v: np.ndarray
+    w: np.ndarray
+    n_steps: int = 1
+    params: Optional[AdvectParams] = None
+    out: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+    states: Optional[List[Tuple[np.ndarray, ...]]] = None
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """A live job's full padded slot state, detached for re-sharding."""
+    req: StencilRequest
+    budget: int
+    u: np.ndarray
+    v: np.ndarray
+    w: np.ndarray
+    xm: np.ndarray
+    ym: np.ndarray
+    params: Tuple[np.ndarray, ...]
+    extent: Tuple[int, int]
+
+
+class ExecutableCache:
+    """Compiled-executable cache with hit/miss counters.
+
+    Keys are the full recompilation surface of a mega-step —
+    ``(shape, T, dtype, n_blocks, exchange, mesh)`` — so a re-shard (new
+    batch in `shape`) or an engine/mesh change records a miss and traces
+    once, while every steady-state mega-step is a hit on the same
+    executable.
+    """
+
+    def __init__(self):
+        self._fns: Dict[Any, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, build):
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._fns[key] = build()
+        else:
+            self.hits += 1
+        return fn
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._fns)}
+
+
+class StencilServingEngine:
+    """Continuous-batching forecast server over the batched fused kernel.
+
+    `domain` fixes the padded slot shape ``(X, Y, Z)``, the fusion depth
+    `fuse_T`, dt, tiling, and the cache-key mesh/exchange/n_blocks
+    configuration (the serving mega-step itself runs the single-shard
+    batched kernel; a distributed mega-step would slot into `_build_step`
+    under the same key discipline). Requests whose extent is smaller than
+    the slot are padded and mask-frozen; Z must match exactly (the z axis
+    has no interior mask — it is the vectorised lane dimension).
+    """
+
+    def __init__(self, domain: AdvectionDomain, *, batch_size: int = 4):
+        if domain.variant != "fused":
+            raise ValueError("the serving tier packs the fused (v4) kernel; "
+                             f"got variant={domain.variant!r}")
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.domain = domain
+        self.B = batch_size
+        self.cache = ExecutableCache()
+        self.steps_run = 0
+        self._alloc(batch_size)
+
+    # -- storage -----------------------------------------------------------
+    def _alloc(self, batch_size: int) -> None:
+        d = self.domain
+        dt = np.dtype(d.dtype)
+        self.B = batch_size
+        self.slots = SlotManager(batch_size)
+        shape = (batch_size, d.X, d.Y, d.Z)
+        self.u = np.zeros(shape, dt)
+        self.v = np.zeros(shape, dt)
+        self.w = np.zeros(shape, dt)
+        self.xm = np.zeros((batch_size, d.X), np.float32)
+        self.ym = np.zeros((batch_size, d.Y), np.float32)
+        base = [np.asarray(leaf) for leaf in d.params]
+        self._p = [np.stack([leaf] * batch_size) for leaf in base]
+        self._extent: List[Tuple[int, int]] = [(0, 0)] * batch_size
+
+    def _step_key(self):
+        d = self.domain
+        return ((self.B, d.X, d.Y, d.Z), d.fuse_T, d.dtype, d.n_blocks,
+                d.exchange, (d.mesh_nx, d.mesh_ny))
+
+    def _build_step(self):
+        d = self.domain
+
+        def step(u, v, w, p, xm, ym):
+            return K.advect_fused_batched(u, v, w, p, T=d.fuse_T, dt=d.dt,
+                                          interpret=d.interpret,
+                                          y_tile=d.y_tile, tiling=d.tiling,
+                                          x_interior_mask=xm,
+                                          y_interior_mask=ym)
+
+        return jax.jit(step)
+
+    # -- slot lifecycle ----------------------------------------------------
+    def _pack(self, slot: int, u, v, w, params: Optional[AdvectParams],
+              extent: Tuple[int, int]) -> None:
+        d = self.domain
+        Xr, Yr = extent
+        for dst, src in ((self.u, u), (self.v, v), (self.w, w)):
+            dst[slot] = 0.0
+            dst[slot, :Xr, :Yr] = np.asarray(src, dst.dtype)
+        # freeze everything outside the request's own interior: its
+        # boundary ring behaves exactly like the unpadded kernel's
+        # structural walls, so padding is bitwise-invisible
+        self.xm[slot] = 0.0
+        self.xm[slot, 1:Xr - 1] = 1.0
+        self.ym[slot] = 0.0
+        self.ym[slot, 1:Yr - 1] = 1.0
+        leaves = (list(params) if params is not None
+                  else [np.asarray(leaf) for leaf in d.params])
+        for dst, leaf in zip(self._p, leaves):
+            dst[slot] = np.asarray(leaf, dst.dtype)
+        self._extent[slot] = extent
+
+    def _prime(self, slot: int, req: StencilRequest) -> bool:
+        """Pack `req` into `slot`; True when complete at prime time
+        (``n_steps == 0`` — the job's output is its initial state and it
+        never occupies the slot)."""
+        d = self.domain
+        if req.n_steps < 0:
+            raise ValueError(f"n_steps must be >= 0, got {req.n_steps} "
+                             f"(request {req.uid})")
+        shp = np.asarray(req.u).shape
+        if np.asarray(req.v).shape != shp or np.asarray(req.w).shape != shp:
+            raise ValueError(f"request {req.uid} field shapes differ")
+        if len(shp) != 3:
+            raise ValueError(f"request {req.uid} fields must be (X, Y, Z), "
+                             f"got shape {shp}")
+        Xr, Yr, Zr = shp
+        if Zr != d.Z:
+            raise ValueError(
+                f"request {req.uid} has Z={Zr} but the engine slot is "
+                f"Z={d.Z}: z is the lane dimension and cannot be padded")
+        if Xr > d.X or Yr > d.Y:
+            raise ValueError(
+                f"request {req.uid} extent ({Xr}, {Yr}) exceeds the padded "
+                f"slot shape ({d.X}, {d.Y}); domains must fit the slot")
+        if Xr < 3 or Yr < 3:
+            raise ValueError(
+                f"request {req.uid} extent ({Xr}, {Yr}) has no interior "
+                "cell; the stencil needs >= 3 points per decomposed axis")
+        if req.params is not None and np.asarray(
+                req.params.tzc1).shape != (d.Z,):
+            raise ValueError(f"request {req.uid} params are not for Z={d.Z}")
+        req.states = []
+        crop = (np.asarray(req.u, np.dtype(d.dtype)).copy(),
+                np.asarray(req.v, np.dtype(d.dtype)).copy(),
+                np.asarray(req.w, np.dtype(d.dtype)).copy())
+        if req.n_steps == 0:
+            req.out = crop
+            return True
+        self._pack(slot, req.u, req.v, req.w, req.params, (Xr, Yr))
+        self.slots.occupy(slot, req, req.n_steps)
+        return False
+
+    def _resume(self, slot: int, flight: _InFlight) -> None:
+        """Re-pack a job displaced by a re-shard, from its in-flight state."""
+        self.u[slot], self.v[slot], self.w[slot] = (flight.u, flight.v,
+                                                    flight.w)
+        self.xm[slot], self.ym[slot] = flight.xm, flight.ym
+        for dst, leaf in zip(self._p, flight.params):
+            dst[slot] = leaf
+        self._extent[slot] = flight.extent
+        self.slots.occupy(slot, flight.req, flight.budget)
+
+    def _clear(self, slot: int) -> None:
+        # an idle slot keeps stepping in the mega-launch; all-zero masks
+        # freeze it completely so it costs nothing semantically
+        self.xm[slot] = 0.0
+        self.ym[slot] = 0.0
+        self._extent[slot] = (0, 0)
+
+    def _crop(self, slot: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        Xr, Yr = self._extent[slot]
+        return (self.u[slot, :Xr, :Yr].copy(),
+                self.v[slot, :Xr, :Yr].copy(),
+                self.w[slot, :Xr, :Yr].copy())
+
+    # -- the mega-step -----------------------------------------------------
+    def _mega_step(self) -> None:
+        fn = self.cache.get(self._step_key(), self._build_step)
+        p = AdvectParams(*[jnp.asarray(leaf) for leaf in self._p])
+        ou, ov, ow = fn(jnp.asarray(self.u), jnp.asarray(self.v),
+                        jnp.asarray(self.w), p,
+                        jnp.asarray(self.xm), jnp.asarray(self.ym))
+        # np.array, not np.asarray: the device result is a read-only view
+        # and the next prime writes into these buffers in place
+        self.u = np.array(ou)
+        self.v = np.array(ov)
+        self.w = np.array(ow)
+        self.steps_run += 1
+
+    # -- fault tolerance ---------------------------------------------------
+    def reshard(self, new_batch_size: int) -> List[_InFlight]:
+        """Re-shard the engine onto `new_batch_size` slots (a simulated
+        device loss took the rest): live jobs are detached with their
+        in-flight state, the batch arrays are re-allocated (a NEW cache
+        key — the next mega-step records a miss and re-traces), and as
+        many jobs as fit are re-packed immediately. Jobs that no longer
+        fit are returned for the caller (`run`) to resume — state intact,
+        budget intact — when slots free up. Slot independence makes the
+        re-pack bitwise-invisible to every job's output."""
+        if new_batch_size < 1:
+            raise ValueError(f"new_batch_size must be >= 1, got "
+                             f"{new_batch_size}")
+        flights = [
+            _InFlight(req=self.slots.request(s), budget=self.slots.budget(s),
+                      u=self.u[s].copy(), v=self.v[s].copy(),
+                      w=self.w[s].copy(), xm=self.xm[s].copy(),
+                      ym=self.ym[s].copy(),
+                      params=tuple(leaf[s].copy() for leaf in self._p),
+                      extent=self._extent[s])
+            for s in self.slots.live_slots()]
+        self._alloc(new_batch_size)
+        for slot, flight in enumerate(flights[:new_batch_size]):
+            self._resume(slot, flight)
+        return flights[new_batch_size:]
+
+    # -- driver ------------------------------------------------------------
+    def run(self, requests: List[StencilRequest], *,
+            lose_device_at: Optional[int] = None,
+            reshard_to: Optional[int] = None
+            ) -> Dict[int, StencilRequest]:
+        """Serve `requests` to completion; returns {uid: completed request}
+        (each with `out` = final cropped fields and `states` = the
+        streamed per-step snapshots).
+
+        `lose_device_at=k` simulates a device loss after the k-th
+        mega-step: the engine re-shards onto `reshard_to` slots (default:
+        half, at least 1) and keeps serving — the fault-injection hook,
+        mirroring `train_loop(inject_nan_at=...)`."""
+        if lose_device_at is not None:
+            if reshard_to is None:
+                reshard_to = max(self.B // 2, 1)
+            if lose_device_at < 1:
+                raise ValueError(f"lose_device_at must be >= 1, got "
+                                 f"{lose_device_at}")
+        queue: List[Any] = list(requests)
+        done: Dict[int, StencilRequest] = {}
+        steps = 0
+        while queue or self.slots.any_live():
+            for s in self.slots.idle_slots():
+                if not queue:
+                    break
+                item = queue.pop(0)
+                if isinstance(item, _InFlight):
+                    self._resume(s, item)
+                elif self._prime(s, item):
+                    done[item.uid] = item
+            if not self.slots.any_live():
+                continue
+            self._mega_step()
+            steps += 1
+            for s in self.slots.live_slots():
+                req = self.slots.request(s)
+                state = self._crop(s)
+                req.states.append(state)
+                if self.slots.tick(s):
+                    req.out = state
+                    done[req.uid] = req
+                    self.slots.release(s)
+                    self._clear(s)
+            if lose_device_at is not None and steps == lose_device_at:
+                # displaced jobs resume ahead of queued fresh work
+                queue[:0] = self.reshard(reshard_to)
+                lose_device_at = None
+        return done
+
+    # -- accounting --------------------------------------------------------
+    def cache_stats(self) -> Dict[str, int]:
+        return self.cache.stats()
+
+    def modelled_throughput(self) -> float:
+        """Domains/s of this engine's mega-launch per
+        `roofline.serving_throughput_model`, at the current batch size."""
+        return dataclasses.replace(self.domain,
+                                   batch=self.B).serving_throughput()

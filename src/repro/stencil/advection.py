@@ -76,6 +76,15 @@ class AdvectionDomain:
     n_blocks: int = 1                 # substep-blocks per pipelined
                                       # make_distributed_run program
                                       # (1 = the one-block step)
+    batch: int = 1                    # serving-tier slots: independent
+                                      # domains of this shape packed into
+                                      # one mega-launch. Pure per-tenant
+                                      # ACCOUNTING — step() stays
+                                      # single-domain; the flops/bytes/wire
+                                      # methods and vmem_register_bytes
+                                      # scale by it, and
+                                      # serving_throughput() prices the
+                                      # packed launch in domains/s
 
     def __post_init__(self):
         if self.exchange not in ("collective", "remote_dma"):
@@ -83,6 +92,8 @@ class AdvectionDomain:
                              f"'remote_dma', got {self.exchange!r}")
         if self.n_blocks < 1:
             raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
         object.__setattr__(self, "params",
                            REF.default_params(self.Z,
                                               dtype=jnp.dtype(self.dtype)))
@@ -165,7 +176,8 @@ class AdvectionDomain:
 
     def flops_per_step(self) -> int:
         cells = (self.X - 2) * (self.Y - 2) * (self.Z - 2)
-        return cells * REF.flops_per_cell() * self.substeps_per_step()
+        return (cells * REF.flops_per_cell() * self.substeps_per_step()
+                * self.batch)
 
     def _hbm_bytes_pass(self, X: int, Y: int) -> int:
         """One kernel pass over an (X, Y, Z) extent on the configured
@@ -187,9 +199,10 @@ class AdvectionDomain:
 
         Prices the configured execution path: in-grid vs host tiling, and
         whether the Euler update is fused in-kernel or paid as a separate
-        full-field pass (always separate for `reference`).
+        full-field pass (always separate for `reference`). A `batch` > 1
+        charges every packed slot's pass — slots share nothing.
         """
-        return self._hbm_bytes_pass(self.X, self.Y)
+        return self._hbm_bytes_pass(self.X, self.Y) * self.batch
 
     def vmem_halo_bytes_per_step(self) -> int:
         """Halo re-read bytes served from VMEM by the in-grid tiled path."""
@@ -201,7 +214,7 @@ class AdvectionDomain:
                                        if self.variant != "reference"
                                        else "pointwise",
                                        T=self.substeps_per_step(),
-                                       y_tile=self.y_tile)
+                                       y_tile=self.y_tile) * self.batch
 
     def shard_shape(self) -> Tuple[int, int]:
         """Owned (Xl, Yl) per-shard dims on the (mesh_nx, mesh_ny) mesh."""
@@ -224,15 +237,15 @@ class AdvectionDomain:
         T = self.substeps_per_step()
         Xs = Xl + (2 * T if self.mesh_nx > 1 else 0)
         Ys = Yl + (2 * T if self.mesh_ny > 1 else 0)
-        return self._hbm_bytes_pass(Xs, Ys)
+        return self._hbm_bytes_pass(Xs, Ys) * self.batch
 
     def halo_wire_bytes_per_step(self) -> int:
         """Per-shard wire bytes for the ONE depth-T exchange a distributed
-        step() performs (zero on a 1x1 mesh)."""
+        step() performs (zero on a 1x1 mesh), per packed batch slot."""
         return R.halo_wire_bytes_model(self.X, self.Y, self.Z,
                                        jnp.dtype(self.dtype).itemsize,
                                        nx=self.mesh_nx, ny=self.mesh_ny,
-                                       T=self.substeps_per_step())
+                                       T=self.substeps_per_step()) * self.batch
 
     def overlap_efficiency(self) -> float:
         """Modelled fraction of the depth-T exchange the configured engine
@@ -288,7 +301,10 @@ class AdvectionDomain:
             overlap_efficiency=eff)
 
     def vmem_register_bytes(self) -> int:
-        """VMEM shift-register footprint of the current configuration."""
+        """VMEM shift-register footprint of the current configuration —
+        one ring per packed batch slot (the batched-grid layout keeps
+        every resident slot's ring on chip so the batch dimension can
+        pipeline; `serving_throughput` binds on this)."""
         depth = self.fuse_T if self.variant == "fused" else 1
         itemsize = jnp.dtype(self.dtype).itemsize
         # wide's grid-tiled slab carries the sublane-rounded fetch halo
@@ -296,4 +312,20 @@ class AdvectionDomain:
                                 and self.tiling == "grid"
                                 and self.y_tile is not None) else None
         return K.fused_register_bytes(depth, self.Y, self.Z, itemsize,
-                                      y_tile=self.y_tile, halo=halo)
+                                      y_tile=self.y_tile, halo=halo
+                                      ) * self.batch
+
+    def serving_throughput(self) -> float:
+        """Modelled domains/s of serving `batch` independent copies of
+        this domain per mega-launch (`roofline.serving_throughput_model`):
+        the fixed launch overhead amortised over the packed slots against
+        each slot's HBM pass and exposed wire seconds. Strictly rises in
+        `batch` until the per-slot rings exceed the VMEM budget
+        (`roofline.serving_max_batch`), where the model refuses — the
+        BENCH_serving gate pair."""
+        t = self.roofline_terms()
+        return R.serving_throughput_model(
+            self.batch,
+            hbm_bytes_per_domain=t.hbm_bytes_per_dev / self.batch,
+            ring_bytes_per_slot=self.vmem_register_bytes() // self.batch,
+            exposed_wire_s_per_domain=t.collective_exposed_s / self.batch)

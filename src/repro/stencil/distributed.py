@@ -591,6 +591,41 @@ def count_exchange_wire_bytes(fn, *args) -> int:
     return total
 
 
+def count_pallas_hbm_bytes(fn, *args) -> int:
+    """HBM bytes `fn`'s Pallas kernels stream: the summed sizes of every
+    rank->=3 operand and result of each `pallas_call` in its (recursively
+    walked) jaxpr.
+
+    Rank >= 3 selects exactly the field arrays — the (X, Y, Z) /
+    slot-stacked (B, X, Y, Z) inputs the kernel reads once and the outputs
+    it writes once. The O(X + Y + Z) control operands (the packed
+    coefficient vectors and the interior masks) are deliberately excluded:
+    they are scalar-pipeline traffic the analytic model never charged.
+    For the fused kernel on lane-aligned Z this count equals
+    ``kernels.advection.hbm_bytes_model(..., "fused", grid_tiled=True)``
+    EXACTLY (and the batched mega-launch counts B times that) — the
+    measured counterpart of the model, gated in BENCH_serving.json the
+    way `count_exchange_wire_bytes` is gated in BENCH_scaling2d.json.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    total = 0
+
+    def walk(jaxpr):
+        nonlocal total
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                for var in list(eqn.invars) + list(eqn.outvars):
+                    aval = var.aval
+                    if getattr(aval, "ndim", 0) >= 3:
+                        total += int(np.prod(aval.shape)) * aval.dtype.itemsize
+            for pval in eqn.params.values():
+                for sub in _iter_jaxprs(pval):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return total
+
+
 def reference_global(u, v, w, params: AdvectParams):
     """Single-device oracle for the distributed version."""
     return pw_advect_ref(u, v, w, params)

@@ -1,0 +1,114 @@
+"""Tier-1 ServingEngine regressions: budget off-by-one, prompt-length
+guard, dead-slot masking / slot reuse.
+
+Unlike tests/test_serving.py (slow tier), these run in the fast tier —
+they pin the three correctness fixes:
+
+  * ``max_new_tokens=1`` completes AT PRIME TIME with exactly one token
+    (the prefill argmax); the old engine decoded one token past budget.
+  * a prompt with ``len >= max_len`` must raise ValueError naming the
+    limit — JAX's clipped scatter would otherwise silently drop the
+    out-of-bounds cache tail and corrupt decode.
+  * a re-primed slot is unaffected by its previous occupant: priming
+    overwrites the whole cache slot and dead slots are masked out of the
+    decode feed.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import pspec
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.slots import SlotManager
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_smoke_config("qwen3_32b")
+    layout = M.make_layout(cfg, tp=1)
+    params = pspec.init_params(M.param_specs(cfg, layout),
+                               jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(n, seed=0, vocab=128):
+    return np.random.default_rng(seed).integers(0, vocab, n).astype(np.int32)
+
+
+def test_max_new_tokens_one_emits_exactly_one(engine_setup):
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, batch_size=2, max_len=32)
+    done = eng.run([Request(uid=0, prompt=_prompt(6), max_new_tokens=1)])
+    assert len(done[0]) == 1
+    # complete-at-prime: the request never occupied a slot
+    assert not eng.slots.any_live()
+
+
+def test_budget_exact_for_small_counts(engine_setup):
+    cfg, params = engine_setup
+    for n in (1, 2, 3):
+        eng = ServingEngine(cfg, params, batch_size=1, max_len=32)
+        done = eng.run([Request(uid=0, prompt=_prompt(5), max_new_tokens=n)])
+        assert len(done[0]) == n, f"max_new_tokens={n} produced {len(done[0])}"
+
+
+def test_max_new_tokens_zero_rejected(engine_setup):
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, batch_size=1, max_len=32)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.run([Request(uid=0, prompt=_prompt(4), max_new_tokens=0)])
+
+
+def test_oversized_prompt_raises_naming_limit(engine_setup):
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, batch_size=1, max_len=16)
+    with pytest.raises(ValueError, match=r"max_len is 16"):
+        eng.run([Request(uid=0, prompt=_prompt(16), max_new_tokens=2)])
+    with pytest.raises(ValueError, match=r"max_len"):
+        eng.run([Request(uid=1, prompt=_prompt(40), max_new_tokens=2)])
+
+
+def test_slot_reuse_unaffected_by_previous_occupant(engine_setup):
+    """A request decoded in a reused slot matches the same request decoded
+    in a fresh engine: no stale cache from the previous occupant leaks."""
+    cfg, params = engine_setup
+    pa, pb = _prompt(10, seed=1), _prompt(7, seed=2)
+    # batch_size=1 forces B to reuse the slot A just released
+    eng = ServingEngine(cfg, params, batch_size=1, max_len=64)
+    done = eng.run([Request(uid=0, prompt=pa, max_new_tokens=6),
+                    Request(uid=1, prompt=pb, max_new_tokens=6)])
+    fresh = ServingEngine(cfg, params, batch_size=1, max_len=64)
+    alone = fresh.run([Request(uid=1, prompt=pb, max_new_tokens=6)])
+    assert done[1] == alone[1]
+
+
+def test_next_token_initialised_at_construction(engine_setup):
+    cfg, params = engine_setup
+    eng = ServingEngine(cfg, params, batch_size=3, max_len=32)
+    assert eng.next_token.shape == (3,)
+    assert eng.next_token.dtype == np.int32
+    assert not eng.next_token.any()
+
+
+# -- SlotManager unit behaviour (shared by both serving tiers) -------------
+
+def test_slot_manager_rejects_zero_budget():
+    sm = SlotManager(2)
+    with pytest.raises(ValueError, match="budget"):
+        sm.occupy(0, "req", 0)
+
+
+def test_slot_manager_lifecycle():
+    sm = SlotManager(2)
+    sm.occupy(1, "req", 2)
+    assert sm.live_slots() == [1] and sm.idle_slots() == [0]
+    with pytest.raises(ValueError):
+        sm.occupy(1, "other", 3)      # already live
+    assert sm.tick(1) is False        # budget 2 -> 1
+    assert sm.tick(1) is True         # budget 1 -> 0: complete
+    sm.release(1)
+    assert not sm.any_live()
+    with pytest.raises(ValueError):
+        sm.tick(1)                    # not live any more

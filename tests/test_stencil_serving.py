@@ -1,0 +1,209 @@
+"""Tier-1 tests for the batched multi-domain stencil serving tier.
+
+Contracts pinned here (the serving_sweep.py gates, at test-sized grids):
+
+  * `advect_fused_batched` (the vmap mega-launch) is BITWISE-equal to
+    per-domain sequential `advect_fused` runs — Pallas prepends the slot
+    index to the grid, so slots stream back-to-back through the same
+    VMEM rings and the startup masking walls off stale ring content.
+  * `StencilServingEngine` pads mixed-extent requests into fixed slots
+    with interior masks freezing every padded cell at exactly 0.0 update,
+    so streamed states and final outputs are bitwise-equal to unpadded
+    sequential runs.
+  * the compiled-executable cache traces once per (shape, T, dtype,
+    n_blocks, exchange, mesh) key; a simulated device loss re-shards to
+    fewer slots mid-run with bitwise-identical results and exactly one
+    extra recorded miss.
+  * `serving_throughput_model` rises strictly with batch until the VMEM
+    ring budget binds, then refuses.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import roofline as R
+from repro.kernels.advection.advection import (advect_fused,
+                                               advect_fused_batched,
+                                               fused_register_bytes,
+                                               hbm_bytes_model)
+from repro.kernels.advection.ref import default_params
+from repro.serving.stencil_engine import (ExecutableCache, StencilRequest,
+                                          StencilServingEngine)
+from repro.stencil.advection import AdvectionDomain, stratus_fields
+from repro.stencil.distributed import count_pallas_hbm_bytes
+
+X, Y, Z, T = 8, 10, 16, 2
+DT = 0.005
+
+
+def _dom(**kw):
+    kw.setdefault("variant", "fused")
+    kw.setdefault("fuse_T", T)
+    kw.setdefault("dt", DT)
+    return AdvectionDomain(X, Y, Z, **kw)
+
+
+def _req(uid, Xr, Yr, n_steps=1):
+    u, v, w = stratus_fields(Xr, Yr, Z, seed=uid)
+    return StencilRequest(uid=uid, u=np.asarray(u), v=np.asarray(v),
+                          w=np.asarray(w), n_steps=n_steps)
+
+
+def _sequential(uid, Xr, Yr, n_steps):
+    p = default_params(Z)
+    u, v, w = stratus_fields(Xr, Yr, Z, seed=uid)
+    states = []
+    for _ in range(n_steps):
+        u, v, w = advect_fused(u, v, w, p, T=T, dt=DT, interpret=True)
+        states.append(tuple(np.asarray(a) for a in (u, v, w)))
+    return states
+
+
+# -- the batched kernel ----------------------------------------------------
+
+def test_batched_kernel_bitwise_equals_sequential():
+    p = default_params(Z)
+    doms = [stratus_fields(X, Y, Z, seed=s) for s in range(3)]
+    u, v, w = (jnp.stack([d[i] for d in doms]) for i in range(3))
+    ou, ov, ow = advect_fused_batched(u, v, w, p, T=T, dt=DT, interpret=True)
+    for b, (du, dv, dw) in enumerate(doms):
+        su, sv, sw = advect_fused(du, dv, dw, p, T=T, dt=DT, interpret=True)
+        for got, ref in ((ou[b], su), (ov[b], sv), (ow[b], sw)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_batched_kernel_rejects_rank3():
+    p = default_params(Z)
+    u, v, w = stratus_fields(X, Y, Z, seed=0)
+    with pytest.raises(ValueError, match="slot-stacked"):
+        advect_fused_batched(u, v, w, p, T=T, dt=DT, interpret=True)
+
+
+def test_counted_hbm_bytes_scale_with_batch():
+    # lane-aligned Z so lane_eff == 1 and the count matches EXACTLY
+    Zl = 128
+    p = default_params(Zl)
+    for B in (1, 2):
+        u, v, w = (jnp.stack([stratus_fields(4, 8, Zl, seed=s)[i]
+                              for s in range(B)]) for i in range(3))
+
+        def fn(uu, vv, ww):
+            return advect_fused_batched(uu, vv, ww, p, T=T, dt=DT,
+                                        interpret=True)
+
+        counted = count_pallas_hbm_bytes(fn, u, v, w)
+        assert counted == B * hbm_bytes_model(4, 8, Zl, 4, "fused", T=T)
+
+
+# -- the serving engine ----------------------------------------------------
+
+def test_engine_padded_mixed_extents_bitwise():
+    sizes = [(X, Y, 2), (5, 6, 1), (4, 8, 3)]
+    eng = StencilServingEngine(_dom(), batch_size=2)
+    done = eng.run([_req(i, xr, yr, n) for i, (xr, yr, n) in enumerate(sizes)])
+    assert set(done) == {0, 1, 2}
+    for i, (xr, yr, n) in enumerate(sizes):
+        ref = _sequential(i, xr, yr, n)
+        assert len(done[i].states) == n          # streamed every mega-step
+        for got, want in zip(done[i].states, ref):
+            for g, r in zip(got, want):
+                assert g.shape == (xr, yr, Z)
+                np.testing.assert_array_equal(np.asarray(g), r)
+        for g, r in zip(done[i].out, ref[-1]):
+            np.testing.assert_array_equal(np.asarray(g), r)
+
+
+def test_engine_zero_steps_completes_at_prime():
+    eng = StencilServingEngine(_dom(), batch_size=2)
+    r = _req(0, 5, 6, n_steps=0)
+    done = eng.run([r])
+    assert done[0].states == []
+    np.testing.assert_array_equal(done[0].out[0], r.u)
+    assert not eng.slots.any_live()
+    assert eng.cache_stats()["misses"] == 0      # never launched
+
+
+def test_engine_validates_requests():
+    eng = StencilServingEngine(_dom(), batch_size=1)
+    u, v, w = (np.zeros((5, 6, Z), np.float32) for _ in range(3))
+    with pytest.raises(ValueError, match="n_steps"):
+        eng.run([StencilRequest(uid=0, u=u, v=v, w=w, n_steps=-1)])
+    big = np.zeros((X + 1, Y, Z), np.float32)
+    with pytest.raises(ValueError, match="slot"):
+        eng.run([StencilRequest(uid=1, u=big, v=big, w=big, n_steps=1)])
+    zbad = np.zeros((5, 6, Z + 8), np.float32)
+    with pytest.raises(ValueError, match="lane"):
+        eng.run([StencilRequest(uid=2, u=zbad, v=zbad, w=zbad, n_steps=1)])
+
+
+def test_executable_cache_traces_once():
+    sizes = [(X, Y, 2), (5, 6, 1), (4, 8, 3), (6, 6, 2)]
+    eng = StencilServingEngine(_dom(), batch_size=2)
+    eng.run([_req(i, xr, yr, n) for i, (xr, yr, n) in enumerate(sizes)])
+    stats = eng.cache_stats()
+    assert stats["misses"] == 1 and stats["entries"] == 1
+    assert stats["hits"] >= 2                    # every later mega-step hit
+
+
+def test_cache_unit():
+    c = ExecutableCache()
+    calls = []
+    f = c.get("k1", lambda: calls.append(1) or (lambda: 7))
+    g = c.get("k1", lambda: calls.append(1) or (lambda: 9))
+    assert f is g and calls == [1]
+    assert c.stats() == {"hits": 1, "misses": 1, "entries": 1}
+
+
+def test_device_loss_reshard_bitwise_resume():
+    sizes = [(X, Y, 3), (5, 6, 2), (4, 8, 3)]
+    reqs = lambda: [_req(i, xr, yr, n)
+                    for i, (xr, yr, n) in enumerate(sizes)]
+    clean = StencilServingEngine(_dom(), batch_size=2)
+    done = clean.run(reqs())
+    faulted = StencilServingEngine(_dom(), batch_size=2)
+    done_f = faulted.run(reqs(), lose_device_at=1, reshard_to=1)
+    assert set(done_f) == set(done)
+    for i in done:
+        for g, r in zip(done_f[i].out, done[i].out):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    # the re-shard re-traces for the new batch size: exactly one extra miss
+    assert faulted.cache_stats()["misses"] == 2
+    assert faulted.cache_stats()["entries"] == 2
+
+
+# -- the throughput model --------------------------------------------------
+
+def test_serving_throughput_strictly_rises_to_vmem_bound():
+    ring = fused_register_bytes(T, Y, Z, 4)
+    max_b = R.serving_max_batch(ring)
+    assert max_b >= 2
+    tputs = [R.serving_throughput_model(b, hbm_bytes_per_domain=1e6,
+                                        ring_bytes_per_slot=ring)
+             for b in range(1, max_b + 1)]
+    assert all(b > a for a, b in zip(tputs, tputs[1:]))
+    with pytest.raises(ValueError, match="VMEM"):
+        R.serving_throughput_model(max_b + 1, hbm_bytes_per_domain=1e6,
+                                   ring_bytes_per_slot=ring)
+
+
+def test_serving_max_batch_rejects_oversized_ring():
+    with pytest.raises(ValueError):
+        R.serving_max_batch(R.VMEM_PER_CORE + 1)
+
+
+def test_domain_batch_accounting_scales_linearly():
+    one = _dom(batch=1)
+    four = _dom(batch=4)
+    assert four.flops_per_step() == 4 * one.flops_per_step()
+    assert four.hbm_bytes_per_step() == 4 * one.hbm_bytes_per_step()
+    assert four.vmem_register_bytes() == 4 * one.vmem_register_bytes()
+    with pytest.raises(ValueError):
+        _dom(batch=0)
+
+
+def test_modelled_throughput_matches_domain_method():
+    eng = StencilServingEngine(_dom(), batch_size=2)
+    want = dataclasses.replace(_dom(), batch=2).serving_throughput()
+    assert eng.modelled_throughput() == want
