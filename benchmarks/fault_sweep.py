@@ -1,0 +1,324 @@
+"""Fault-injection + recovery sweep: the serving stack under a
+deterministic fault plan, gated end to end, written to
+``BENCH_faults.json``.
+
+Row families:
+
+  * ``guard[]`` — the finite-guard pass priced and counted: the
+    jaxpr-counted guard-pass bytes of the guarded fused kernel
+    (`stencil.distributed.count_guard_bytes` — the pass re-reads the
+    three advanced fields and writes X flag words) gated ==
+    `roofline.guard_bytes_model` EXACTLY across (y_tile, batch), the
+    guard's field outputs gated BITWISE-equal to the unguarded kernel
+    (the reason detection is a separate pass, not fused into the
+    advection loop), and the detection overhead gated BOUNDED: guard
+    bytes <= 51% of the pass's field bytes (one read pass against the
+    six-array field pass), amortised over the T fused Euler steps.
+  * ``isolation[]`` — the engine under the ISSUE's combined
+    NaN-poisoning + device-loss + exchange-stall plan: the poisoned slot
+    is quarantined with an error status (rollback first — replay
+    re-poisons — then quarantine), the device loss re-shards, the stall
+    retries then degrades the ladder, and every COMPLETED healthy job's
+    streamed states and final outputs are gated BITWISE-equal to a
+    fault-free run. `health()` counters gated exact.
+  * ``rollback[]`` — a one-shot halo-corruption plan with per-step
+    snapshots (round-tripped through `training/checkpoint`'s atomic
+    on-disk format): the fault rolls back and replays clean, ALL
+    outputs gated bitwise-equal to the uninterrupted run, and the
+    recovery overhead gated BOUNDED: mega-steps run == clean steps +
+    exactly `rollbacks` x (snapshot interval) replayed steps.
+  * ``cache[]`` — the bounded-LRU executable cache: a `cache_evict`
+    fault records exactly one eviction + one extra re-trace miss, and
+    shape-diverse traffic past `max_entries` evicts LRU-first.
+
+Every gate is an explicit ``SystemExit`` raise (python -O safe). CI runs
+``--quick`` in the benchmark-smoke job.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+try:                        # package context (benchmarks.run / -m)
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import roofline as R
+from repro.kernels.advection.advection import (advect_fused,
+                                               hbm_bytes_model)
+from repro.kernels.advection.ref import default_params
+from repro.serving.faults import FaultPlan
+from repro.serving.stencil_engine import (ExecutableCache, StencilRequest,
+                                          StencilServingEngine)
+from repro.stencil.advection import AdvectionDomain, stratus_fields
+from repro.stencil.distributed import count_guard_bytes
+
+ENGINE_GRID = (12, 16, 64)   # engine slot shape for the bitwise gates
+GUARD_GRID = (8, 16, 128)    # lane-aligned grid for the byte-count gates
+T = 2
+DT = 0.005
+
+
+def _dom(**kw):
+    X, Y, Z = ENGINE_GRID
+    kw.setdefault("variant", "fused")
+    kw.setdefault("fuse_T", T)
+    kw.setdefault("dt", DT)
+    return AdvectionDomain(X, Y, Z, **kw)
+
+
+def _requests(sizes, n_steps):
+    _, _, Z = ENGINE_GRID
+    reqs = []
+    for i, (Xr, Yr) in enumerate(sizes):
+        u, v, w = stratus_fields(Xr, Yr, Z, seed=i)
+        reqs.append(StencilRequest(uid=i, u=np.asarray(u), v=np.asarray(v),
+                                   w=np.asarray(w), n_steps=n_steps[i]))
+    return reqs
+
+
+def _guard_rows(smoke: bool):
+    X, Y, Z = GUARD_GRID
+    p = default_params(Z)
+    cases = [(None, 1), (4, 3)] if smoke else [(None, 1), (None, 3),
+                                               (4, 1), (4, 3), (6, 2)]
+    rows = []
+    for y_tile, B in cases:
+        fields = [stratus_fields(X, Y, Z, seed=s) for s in range(B)]
+        if B == 1:
+            u, v, w = fields[0]
+
+            def fn(uu, vv, ww):
+                return advect_fused(uu, vv, ww, p, T=T, dt=DT,
+                                    y_tile=y_tile, interpret=True,
+                                    guard=True)
+        else:
+            u, v, w = (jnp.stack([f[i] for f in fields]) for i in range(3))
+            from repro.kernels.advection.advection import advect_fused_batched
+
+            def fn(uu, vv, ww):
+                return advect_fused_batched(uu, vv, ww, p, T=T, dt=DT,
+                                            y_tile=y_tile, interpret=True,
+                                            guard=True)
+        counted = count_guard_bytes(fn, u, v, w)
+        model = R.guard_bytes_model(X, Y, Z, batch=B)
+        if counted != model:
+            raise SystemExit(
+                f"fault gate: jaxpr-counted guard bytes {counted} != "
+                f"guard_bytes_model {model} at y_tile={y_tile} B={B}")
+        pass_bytes = B * hbm_bytes_model(X, Y, Z, 4, "fused", T=T)
+        if counted > 0.51 * pass_bytes:
+            raise SystemExit(
+                f"fault gate: guard bytes {counted} not bounded by 51% "
+                f"of the {pass_bytes}-byte field pass — detection is one "
+                "read pass against the six-array field pass")
+        # the guard must not perturb the field outputs
+        res = fn(u, v, w)
+        gu, gv, gw, flags = res
+        if B == 1:
+            ru, rv, rw = advect_fused(u, v, w, p, T=T, dt=DT,
+                                      y_tile=y_tile, interpret=True)
+        else:
+            from repro.kernels.advection.advection import advect_fused_batched
+            ru, rv, rw = advect_fused_batched(u, v, w, p, T=T, dt=DT,
+                                              y_tile=y_tile, interpret=True)
+        diff = max(float(jnp.max(jnp.abs(a - b)))
+                   for a, b in ((gu, ru), (gv, rv), (gw, rw)))
+        if diff != 0.0:
+            raise SystemExit(
+                f"fault gate: guarded kernel differs from unguarded by "
+                f"{diff} at y_tile={y_tile} B={B}")
+        if float(jnp.min(flags)) <= 0.0:
+            raise SystemExit(
+                f"fault gate: clean fields tripped the finite guard at "
+                f"y_tile={y_tile} B={B}")
+        rows.append({"grid": [X, Y, Z], "T": T, "y_tile": y_tile,
+                     "batch": B, "counted_guard_bytes": counted,
+                     "modelled_guard_bytes": model,
+                     "field_pass_bytes": pass_bytes,
+                     "guard_overhead_frac": counted / pass_bytes,
+                     "bitwise_diff_vs_unguarded": diff})
+        emit(f"faults.guard.yt{y_tile}.B{B}", 0.0,
+             f"guard_B={counted};frac={counted / pass_bytes:.2e};"
+             f"bitwise_equal=True")
+    return rows
+
+
+def _isolation_rows(smoke: bool):
+    sizes = [(12, 16), (6, 8), (4, 10)]
+    n_steps = [3, 2, 3]
+    clean = StencilServingEngine(_dom(), batch_size=2)
+    done_c = clean.run(_requests(sizes, n_steps))
+    # the ISSUE's combined plan: poison slot 1, lose a device, stall the
+    # exchange — all in one run
+    plan = ("nan_poison@1:slot=1;"
+            "exchange_stall@2:stalls=6,rung=remote_dma;"
+            "device_loss@3:reshard_to=1")
+    eng = StencilServingEngine(_dom(exchange="remote_dma"), batch_size=2,
+                               fault_plan=plan, max_retries=2)
+    done_f = eng.run(_requests(sizes, n_steps))
+    h = eng.health()
+    quarantined = [u for u in done_f if done_f[u].status == "quarantined"]
+    healthy = [u for u in done_f if done_f[u].status == "done"]
+    if len(quarantined) != 1:
+        raise SystemExit(
+            f"fault gate: the poisoned slot must be quarantined exactly "
+            f"once, got {quarantined} (health {h})")
+    if done_f[quarantined[0]].out is not None:
+        raise SystemExit("fault gate: a quarantined job must not carry an "
+                         "output")
+    diff = 0.0
+    for u in healthy:
+        for got, ref in zip(done_f[u].out, done_c[u].out):
+            diff = max(diff, float(np.max(np.abs(got - ref))))
+        for st_g, st_r in zip(done_f[u].states, done_c[u].states):
+            for got, ref in zip(st_g, st_r):
+                diff = max(diff, float(np.max(np.abs(got - ref))))
+    if diff != 0.0:
+        raise SystemExit(
+            f"fault gate: healthy-slot outputs differ from the fault-free "
+            f"run by {diff} under the combined plan — isolation broken")
+    expect = {"quarantines": 1, "rollbacks": 1, "device_losses": 1,
+              "degradations": 1}
+    for k, want in expect.items():
+        if h[k] != want:
+            raise SystemExit(
+                f"fault gate: health[{k!r}] == {h[k]}, expected {want} "
+                f"under plan {plan!r} (health {h})")
+    if h["retries"] < 1:
+        raise SystemExit(f"fault gate: the stall must record retries, "
+                         f"got {h['retries']}")
+    row = {"plan": h["plan"], "healthy_uids": sorted(healthy),
+           "quarantined_uids": sorted(quarantined),
+           "healthy_bitwise_diff": diff,
+           "health": {k: h[k] for k in ("faults_injected", "retries",
+                                        "quarantines", "rollbacks",
+                                        "degradations", "device_losses",
+                                        "reshards", "snapshots")},
+           "transitions": h["transitions"], "final_exchange": h["exchange"]}
+    emit("faults.isolation.combined_plan", 0.0,
+         f"healthy={len(healthy)};quarantined={len(quarantined)};"
+         f"bitwise_equal=True;final_exchange={h['exchange']}")
+    return [row]
+
+
+def _rollback_rows(smoke: bool):
+    sizes = [(12, 16), (6, 8), (4, 10)]
+    n_steps = [3, 2, 3]
+    clean = StencilServingEngine(_dom(), batch_size=2)
+    done_c = clean.run(_requests(sizes, n_steps))
+    steps_clean = clean.megasteps_executed
+    with tempfile.TemporaryDirectory() as td:
+        eng = StencilServingEngine(
+            _dom(), batch_size=2, snapshot_every=1, snapshot_dir=td,
+            fault_plan="halo_corruption@1:slot=0,mode=inf,depth=2")
+        done_f = eng.run(_requests(sizes, n_steps))
+        h = eng.health()
+    if any(done_f[u].status != "done" for u in done_f):
+        raise SystemExit(
+            "fault gate: a one-shot halo corruption must replay clean "
+            f"after rollback, got statuses "
+            f"{[done_f[u].status for u in done_f]}")
+    diff = 0.0
+    for u in done_c:
+        for got, ref in zip(done_f[u].out, done_c[u].out):
+            diff = max(diff, float(np.max(np.abs(got - ref))))
+        for st_g, st_r in zip(done_f[u].states, done_c[u].states):
+            for got, ref in zip(st_g, st_r):
+                diff = max(diff, float(np.max(np.abs(got - ref))))
+    if diff != 0.0:
+        raise SystemExit(
+            f"fault gate: rollback-resume differs from the uninterrupted "
+            f"run by {diff} — resume must be bitwise")
+    if h["rollbacks"] != 1 or h["quarantines"] != 0:
+        raise SystemExit(
+            f"fault gate: one-shot corruption must roll back exactly once "
+            f"and quarantine nothing, got rollbacks={h['rollbacks']} "
+            f"quarantines={h['quarantines']}")
+    # bounded recovery overhead: snapshot_every=1 means each rollback
+    # replays exactly one mega-step (physical executions, not the
+    # logical step index a rollback rewinds)
+    steps_faulted = eng.megasteps_executed
+    if steps_faulted != steps_clean + h["rollbacks"]:
+        raise SystemExit(
+            f"fault gate: recovery overhead not bounded — faulted run took "
+            f"{steps_faulted} mega-steps vs clean {steps_clean} + "
+            f"{h['rollbacks']} rollback replays")
+    row = {"plan": h["plan"], "resume_bitwise_diff": diff,
+           "steps_clean": steps_clean, "steps_faulted": steps_faulted,
+           "rollbacks": h["rollbacks"], "snapshots": h["snapshots"],
+           "snapshot_transport": "training.checkpoint (atomic on-disk)"}
+    emit("faults.rollback.halo_corruption", 0.0,
+         f"bitwise_equal=True;overhead_steps={steps_faulted - steps_clean}")
+    return [row]
+
+
+def _cache_rows(smoke: bool):
+    sizes = [(12, 16), (6, 8)]
+    n_steps = [3, 2]
+    # a cache_evict fault: exactly one eviction + one extra re-trace miss
+    eng = StencilServingEngine(_dom(), batch_size=2,
+                               fault_plan="cache_evict@2")
+    eng.run(_requests(sizes, n_steps))
+    stats = eng.cache_stats()
+    if stats["evictions"] != 1 or stats["misses"] != 2:
+        raise SystemExit(
+            f"fault gate: cache_evict must record exactly one eviction "
+            f"and one extra re-trace miss, got {stats}")
+    # bounded LRU: max_entries=2 under 3 distinct keys evicts LRU-first
+    c = ExecutableCache(max_entries=2)
+    for key in ("a", "b", "c"):
+        c.get(key, lambda k=key: (lambda: k))
+    if c.stats() != {"hits": 0, "misses": 3, "entries": 2, "evictions": 1}:
+        raise SystemExit(f"fault gate: bounded LRU stats wrong: {c.stats()}")
+    c.get("b", lambda: (lambda: "rebuilt"))        # b still resident: hit
+    c.get("a", lambda: (lambda: "rebuilt"))        # a evicted: miss
+    if c.stats() != {"hits": 1, "misses": 4, "entries": 2, "evictions": 2}:
+        raise SystemExit(f"fault gate: LRU order wrong: {c.stats()}")
+    row = {"evict_fault_stats": stats, "lru_stats": c.stats(),
+           "max_entries": 2}
+    emit("faults.cache.evict_and_lru", 0.0,
+         f"evictions={stats['evictions']};extra_miss=True;lru_ok=True")
+    return [row]
+
+
+def run(smoke: bool = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    payload = {
+        "guard": _guard_rows(smoke),
+        "isolation": _isolation_rows(smoke),
+        "rollback": _rollback_rows(smoke),
+        "cache": _cache_rows(smoke),
+        "itemsize": 4,
+        "contract": "jaxpr-counted guard-pass bytes == guard_bytes_model "
+                    "exactly at every (y_tile, batch), guarded kernel "
+                    "bitwise-equal to unguarded (detection is a separate "
+                    "pass over the advanced fields: one extra read pass, "
+                    "<= 51% of the six-array field pass, amortised over "
+                    "the T fused Euler steps); under the combined "
+                    "NaN-poisoning + "
+                    "device-loss + exchange-stall plan the poisoned slot "
+                    "is quarantined and every completed healthy job is "
+                    "bitwise-equal to a fault-free run with exact health "
+                    "counters; a one-shot halo corruption rolls back "
+                    "through the atomic on-disk snapshot and resumes "
+                    "bitwise-equal to the uninterrupted run with exactly "
+                    "rollbacks extra mega-steps; cache_evict records one "
+                    "eviction + one re-trace miss and the bounded LRU "
+                    "evicts least-recently-used first",
+    }
+    out_path = os.path.join(os.getcwd(), "BENCH_faults.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("faults.json_written", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    run(smoke=_bootstrap.smoke_arg())

@@ -17,15 +17,17 @@ from benchmarks import common
 
 
 def main() -> None:
-    from benchmarks import (dma_overlap, fig3_ladder, fig5_scaling,
-                            fig7_compare, fig8_gridsize, fig9_fusion,
-                            overlap_sweep, pipeline_sweep, roofline_table,
-                            scaling2d_sweep, serving_sweep, tiling_sweep)
+    from benchmarks import (dma_overlap, fault_sweep, fig3_ladder,
+                            fig5_scaling, fig7_compare, fig8_gridsize,
+                            fig9_fusion, overlap_sweep, pipeline_sweep,
+                            roofline_table, scaling2d_sweep, serving_sweep,
+                            tiling_sweep)
     common.header()
     failures = []
     for mod in (fig3_ladder, fig5_scaling, fig7_compare, fig8_gridsize,
                 fig9_fusion, tiling_sweep, scaling2d_sweep, overlap_sweep,
-                pipeline_sweep, serving_sweep, dma_overlap, roofline_table):
+                pipeline_sweep, serving_sweep, fault_sweep, dma_overlap,
+                roofline_table):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

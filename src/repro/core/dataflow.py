@@ -19,6 +19,7 @@ reproductions: serial sum vs. max-stage (filled pipeline) plus fill/drain.
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 from dataclasses import dataclass, field
@@ -34,11 +35,24 @@ class Stage:
     depth: int = 16                    # paper: HLS stream depth 16
 
 
-class Pipeline:
-    """Thread-per-stage dataflow pipeline with bounded inter-stage queues."""
+_log = logging.getLogger(__name__)
 
-    def __init__(self, stages: Sequence[Stage]):
+
+class Pipeline:
+    """Thread-per-stage dataflow pipeline with bounded inter-stage queues.
+
+    `join_timeout` bounds the per-thread wait at drain time. A worker
+    still alive past it is a LEAK — typically an upstream stage blocked
+    on a bounded queue whose consumer died — and is never ignored: the
+    leak is logged loudly and, when no stage error explains it, raised
+    as RuntimeError naming the hung stages."""
+
+    def __init__(self, stages: Sequence[Stage], *,
+                 join_timeout: float = 10.0):
+        if join_timeout <= 0:
+            raise ValueError(f"join_timeout must be > 0, got {join_timeout}")
         self.stages = list(stages)
+        self.join_timeout = join_timeout
 
     def run(self, items: Sequence[Any]) -> List[Any]:
         qs = [queue.Queue(maxsize=max(s.depth, 1)) for s in self.stages]
@@ -74,10 +88,24 @@ class Pipeline:
             if r is _STOP:
                 break
             results.append(r)
-        for t in threads:
-            t.join(timeout=10)
+        leaked = []
+        for st, t in zip(self.stages, threads):
+            t.join(timeout=self.join_timeout)
+            if t.is_alive():
+                leaked.append(st.name)
+        if leaked:
+            _log.error(
+                "pipeline leaked %d worker thread(s) still alive after "
+                "%.1fs join: stages %s%s", len(leaked), self.join_timeout,
+                leaked, " (stage error below)" if errs else "")
         if errs:
             raise errs[0]
+        if leaked:
+            raise RuntimeError(
+                f"pipeline worker thread(s) for stage(s) {leaked} still "
+                f"alive after {self.join_timeout}s join with no stage "
+                "error: a bounded queue is wedged (likely a producer "
+                "blocked on a dead consumer)")
         return results
 
 

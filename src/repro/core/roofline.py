@@ -325,6 +325,37 @@ def serving_throughput_model(batch: int, *, hbm_bytes_per_domain: float,
     return batch / step_s
 
 
+GUARD_FLAG_ITEMSIZE = 4   # the finite-guard flag output is f32
+
+
+def guard_bytes_model(X: int, Y: int, Z: int, *, batch: int = 1,
+                      itemsize: int = 4) -> int:
+    """Extra HBM bytes of the serving tier's finite-guard pass.
+
+    The guard (``advect_fused(..., guard=True)`` /
+    ``kernels.advection.finite_guard``) is a separate pallas pass over
+    the three ADVANCED fields: it re-reads ``3 * X * Y * Z`` field words
+    and writes ``X`` f32 flag words per slot, `batch` slots per
+    mega-launch. Detection is deliberately NOT fused into the advection
+    kernel — an in-loop `isfinite` probe perturbs the fused loop body's
+    float contraction by one ulp, breaking the engine's bitwise
+    contracts — so its price is this honest extra read pass: exactly
+    half the fused kernel's six-array pass, amortised over the T fused
+    Euler steps the pass just bought.
+
+    `stencil.distributed.count_guard_bytes` recounts the executing
+    program's actual guard-pass operands from the jaxpr;
+    BENCH_faults.json gates the two equal EXACTLY — the recovery tier
+    priced under the same model-equals-counted discipline as every
+    other byte in this repo.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if min(X, Y, Z) < 1:
+        raise ValueError(f"extents must be >= 1, got {(X, Y, Z)}")
+    return batch * (3 * X * Y * Z * itemsize + X * GUARD_FLAG_ITEMSIZE)
+
+
 def stencil_tiling_bytes_factor(Y: int, y_tile: Optional[int], halo: int,
                                 *, grid_tiled: bool = True) -> float:
     """Multiplier on the compulsory per-pass HBM bytes from y-tiling.

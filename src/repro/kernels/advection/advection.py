@@ -402,8 +402,7 @@ def advect_wide(u, v, w, p: AdvectParams, *, interpret: bool = True,
 
 
 def _kernel_fused(t1_ref, t2_ref, xm_ref, ym_ref, u_ref, v_ref, w_ref,
-                  ou_ref, ov_ref, ow_ref,
-                  ubuf, vbuf, wbuf, *, X, Y, TY, S, T, dt):
+                  *refs, X, Y, TY, S, T, dt):
     """T stacked 3-slice rings: level k holds the step-k fields.
 
     At grid step (t, i) the newly-arrived input slice x=i of tile t's slab
@@ -427,7 +426,15 @@ def _kernel_fused(t1_ref, t2_ref, xm_ref, ym_ref, u_ref, v_ref, w_ref,
     xm[j] is nonzero, so a 2D (x, y) decomposition can freeze wrapped
     x-halo planes the same way (the slab-edge wall at j=0 / j=X-1 stays
     structural either way).
+
+    The finite guard deliberately does NOT live in this kernel: probing
+    the output slice with `isfinite` inside the loop body changes the
+    body's codegen enough to perturb float contraction by one ulp at
+    most shapes. Detection is a separate pass — `_kernel_finite_guard`
+    below — so this kernel's outputs stay bitwise-identical whether or
+    not the caller asked for guarding.
     """
+    ou_ref, ov_ref, ow_ref, ubuf, vbuf, wbuf = refs
     t = pl.program_id(0)
     i = pl.program_id(1)
     slot = jax.lax.rem(i, 3)
@@ -459,10 +466,46 @@ def _kernel_fused(t1_ref, t2_ref, xm_ref, ym_ref, u_ref, v_ref, w_ref,
         ref[0] = jax.lax.dynamic_slice(val, (start, 0), (TY, val.shape[1]))
 
 
+def _kernel_finite_guard(u_ref, v_ref, w_ref, gf_ref):
+    """Per-x-slice finite-guard: flag = 1.0 iff the (Y, Z) slice of all
+    three fields is entirely finite. One grid step per x-slice keeps the
+    VMEM working set at 3*Y*Z words regardless of X."""
+    ok = jnp.float32(1.0)
+    for ref in (u_ref, v_ref, w_ref):
+        ok = ok * jnp.all(jnp.isfinite(ref[0])).astype(jnp.float32)
+    gf_ref[0] = ok
+
+
+def finite_guard(u, v, w, *, interpret: bool = True):
+    """Scan the three fields for non-finite cells in ONE extra read pass.
+
+    Returns f32 flags of shape ``(X,)``: ``flags[i] == 1.0`` iff x-slice
+    i of `u`, `v` and `w` is entirely finite, so ``flags.min() > 0`` iff
+    the whole state is. This is the serving tier's poisoned-slot
+    detector, kept OUTSIDE the fused advection kernel on purpose: an
+    in-loop `isfinite` probe perturbs the fused kernel's float
+    contraction by one ulp, while a separate pass over the already-
+    written outputs leaves them bitwise intact. The price is honest and
+    exactly modelled: the pass re-reads all three fields and writes X
+    flag words — `roofline.guard_bytes_model` bytes, which
+    `stencil.distributed.count_guard_bytes` recounts from the jaxpr and
+    BENCH_faults.json gates equal EXACTLY.
+    """
+    X, Y, Z = u.shape
+    return pl.pallas_call(
+        _kernel_finite_guard,
+        grid=(X,),
+        in_specs=[pl.BlockSpec((1, Y, Z), lambda i: (i, 0, 0))] * 3,
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((X,), jnp.float32),
+        interpret=interpret,
+    )(u, v, w)
+
+
 def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
                  interpret: bool = True, y_tile: int | None = None,
                  tiling: str = "grid", y_interior_mask=None,
-                 x_interior_mask=None):
+                 x_interior_mask=None, guard: bool = False):
     """v4: advance the fields T explicit-Euler steps in ONE HBM pass.
 
     Returns the advanced `(u, v, w)` (not sources — the step is fused into
@@ -474,6 +517,17 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
     ppermute rows while composing with in-grid tiles. `x_interior_mask`
     (shape (X,)) is the x-plane analogue, used by the 2D (x, y) mesh
     decomposition to freeze wrapped x-halo planes.
+
+    `guard=True` returns ``(u, v, w, flags)`` where `flags` is the
+    `finite_guard` pass over the three ADVANCED fields — f32 shape
+    ``(X,)``, 1.0 iff that x-slice is finite across all three, so
+    ``flags.min() > 0`` iff the whole advanced state is finite. The
+    guard is a separate pallas pass over the outputs (NOT fused into
+    the advection loop — an in-loop probe costs one ulp of drift), so
+    the field outputs are bitwise-identical to a `guard=False` call.
+    Its extra HBM bytes (one read pass + X flag words) are priced by
+    `roofline.guard_bytes_model` and counted by
+    `stencil.distributed.count_guard_bytes` — gated equal EXACTLY.
     """
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
@@ -486,7 +540,10 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
                              "(tiling='grid')")
         fn = lambda a, b, c: advect_fused(a, b, c, p, T=T, dt=dt,
                                           interpret=interpret)
-        return _y_tiled_host(fn, u, v, w, y_tile=y_tile, halo=T)
+        ou, ov, ow = _y_tiled_host(fn, u, v, w, y_tile=y_tile, halo=T)
+        if guard:
+            return ou, ov, ow, finite_guard(ou, ov, ow, interpret=interpret)
+        return ou, ov, ow
     TY, S, n_ty = _grid_geometry(Y, y_tile, T)
     ym = (jnp.ones((Y,), jnp.float32) if y_interior_mask is None
           else jnp.asarray(y_interior_mask, jnp.float32))
@@ -512,18 +569,20 @@ def advect_fused(u, v, w, p: AdvectParams, *, T: int = 4, dt: float = 1.0,
     t1 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc1])
     t2 = jnp.concatenate([p.tcx[None], p.tcy[None], p.tzc2])
     tz_spec = pl.BlockSpec((Z + 2,), lambda t, i: (0,))
-    out_shape = [jax.ShapeDtypeStruct((X, Y, Z), u.dtype)] * 3
     fn = pl.pallas_call(
         functools.partial(_kernel_fused, X=X, Y=Y, TY=TY, S=S, T=T, dt=dt),
         grid=(n_ty, X + T),
         in_specs=[tz_spec, tz_spec, xm_spec, ym_spec,
                   in_spec, in_spec, in_spec],
         out_specs=[out_spec] * 3,
-        out_shape=out_shape,
+        out_shape=[jax.ShapeDtypeStruct((X, Y, Z), u.dtype)] * 3,
         scratch_shapes=[pltpu.VMEM((T, 3, S, Z), u.dtype) for _ in range(3)],
         interpret=interpret,
     )
-    return fn(t1, t2, xm, ym, u, v, w)
+    ou, ov, ow = fn(t1, t2, xm, ym, u, v, w)
+    if guard:
+        return ou, ov, ow, finite_guard(ou, ov, ow, interpret=interpret)
+    return ou, ov, ow
 
 
 def _batch_axis(leaf, base_ndim: int):
@@ -543,7 +602,7 @@ def _batch_axis(leaf, base_ndim: int):
 def advect_fused_batched(u, v, w, p, *, T: int = 4, dt: float = 1.0,
                          interpret: bool = True, y_tile: int | None = None,
                          tiling: str = "grid", y_interior_mask=None,
-                         x_interior_mask=None):
+                         x_interior_mask=None, guard: bool = False):
     """Batched mega-launch: advance B independent (X, Y, Z) domains with
     ONE fused-kernel dispatch — the serving tier's packing move.
 
@@ -570,6 +629,15 @@ def advect_fused_batched(u, v, w, p, *, T: int = 4, dt: float = 1.0,
     results are the only rank->=3 arrays it touches, which is what
     `stencil.distributed.count_pallas_hbm_bytes` counts and
     BENCH_serving.json gates EXACTLY (lane-aligned Z).
+
+    `guard=True` additionally returns slot-stacked finite-guard flags
+    ``(B, X)`` (see `finite_guard`): ``flags[b].min() > 0`` iff slot b's
+    advanced fields are entirely finite — the serving engine's per-slot
+    quarantine signal, one extra vmapped guard pass over the mega-
+    launch's outputs that leaves the field outputs bitwise-identical to
+    an unguarded call. The flag output is rank 2, so the main kernel's
+    `count_pallas_hbm_bytes` is unchanged; `count_guard_bytes` isolates
+    the guard pass's traffic, == `guard_bytes_model(batch=B)`.
     """
     for name, f in (("u", u), ("v", v), ("w", w)):
         if f.ndim != 4:
@@ -590,7 +658,8 @@ def advect_fused_batched(u, v, w, p, *, T: int = 4, dt: float = 1.0,
     def one(uu, vv, ww, pp, xmm, ymm):
         return advect_fused(uu, vv, ww, pp, T=T, dt=dt, interpret=interpret,
                             y_tile=y_tile, tiling=tiling,
-                            y_interior_mask=ymm, x_interior_mask=xmm)
+                            y_interior_mask=ymm, x_interior_mask=xmm,
+                            guard=guard)
 
     return jax.vmap(one, in_axes=(0, 0, 0, p_axes, xm_ax, ym_ax))(
         u, v, w, p, xm, ym)

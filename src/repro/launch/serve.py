@@ -5,10 +5,16 @@ Optionally --ckpt-dir to serve trained weights (elastic TP relayout applies).
 
 `--stencil` serves forecast jobs instead of tokens: batched multi-domain
 advection over the fused kernel (`repro.serving.stencil_engine`), with
-`--max-new` bounding each job's fused-step budget and `--lose-device-at`
-injecting a mid-run device loss + re-shard:
+`--max-new` bounding each job's fused-step budget and `--fault-plan`
+injecting a deterministic fault schedule (`serving.faults.FaultPlan`
+spec grammar: ``kind@step[:key=val,...]`` clauses joined by ``;``) whose
+recovery counters print as the health surface:
 
-    python -m repro.launch.serve --smoke --stencil --requests 4
+    python -m repro.launch.serve --smoke --stencil --requests 4 \
+        --fault-plan "nan_poison@1:slot=1;device_loss@2:reshard_to=1"
+
+`--lose-device-at` is the DEPRECATED single-fault alias — it builds a
+one-device-loss plan.
 """
 from __future__ import annotations
 
@@ -31,9 +37,23 @@ def _run_stencil(args) -> None:
                                               StencilServingEngine)
     from repro.stencil.advection import AdvectionDomain, stratus_fields
 
+    from repro.serving.faults import Fault, FaultPlan
+
     X, Y, Z, T = (12, 16, 64, 2) if args.smoke else (64, 256, 64, 4)
     dom = AdvectionDomain(X, Y, Z, variant="fused", fuse_T=T, dt=0.005)
-    engine = StencilServingEngine(dom, batch_size=args.batch_size)
+    plan = None
+    if args.fault_plan is not None:
+        if args.lose_device_at is not None:
+            raise SystemExit("--lose-device-at is a deprecated alias for "
+                             "--fault-plan; pass only one")
+        plan = FaultPlan.parse(args.fault_plan)
+    elif args.lose_device_at is not None:
+        print("[serve] --lose-device-at is deprecated; use --fault-plan "
+              f'"device_loss@{args.lose_device_at}"')
+        plan = FaultPlan((Fault("device_loss",
+                                at_step=args.lose_device_at),))
+    engine = StencilServingEngine(dom, batch_size=args.batch_size,
+                                  fault_plan=plan)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -44,17 +64,28 @@ def _run_stencil(args) -> None:
             uid=i, u=np.asarray(u), v=np.asarray(v), w=np.asarray(w),
             n_steps=int(rng.integers(1, args.max_new + 1))))
     t0 = time.time()
-    done = engine.run(reqs, lose_device_at=args.lose_device_at)
+    done = engine.run(reqs)
     dt_s = time.time() - t0
-    steps = sum(len(r.states) for r in done.values())
+    steps = sum(len(r.states) for r in done.values() if r.states)
     stats = engine.cache_stats()
     print(f"[serve] {len(done)} forecast domains, {steps} fused steps "
           f"(T={T}) in {dt_s:.1f}s; executable cache "
-          f"hits={stats['hits']} misses={stats['misses']}")
+          f"hits={stats['hits']} misses={stats['misses']} "
+          f"evictions={stats['evictions']}")
     print(f"[serve] modelled serving throughput at batch={engine.B}: "
           f"{engine.modelled_throughput():.1f} domains/s")
+    h = engine.health()
+    print(f"[serve] health: faults={h['faults_injected']} "
+          f"retries={h['retries']} quarantines={h['quarantines']} "
+          f"rollbacks={h['rollbacks']} degradations={h['degradations']} "
+          f"reshards={h['reshards']} exchange={h['exchange']}")
+    for t_line in h["transitions"]:
+        print(f"  [health] {t_line}")
     for uid in sorted(done)[:4]:
         r = done[uid]
+        if r.status == "quarantined":
+            print(f"  job {uid}: QUARANTINED ({r.error})")
+            continue
         print(f"  job {uid}: extent {r.out[0].shape}, {len(r.states)} "
               f"streamed states, |u|max={float(np.abs(r.out[0]).max()):.3f}")
 
@@ -71,9 +102,14 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--fault-plan", default=None,
+                    help="(--stencil) deterministic fault schedule, e.g. "
+                         "'nan_poison@1:slot=1;device_loss@2:reshard_to=1' "
+                         "(serving.faults.FaultPlan.parse grammar)")
     ap.add_argument("--lose-device-at", type=int, default=None,
-                    help="(--stencil) simulate a device loss after this "
-                         "many mega-steps and re-shard to half the slots")
+                    help="(--stencil) DEPRECATED alias for --fault-plan "
+                         "'device_loss@K': simulate a device loss after "
+                         "this many mega-steps, re-shard to half the slots")
     args = ap.parse_args()
 
     if args.stencil:

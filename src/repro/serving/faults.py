@@ -1,0 +1,454 @@
+"""Deterministic fault injection + layered recovery for the serving stack.
+
+The paper's data-movement discipline only pays off in a serving tier that
+survives the messy parts of real traffic: a poisoned request, a lost
+device, a stalled interconnect. This module is the single place faults
+are DESCRIBED and recovery is ORCHESTRATED; detection and repair live in
+the layers that own the data:
+
+  * detection  — the fused kernel's in-graph finite guard
+                 (`advect_fused(..., guard=True)`): one f32 flag word per
+                 (y-tile, x-slice) grid step, priced EXACTLY by
+                 `roofline.guard_bytes_model` and counted by
+                 `stencil.distributed.count_guard_bytes`.
+  * rollback   — `StencilServingEngine` snapshots its `_InFlight` state
+                 through `training/checkpoint`'s atomic-write machinery
+                 and replays from the last snapshot on any fault; resume
+                 is bitwise-equal to an uninterrupted run.
+  * isolation  — a slot whose guard flag trips twice at the same step is
+                 quarantined with an error status; healthy slots' outputs
+                 stay bitwise-equal to an unpoisoned run.
+  * degradation— `retry_with_backoff` wraps the exchange engines and a
+                 `DegradationLadder` walks `remote_dma` -> `collective`
+                 -> reshard-down, each transition recorded.
+
+Everything here is deterministic and seedable: a `FaultPlan` is a frozen
+tuple of `Fault`s pinned to mega-step / exchange-block indices, built by
+hand, parsed from a `kind@step:key=val,...` spec string, or drawn from
+`numpy.random.default_rng(seed)` — the same seed always yields the same
+plan (`FaultPlan.random(seed, ...)`), and `describe()` round-trips
+through `parse()` so BENCH_faults.json can record exactly what was
+injected. `FaultInjector` owns the mutable side (which faults have
+fired, how many stall attempts remain) plus the `health()` counters the
+launch CLI and the benchmark gates read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS", "DEFAULT_LADDER", "ExchangeStalled", "RecoveryExhausted",
+    "Fault", "FaultPlan", "FaultInjector", "DegradationLadder",
+    "retry_with_backoff", "resilient_distributed_run",
+]
+
+#: every fault kind the plan grammar accepts; each has a tier-1 test
+#: exercising injection -> detection -> recovery.
+FAULT_KINDS = ("device_loss", "nan_poison", "halo_corruption",
+               "exchange_stall", "cache_evict")
+
+#: the graceful-degradation ladder for the exchange engines, fastest
+#: first. The serving engine appends an implicit final rung — reshard
+#: down to fewer slots — once both transports are exhausted.
+DEFAULT_LADDER = ("remote_dma", "collective")
+
+_FIELDS = ("u", "v", "w")
+_MODES = ("nan", "inf")
+
+_COUNTERS = ("faults_injected", "faults_skipped", "device_losses",
+             "quarantines", "rollbacks", "retries", "degradations",
+             "reshards", "cache_evictions", "snapshots")
+
+
+class ExchangeStalled(RuntimeError):
+    """An exchange attempt hung (injected or real); retryable."""
+
+
+class RecoveryExhausted(RuntimeError):
+    """Every rung of the degradation ladder failed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault. `at_step` is the mega-step (serving engine)
+    or exchange-block (distributed run) boundary the fault fires at.
+
+    Kind-specific knobs:
+      nan_poison      — `slot`, `field`, `mode` ("nan"/"inf");
+                        `persistent` defaults True: the poison source
+                        re-fires on replay, so rollback alone cannot
+                        clear it and the engine must quarantine.
+      halo_corruption — `slot`, `field`, `depth` (band rows poisoned);
+                        one-shot by default: rollback + replay is clean.
+      device_loss     — `reshard_to` (None -> half the batch).
+      exchange_stall  — `stalls` consecutive attempts hang, but only
+                        while the engine's CURRENT rung == `rung`;
+                        degrading past the faulted transport clears it.
+      cache_evict     — evicts the current step's compiled executable
+                        (one recorded re-trace miss on the next launch).
+    """
+    kind: str
+    at_step: int
+    slot: int = 0
+    field: str = "u"
+    mode: str = "nan"
+    reshard_to: Optional[int] = None
+    stalls: int = 1
+    rung: str = "remote_dma"
+    depth: int = 1
+    persistent: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.at_step < 0:
+            raise ValueError(f"at_step must be >= 0, got {self.at_step}")
+        if self.field not in _FIELDS:
+            raise ValueError(f"field must be one of {_FIELDS}, "
+                             f"got {self.field!r}")
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+        if self.stalls < 1:
+            raise ValueError(f"stalls must be >= 1, got {self.stalls}")
+        if self.depth < 1:
+            raise ValueError(f"depth must be >= 1, got {self.depth}")
+        if self.reshard_to is not None and self.reshard_to < 1:
+            raise ValueError(f"reshard_to must be >= 1, "
+                             f"got {self.reshard_to}")
+
+    @property
+    def is_persistent(self) -> bool:
+        """Persistent faults re-fire every time execution re-crosses
+        `at_step` (a poisoned SOURCE survives rollback); one-shot faults
+        are consumed on first firing (a transient glitch replays clean).
+        """
+        if self.persistent is not None:
+            return self.persistent
+        return self.kind == "nan_poison"
+
+    def value(self) -> float:
+        """The poison value for nan_poison / halo_corruption."""
+        return float("nan") if self.mode == "nan" else float("inf")
+
+    def describe(self) -> str:
+        parts = []
+        defaults = {f.name: f.default for f in dataclasses.fields(Fault)}
+        for name in ("slot", "field", "mode", "reshard_to", "stalls",
+                     "rung", "depth", "persistent"):
+            val = getattr(self, name)
+            if val != defaults[name]:
+                parts.append(f"{name}={val}")
+        spec = f"{self.kind}@{self.at_step}"
+        return spec + (":" + ",".join(parts) if parts else "")
+
+
+def _parse_value(key: str, raw: str):
+    if key in ("field", "mode", "rung"):
+        return raw
+    if key == "persistent":
+        return raw.lower() in ("1", "true", "yes")
+    if key == "reshard_to" and raw.lower() == "none":
+        return None
+    return int(raw)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A frozen, seed-reproducible schedule of faults.
+
+    Build directly, `parse()` a spec string
+    (``"nan_poison@1:slot=1,mode=inf;device_loss@2:reshard_to=1"``), or
+    draw a `random(seed, ...)` plan. `describe()` round-trips through
+    `parse()` so artifacts record exactly what ran.
+    """
+    faults: Tuple[Fault, ...] = ()
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        faults = []
+        for clause in spec.split(";"):
+            clause = clause.strip()
+            if not clause:
+                continue
+            head, _, tail = clause.partition(":")
+            kind, sep, step = head.partition("@")
+            if not sep:
+                raise ValueError(
+                    f"bad fault clause {clause!r}: expected kind@step"
+                    f"[:key=val,...]")
+            kw = {}
+            if tail:
+                for item in tail.split(","):
+                    key, sep, raw = item.partition("=")
+                    if not sep:
+                        raise ValueError(f"bad fault option {item!r} in "
+                                         f"{clause!r}: expected key=val")
+                    kw[key.strip()] = _parse_value(key.strip(), raw.strip())
+            faults.append(Fault(kind=kind.strip(), at_step=int(step), **kw))
+        return cls(faults=tuple(faults))
+
+    @classmethod
+    def random(cls, seed: int, *, n_steps: int, batch: int,
+               n_faults: int = 3,
+               kinds: Sequence[str] = FAULT_KINDS) -> "FaultPlan":
+        """A reproducible plan: same seed, same faults, always."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            kw = dict(kind=kind,
+                      at_step=int(rng.integers(max(1, n_steps))))
+            if kind in ("nan_poison", "halo_corruption"):
+                kw["slot"] = int(rng.integers(max(1, batch)))
+                kw["field"] = _FIELDS[int(rng.integers(3))]
+                kw["mode"] = _MODES[int(rng.integers(2))]
+            elif kind == "device_loss":
+                kw["reshard_to"] = max(1, batch // 2)
+            elif kind == "exchange_stall":
+                kw["stalls"] = int(rng.integers(1, 3))
+            faults.append(Fault(**kw))
+        faults.sort(key=lambda f: (f.at_step, f.kind))
+        return cls(faults=tuple(faults), seed=seed)
+
+    def at(self, step: int) -> List[Fault]:
+        return [f for f in self.faults if f.at_step == step]
+
+    def describe(self) -> str:
+        return ";".join(f.describe() for f in self.faults)
+
+    def max_step(self) -> int:
+        return max((f.at_step for f in self.faults), default=-1)
+
+
+class FaultInjector:
+    """The mutable runtime side of a `FaultPlan`: which faults have
+    fired, how many stall attempts remain, and the `health()` counters
+    every recovery action reports into.
+
+    The injection protocol (shared by `StencilServingEngine` and
+    `resilient_distributed_run`): at each boundary the driver calls
+    `due(step)` and applies the returned faults itself — the injector
+    never touches engine state; it only schedules, arms stalls, and
+    counts. One-shot faults are consumed by `mark_fired`; persistent
+    faults re-fire every time execution re-crosses their step (that is
+    what forces the quarantine path — rollback alone cannot out-run a
+    poisoned source).
+    """
+
+    def __init__(self, plan: Optional[FaultPlan] = None):
+        self.plan = plan or FaultPlan()
+        self.counters: Dict[str, int] = {k: 0 for k in _COUNTERS}
+        self.transitions: List[str] = []
+        self._consumed: set = set()
+        self._stalls: Dict[int, List] = {}   # fault idx -> [rung, left]
+
+    # -- scheduling --------------------------------------------------------
+    def due(self, step: int) -> List[Tuple[int, Fault]]:
+        """Faults firing at this boundary (one-shot faults already
+        consumed are skipped). The caller applies them, then
+        `mark_fired(idx)`s each."""
+        out = []
+        for idx, f in enumerate(self.plan.faults):
+            if f.at_step == step and idx not in self._consumed:
+                out.append((idx, f))
+        return out
+
+    def mark_fired(self, idx: int) -> None:
+        f = self.plan.faults[idx]
+        self.counters["faults_injected"] += 1
+        if not f.is_persistent:
+            self._consumed.add(idx)
+
+    def skip(self, idx: int, reason: str) -> None:
+        """A due fault the driver cannot apply (e.g. a poison aimed at
+        an empty slot) — consumed and counted, never silently dropped."""
+        self._consumed.add(idx)
+        self.counters["faults_skipped"] += 1
+        self.transitions.append(f"skipped[{idx}]: {reason}")
+
+    # -- stalls ------------------------------------------------------------
+    def arm_stall(self, idx: int, fault: Fault) -> None:
+        """Register an exchange_stall: the next `fault.stalls` attempts
+        on rung `fault.rung` raise `ExchangeStalled`."""
+        self._stalls[idx] = [fault.rung, fault.stalls]
+
+    def poll_stall(self, rung: str) -> None:
+        """Called immediately before each exchange attempt. Raises
+        `ExchangeStalled` while an armed stall matches the CURRENT rung;
+        an armed stall whose rung was degraded past is cleared — the
+        whole point of the ladder is that the fallback transport does
+        not share the faulted engine's failure."""
+        for idx in list(self._stalls):
+            srung, left = self._stalls[idx]
+            if left <= 0:
+                del self._stalls[idx]
+                continue
+            if srung == rung:
+                self._stalls[idx][1] -= 1
+                raise ExchangeStalled(
+                    f"injected stall on rung {rung!r} "
+                    f"({self._stalls[idx][1]} more)")
+            del self._stalls[idx]
+
+    def clear_stalls(self) -> None:
+        """Drop every armed stall — the reshard path's reset (the lost
+        devices took the stalled transport with them)."""
+        self._stalls.clear()
+
+    # -- counters ----------------------------------------------------------
+    def record(self, counter: str, n: int = 1) -> None:
+        if counter not in self.counters:
+            raise KeyError(f"unknown health counter {counter!r}; "
+                           f"expected one of {_COUNTERS}")
+        self.counters[counter] += n
+
+    def note(self, event: str) -> None:
+        self.transitions.append(event)
+
+    def health(self) -> Dict[str, object]:
+        """The counters surface the launch CLI prints and the
+        BENCH_faults gates assert on."""
+        out: Dict[str, object] = dict(self.counters)
+        out["transitions"] = list(self.transitions)
+        out["plan"] = self.plan.describe()
+        return out
+
+
+class DegradationLadder:
+    """Walks the exchange transports fastest-first, recording every
+    transition. `degrade()` past the last rung raises
+    `RecoveryExhausted` — the serving engine catches that and takes the
+    implicit final rung (reshard down); the raw distributed run
+    propagates it."""
+
+    def __init__(self, rungs: Sequence[str] = DEFAULT_LADDER,
+                 start: Optional[str] = None):
+        self.rungs = tuple(rungs)
+        if not self.rungs:
+            raise ValueError("ladder needs at least one rung")
+        if start is None:
+            self._i = 0
+        else:
+            if start not in self.rungs:
+                raise ValueError(f"start rung {start!r} not in "
+                                 f"{self.rungs}")
+            self._i = self.rungs.index(start)
+        self.transitions: List[str] = []
+
+    @property
+    def current(self) -> str:
+        return self.rungs[self._i]
+
+    def degrade(self, reason: str = "") -> str:
+        was = self.current
+        if self._i + 1 >= len(self.rungs):
+            self.transitions.append(f"{was} -> EXHAUSTED ({reason})")
+            raise RecoveryExhausted(
+                f"degradation ladder exhausted at {was!r}: {reason}")
+        self._i += 1
+        self.transitions.append(f"{was} -> {self.current} ({reason})")
+        return self.current
+
+
+def retry_with_backoff(attempt: Callable[[], object], *,
+                       max_retries: int = 3, backoff_s: float = 0.0,
+                       sleeper: Callable[[float], None] = time.sleep,
+                       on_retry: Optional[Callable[[int, Exception],
+                                                   None]] = None):
+    """One initial try plus up to `max_retries` retries of `attempt`,
+    sleeping `backoff_s * 2**k` before retry k. Only `ExchangeStalled`
+    is retryable — anything else propagates immediately. Re-raises the
+    last stall when the budget is spent (the caller degrades the
+    ladder)."""
+    if max_retries < 0:
+        raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+    err: Optional[ExchangeStalled] = None
+    for k in range(max_retries + 1):
+        try:
+            return attempt()
+        except ExchangeStalled as e:
+            err = e
+            if k == max_retries:
+                break
+            if on_retry is not None:
+                on_retry(k, e)
+            if backoff_s > 0:
+                sleeper(backoff_s * (2 ** k))
+    assert err is not None
+    raise err
+
+
+def resilient_distributed_run(mesh, params, u, v, w, *, n_blocks: int,
+                              T: int = 1, dt: float = 1.0,
+                              axis: str = "data",
+                              x_axis: Optional[str] = None,
+                              local_kernel: str = "reference",
+                              y_tile: Optional[int] = None,
+                              interpret: bool = True,
+                              injector: Optional[FaultInjector] = None,
+                              ladder: Optional[DegradationLadder] = None,
+                              max_retries: int = 3,
+                              backoff_s: float = 0.0,
+                              sleeper: Callable[[float], None] = time.sleep):
+    """`make_distributed_step` driven block-by-block under the retry /
+    degradation discipline: at each exchange-block boundary the due
+    faults are polled, armed stalls hang the attempt, the bounded
+    retry loop absorbs transient stalls, and a persistent stall degrades
+    the ladder (`remote_dma` -> `collective`) — the step is rebuilt on
+    the fallback transport and the block REPLAYED on it, which is sound
+    because the two engines assemble bitwise-identical extended slabs
+    (the BENCH_overlap gate). Ladder exhaustion raises
+    `RecoveryExhausted`.
+
+    Non-stall fault kinds in the plan are recorded as skipped — this
+    driver owns only the exchange layer; slot-level faults belong to the
+    serving engine. Returns ``(u, v, w), injector`` so callers can
+    assert on `health()`.
+    """
+    from repro.stencil.distributed import make_distributed_step
+
+    injector = injector or FaultInjector()
+    ladder = ladder or DegradationLadder()
+
+    def build(rung):
+        return make_distributed_step(
+            mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+            local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
+            exchange=rung, dma_block_index=0)
+
+    step = build(ladder.current)
+    for block in range(n_blocks):
+        for idx, f in injector.due(block):
+            if f.kind == "exchange_stall":
+                injector.arm_stall(idx, f)
+                injector.mark_fired(idx)
+            else:
+                injector.skip(idx, f"{f.kind} not injectable at the "
+                                   f"exchange layer")
+        while True:
+            def attempt():
+                injector.poll_stall(ladder.current)
+                return step(u, v, w)
+
+            try:
+                u, v, w = retry_with_backoff(
+                    attempt, max_retries=max_retries, backoff_s=backoff_s,
+                    sleeper=sleeper,
+                    on_retry=lambda k, e: injector.record("retries"))
+                break
+            except ExchangeStalled as e:
+                rung = ladder.degrade(str(e))       # RecoveryExhausted up
+                injector.record("degradations")
+                injector.note(f"block {block}: {ladder.transitions[-1]}")
+                step = build(rung)
+    return (u, v, w), injector

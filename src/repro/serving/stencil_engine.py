@@ -11,7 +11,8 @@ overlap applied at the product layer: chunked arrival of new forecast
 jobs overlaps the resident jobs' compute, with the slot lifecycle shared
 with the LLM engine via `serving.slots.SlotManager`.
 
-Contracts (gated by BENCH_serving.json and tests/test_stencil_serving.py):
+Contracts (gated by BENCH_serving.json / BENCH_faults.json and
+tests/test_stencil_serving.py / tests/test_faults.py):
 
   * Packing is exact, not approximate: a request SMALLER than the padded
     slot shape is embedded at the origin with per-slot interior masks
@@ -20,15 +21,38 @@ Contracts (gated by BENCH_serving.json and tests/test_stencil_serving.py):
     sequential `advect_fused` runs on the unpadded fields.
   * Compiled executables are cached keyed on
     ``(shape, T, dtype, n_blocks, exchange, mesh)`` with hit/miss
-    counters — one trace per configuration, every later mega-step a hit.
+    counters and a bounded LRU (`max_entries`) — one trace per
+    configuration, every later mega-step a hit.
   * Intermediate states stream back per slot (`StencilRequest.states`,
     one cropped (u, v, w) snapshot per fused step).
-  * A simulated device loss mid-run re-shards the engine: live slots are
-    re-packed into a smaller batch (a new cache key — the recorded miss),
-    overflow jobs resume from their in-flight state when slots free up,
-    and the completed outputs stay bitwise-equal to an uninterrupted run
-    (the `tests/test_fault_tolerance.py` resume-equals-uninterrupted
-    pattern, on the stencil path).
+  * Faults are injected from a deterministic `serving.faults.FaultPlan`
+    at mega-step boundaries (the old `lose_device_at` hook is a
+    deprecated one-fault alias) and recovery is LAYERED:
+      - the mega-step runs the in-graph finite-guard pass
+        (`advect_fused_batched(..., guard=True)` — one extra read pass
+        over the advanced fields, priced by
+        `roofline.guard_bytes_model`), so a poisoned slot is detected
+        the step it goes non-finite; the guard is a SEPARATE pallas
+        pass over the fused kernel's outputs, so every slot's fields —
+        healthy or poisoned — stay bitwise-equal to an unguarded run;
+      - periodic snapshots of the full in-flight state (through
+        `training/checkpoint`'s atomic-write machinery when
+        `snapshot_dir` is set) let ANY fault roll back and replay,
+        resume bitwise-equal to an uninterrupted run; a fault that
+        re-fires at the same (uid, step) site after a rollback is
+        persistent by definition and the slot is QUARANTINED with an
+        error status instead of rolled back forever;
+      - a stalled exchange is retried with bounded backoff, then walks
+        the `DegradationLadder` (`remote_dma` -> `collective` — a new
+        cache key, one recorded re-trace) and finally resorts to the
+        implicit last rung: reshard down to fewer slots;
+      - every action lands in `health()` counters (faults, retries,
+        quarantines, rollbacks, degradations, reshards), surfaced by
+        `launch/serve.py` and gated by `benchmarks/fault_sweep.py`.
+  * A device loss re-shards the engine: live slots are re-packed into a
+    smaller batch (a new cache key — the recorded miss), overflow jobs
+    resume from their in-flight state when slots free up, and the
+    completed outputs stay bitwise-equal to an uninterrupted run.
   * Per-tenant pricing: `AdvectionDomain(batch=...)` scales the
     flops/bytes/wire accounting and `roofline.serving_throughput_model`
     turns it into domains/s.
@@ -36,7 +60,10 @@ Contracts (gated by BENCH_serving.json and tests/test_stencil_serving.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from collections import OrderedDict
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,8 +71,13 @@ import numpy as np
 
 from repro.kernels.advection import advection as K
 from repro.kernels.advection.ref import AdvectParams
+from repro.serving.faults import (DEFAULT_LADDER, DegradationLadder,
+                                  ExchangeStalled, Fault, FaultInjector,
+                                  FaultPlan, RecoveryExhausted,
+                                  retry_with_backoff)
 from repro.serving.slots import SlotManager
 from repro.stencil.advection import AdvectionDomain
+from repro.training import checkpoint as CKPT
 
 
 @dataclasses.dataclass
@@ -56,6 +88,8 @@ class StencilRequest:
     substeps); 0 means the job is complete at prime time and returns its
     initial fields. `params=None` uses the engine domain's coefficients;
     a per-tenant `AdvectParams` (same Z) rides the slot's batched leaves.
+    `status` walks pending -> running -> done, or -> quarantined (with
+    `error` set and `out=None`) when the finite guard traps the slot.
     """
     uid: int
     u: np.ndarray                        # (Xr, Yr, Z) initial fields
@@ -65,6 +99,8 @@ class StencilRequest:
     params: Optional[AdvectParams] = None
     out: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
     states: Optional[List[Tuple[np.ndarray, ...]]] = None
+    status: str = "pending"
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -81,33 +117,74 @@ class _InFlight:
     extent: Tuple[int, int]
 
 
+@dataclasses.dataclass
+class _Snapshot:
+    """Everything a rollback needs to replay from this boundary: the
+    padded batch arrays, the slot assignments, the queue, and the length
+    of every reachable request's streamed-state list (so replayed steps
+    do not double-append). `disk_step` is set when the arrays were also
+    written through `training/checkpoint.save` — the rollback then
+    restores them from DISK, exercising the same atomic-write machinery
+    the training tier trusts."""
+    steps_run: int
+    B: int
+    arrays: Dict[str, np.ndarray]
+    extents: List[Tuple[int, int]]
+    live: List[Tuple[int, int, int]]     # (slot, uid, budget)
+    reqs: Dict[int, StencilRequest]
+    states_len: Dict[int, int]
+    queue: List[Any]
+    done_uids: set
+    disk_step: Optional[int]
+
+
 class ExecutableCache:
-    """Compiled-executable cache with hit/miss counters.
+    """Compiled-executable cache: hit/miss/eviction counters + bounded LRU.
 
     Keys are the full recompilation surface of a mega-step —
     ``(shape, T, dtype, n_blocks, exchange, mesh)`` — so a re-shard (new
     batch in `shape`) or an engine/mesh change records a miss and traces
     once, while every steady-state mega-step is a hit on the same
-    executable.
-    """
+    executable. `max_entries` bounds the cache under shape-diverse
+    traffic: insertion past the bound evicts the least-recently-used
+    entry (a later return to that key re-traces — a counted miss, never
+    an error). `evict(key)` drops one entry explicitly — the
+    `cache_evict` fault kind's hook."""
 
-    def __init__(self):
-        self._fns: Dict[Any, Any] = {}
+    def __init__(self, max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._fns: "OrderedDict[Any, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key, build):
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1
             fn = self._fns[key] = build()
+            if (self.max_entries is not None
+                    and len(self._fns) > self.max_entries):
+                self._fns.popitem(last=False)
+                self.evictions += 1
         else:
             self.hits += 1
+            self._fns.move_to_end(key)
         return fn
+
+    def evict(self, key) -> bool:
+        """Drop `key` if cached; True when something was evicted."""
+        if key in self._fns:
+            del self._fns[key]
+            self.evictions += 1
+            return True
+        return False
 
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._fns)}
+                "entries": len(self._fns), "evictions": self.evictions}
 
 
 class StencilServingEngine:
@@ -120,19 +197,66 @@ class StencilServingEngine:
     under the same key discipline). Requests whose extent is smaller than
     the slot are padded and mask-frozen; Z must match exactly (the z axis
     has no interior mask — it is the vectorised lane dimension).
+
+    Fault tolerance knobs: `fault_plan` (a `FaultPlan`, or a spec string
+    for `FaultPlan.parse`) schedules deterministic faults at mega-step
+    boundaries; `snapshot_every=k` rolls a recovery point every k
+    mega-steps (default 1 — snapshots are host-side array copies, tiny
+    next to the launch; None disables rollback and a tripped guard
+    quarantines immediately); `snapshot_dir` additionally round-trips
+    each snapshot through `training/checkpoint`'s atomic on-disk format;
+    `max_retries`/`backoff_s` bound the exchange-stall retry loop;
+    `cache_max_entries` bounds the executable cache (LRU).
     """
 
-    def __init__(self, domain: AdvectionDomain, *, batch_size: int = 4):
+    def __init__(self, domain: AdvectionDomain, *, batch_size: int = 4,
+                 fault_plan: Union[FaultPlan, str, None] = None,
+                 snapshot_every: Optional[int] = 1,
+                 snapshot_dir: Union[str, Path, None] = None,
+                 max_retries: int = 3, backoff_s: float = 0.0,
+                 sleeper=time.sleep,
+                 cache_max_entries: Optional[int] = None):
         if domain.variant != "fused":
             raise ValueError("the serving tier packs the fused (v4) kernel; "
                              f"got variant={domain.variant!r}")
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        if snapshot_every is not None and snapshot_every < 1:
+            raise ValueError(f"snapshot_every must be >= 1 or None, got "
+                             f"{snapshot_every}")
         self.domain = domain
         self.B = batch_size
-        self.cache = ExecutableCache()
+        self.cache = ExecutableCache(max_entries=cache_max_entries)
         self.steps_run = 0
+        # physical mega-step executions: unlike `steps_run` (the LOGICAL
+        # step index, rewound by a rollback so replay is bitwise), this
+        # counter is never restored — faulted-minus-clean is the recovery
+        # overhead BENCH_faults.json bounds at exactly one replayed
+        # snapshot interval per rollback
+        self.megasteps_executed = 0
+        # the guard is a separate pallas pass over the advanced fields,
+        # so it composes with any tiling mode (including host)
+        self._guard = True
+        if isinstance(fault_plan, str):
+            fault_plan = FaultPlan.parse(fault_plan)
+        self._injector = FaultInjector(fault_plan)
+        self._ladder = self._make_ladder()
+        self._snapshot_every = snapshot_every
+        self._snapshot_dir = Path(snapshot_dir) if snapshot_dir else None
+        self._snap: Optional[_Snapshot] = None
+        self._suspects: set = set()
+        self._quarantined: set = set()
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self._sleeper = sleeper
+        self._last_ok: Optional[np.ndarray] = None
         self._alloc(batch_size)
+
+    def _make_ladder(self) -> DegradationLadder:
+        start = self.domain.exchange
+        rungs = (DEFAULT_LADDER if start in DEFAULT_LADDER
+                 else (start,) + tuple(DEFAULT_LADDER))
+        return DegradationLadder(rungs, start=start)
 
     # -- storage -----------------------------------------------------------
     def _alloc(self, batch_size: int) -> None:
@@ -157,13 +281,14 @@ class StencilServingEngine:
 
     def _build_step(self):
         d = self.domain
+        guard = self._guard
 
         def step(u, v, w, p, xm, ym):
             return K.advect_fused_batched(u, v, w, p, T=d.fuse_T, dt=d.dt,
                                           interpret=d.interpret,
                                           y_tile=d.y_tile, tiling=d.tiling,
                                           x_interior_mask=xm,
-                                          y_interior_mask=ym)
+                                          y_interior_mask=ym, guard=guard)
 
         return jax.jit(step)
 
@@ -224,9 +349,11 @@ class StencilServingEngine:
                 np.asarray(req.w, np.dtype(d.dtype)).copy())
         if req.n_steps == 0:
             req.out = crop
+            req.status = "done"
             return True
         self._pack(slot, req.u, req.v, req.w, req.params, (Xr, Yr))
         self.slots.occupy(slot, req, req.n_steps)
+        req.status = "running"
         return False
 
     def _resume(self, slot: int, flight: _InFlight) -> None:
@@ -256,26 +383,223 @@ class StencilServingEngine:
     def _mega_step(self) -> None:
         fn = self.cache.get(self._step_key(), self._build_step)
         p = AdvectParams(*[jnp.asarray(leaf) for leaf in self._p])
-        ou, ov, ow = fn(jnp.asarray(self.u), jnp.asarray(self.v),
-                        jnp.asarray(self.w), p,
-                        jnp.asarray(self.xm), jnp.asarray(self.ym))
+        res = fn(jnp.asarray(self.u), jnp.asarray(self.v),
+                 jnp.asarray(self.w), p,
+                 jnp.asarray(self.xm), jnp.asarray(self.ym))
+        if self._guard:
+            ou, ov, ow, gf = res
+            # a slot is healthy iff every x-slice flag word of its
+            # guard pass is 1.0 — the post-kernel isfinite pass
+            self._last_ok = np.asarray(gf).min(axis=1) > 0.0
+        else:
+            ou, ov, ow = res
+            self._last_ok = np.ones((self.B,), bool)
         # np.array, not np.asarray: the device result is a read-only view
         # and the next prime writes into these buffers in place
         self.u = np.array(ou)
         self.v = np.array(ov)
         self.w = np.array(ow)
         self.steps_run += 1
+        self.megasteps_executed += 1
+
+    def _guarded_mega_step(self, queue: List[Any]) -> None:
+        """One mega-step under the retry / degradation discipline: armed
+        exchange stalls hang the attempt, the bounded backoff loop
+        absorbs transient ones, a persistent stall degrades the ladder
+        (new exchange -> new cache key -> one recorded re-trace), and a
+        fully exhausted ladder takes the implicit last rung — reshard
+        down to fewer slots (the lost transport's devices are gone)."""
+        inj, lad = self._injector, self._ladder
+
+        def attempt():
+            inj.poll_stall(lad.current)
+            self._mega_step()
+
+        while True:
+            try:
+                retry_with_backoff(
+                    attempt, max_retries=self.max_retries,
+                    backoff_s=self.backoff_s, sleeper=self._sleeper,
+                    on_retry=lambda k, e: inj.record("retries"))
+                return
+            except ExchangeStalled as e:
+                try:
+                    rung = lad.degrade(str(e))
+                    inj.record("degradations")
+                    inj.note(f"step {self.steps_run}: "
+                             f"{lad.transitions[-1]}")
+                    self.domain = dataclasses.replace(self.domain,
+                                                      exchange=rung)
+                except RecoveryExhausted:
+                    n = max(self.B // 2, 1)
+                    inj.record("reshards")
+                    inj.note(f"step {self.steps_run}: ladder exhausted "
+                             f"-> reshard to {n} slots")
+                    inj.clear_stalls()
+                    queue[:0] = self.reshard(n)
+
+    # -- fault injection ---------------------------------------------------
+    def _apply_faults(self, queue: List[Any]) -> None:
+        """Apply the plan's faults due at this mega-step boundary."""
+        inj = self._injector
+        for idx, f in inj.due(self.steps_run):
+            if f.kind == "device_loss":
+                n = f.reshard_to if f.reshard_to is not None \
+                    else max(self.B // 2, 1)
+                inj.mark_fired(idx)
+                inj.record("device_losses")
+                inj.record("reshards")
+                inj.note(f"step {self.steps_run}: device loss -> "
+                         f"reshard to {n} slots")
+                # displaced jobs resume ahead of queued fresh work
+                queue[:0] = self.reshard(n)
+            elif f.kind in ("nan_poison", "halo_corruption"):
+                if f.slot >= self.B or not self.slots.is_live(f.slot):
+                    inj.skip(idx, f"slot {f.slot} not live at step "
+                                  f"{self.steps_run}")
+                    continue
+                arr = {"u": self.u, "v": self.v, "w": self.w}[f.field]
+                Xr, Yr = self._extent[f.slot]
+                if f.kind == "nan_poison":
+                    # one interior cell: the stencil spreads it, the
+                    # guard flags the whole slot this same step
+                    arr[f.slot, 1, 1, 0] = f.value()
+                else:
+                    # a corrupted halo band: the mask freezes the
+                    # boundary ring, so the poison SITS there (caught by
+                    # the guard) but cannot re-enter the interior —
+                    # one-shot, rollback + replay is clean
+                    arr[f.slot, :min(f.depth, Xr), :Yr, :] = f.value()
+                inj.mark_fired(idx)
+                inj.note(f"step {self.steps_run}: {f.kind} slot {f.slot} "
+                         f"field {f.field} ({f.mode})")
+            elif f.kind == "exchange_stall":
+                inj.arm_stall(idx, f)
+                inj.mark_fired(idx)
+                inj.note(f"step {self.steps_run}: exchange stall armed on "
+                         f"rung {f.rung!r} ({f.stalls} attempts)")
+            elif f.kind == "cache_evict":
+                if self.cache.evict(self._step_key()):
+                    inj.record("cache_evictions")
+                    inj.note(f"step {self.steps_run}: evicted current "
+                             f"executable (re-trace on next launch)")
+                else:
+                    inj.note(f"step {self.steps_run}: cache_evict found "
+                             f"no entry for the current key")
+                inj.mark_fired(idx)
+
+    # -- snapshots / rollback ----------------------------------------------
+    def _reachable(self, queue: List[Any]) -> Dict[int, StencilRequest]:
+        out: Dict[int, StencilRequest] = {}
+        for s in self.slots.live_slots():
+            r = self.slots.request(s)
+            out[r.uid] = r
+        for item in queue:
+            r = item.req if isinstance(item, _InFlight) else item
+            out[r.uid] = r
+        return out
+
+    def _take_snapshot(self, queue: List[Any], done: Dict[int, Any]) -> None:
+        arrays = {"u": self.u.copy(), "v": self.v.copy(),
+                  "w": self.w.copy(), "xm": self.xm.copy(),
+                  "ym": self.ym.copy()}
+        for i, leaf in enumerate(self._p):
+            arrays[f"p{i}"] = leaf.copy()
+        reqs = self._reachable(queue)
+        disk_step = None
+        if self._snapshot_dir is not None:
+            CKPT.save(self._snapshot_dir, arrays, self.steps_run)
+            disk_step = self.steps_run
+        self._snap = _Snapshot(
+            steps_run=self.steps_run, B=self.B, arrays=arrays,
+            extents=list(self._extent),
+            live=[(s, self.slots.request(s).uid, self.slots.budget(s))
+                  for s in self.slots.live_slots()],
+            reqs=reqs,
+            states_len={uid: (len(r.states) if r.states is not None else -1)
+                        for uid, r in reqs.items()},
+            queue=list(queue), done_uids=set(done), disk_step=disk_step)
+        self._injector.record("snapshots")
+
+    def _rollback(self, queue: List[Any], done: Dict[int, Any],
+                  reason: str) -> None:
+        """Restore the last snapshot and replay from it. Quarantined
+        jobs stay quarantined (their slot comes back empty); everything
+        else — arrays, slot assignments, budgets, streamed states, the
+        queue, the step counter — returns to the boundary, so the replay
+        is bitwise-indistinguishable from a run that never faulted."""
+        snap = self._snap
+        assert snap is not None
+        arrays = snap.arrays
+        if self._snapshot_dir is not None and snap.disk_step is not None:
+            # restore through the checkpoint machinery: the atomic
+            # on-disk copy is the recovery point, not host memory
+            arrays, _ = CKPT.restore(self._snapshot_dir, snap.arrays,
+                                     step=snap.disk_step)
+        self._alloc(snap.B)
+        self.u[:] = arrays["u"]
+        self.v[:] = arrays["v"]
+        self.w[:] = arrays["w"]
+        self.xm[:] = arrays["xm"]
+        self.ym[:] = arrays["ym"]
+        for i in range(len(self._p)):
+            self._p[i][:] = arrays[f"p{i}"]
+        self._extent = list(snap.extents)
+        for slot, uid, budget in snap.live:
+            if uid in self._quarantined:
+                self._clear(slot)
+                for arr in (self.u, self.v, self.w):
+                    arr[slot] = 0.0
+                continue
+            self.slots.occupy(slot, snap.reqs[uid], budget)
+        for uid, req in snap.reqs.items():
+            if uid in self._quarantined:
+                continue
+            n = snap.states_len[uid]
+            if n < 0:
+                req.states = None
+            else:
+                del req.states[n:]
+            req.out = None
+            req.status = "running" if any(u == uid for _, u, _ in snap.live) \
+                else "pending"
+        for uid in list(done):
+            if uid not in snap.done_uids and uid not in self._quarantined:
+                del done[uid]
+        queue[:] = list(snap.queue)
+        self.steps_run = snap.steps_run
+        self._injector.record("rollbacks")
+        self._injector.note(f"rollback to step {snap.steps_run}: {reason}")
+
+    def _quarantine(self, slot: int, reason: str) -> StencilRequest:
+        """Isolate a poisoned slot: error out its job, zero its data (so
+        the frozen non-finite cells stop tripping the guard), and free
+        the slot for healthy work."""
+        req = self.slots.request(slot)
+        req.status = "quarantined"
+        req.error = reason
+        req.out = None
+        self._quarantined.add(req.uid)
+        self.slots.release(slot)
+        self._clear(slot)
+        for arr in (self.u, self.v, self.w):
+            arr[slot] = 0.0
+        self._injector.record("quarantines")
+        self._injector.note(f"quarantined uid {req.uid} (slot {slot}): "
+                            f"{reason}")
+        return req
 
     # -- fault tolerance ---------------------------------------------------
     def reshard(self, new_batch_size: int) -> List[_InFlight]:
         """Re-shard the engine onto `new_batch_size` slots (a simulated
-        device loss took the rest): live jobs are detached with their
-        in-flight state, the batch arrays are re-allocated (a NEW cache
-        key — the next mega-step records a miss and re-traces), and as
-        many jobs as fit are re-packed immediately. Jobs that no longer
-        fit are returned for the caller (`run`) to resume — state intact,
-        budget intact — when slots free up. Slot independence makes the
-        re-pack bitwise-invisible to every job's output."""
+        device loss took the rest, or devices returned — resharding UP
+        works the same way): live jobs are detached with their in-flight
+        state, the batch arrays are re-allocated (a NEW cache key — the
+        next mega-step records a miss and re-traces), and as many jobs
+        as fit are re-packed immediately. Jobs that no longer fit are
+        returned for the caller (`run`) to resume — state intact, budget
+        intact — when slots free up. Slot independence makes the re-pack
+        bitwise-invisible to every job's output."""
         if new_batch_size < 1:
             raise ValueError(f"new_batch_size must be >= 1, got "
                              f"{new_batch_size}")
@@ -295,26 +619,40 @@ class StencilServingEngine:
     # -- driver ------------------------------------------------------------
     def run(self, requests: List[StencilRequest], *,
             lose_device_at: Optional[int] = None,
-            reshard_to: Optional[int] = None
+            reshard_to: Optional[int] = None,
+            fault_plan: Union[FaultPlan, str, None] = None
             ) -> Dict[int, StencilRequest]:
         """Serve `requests` to completion; returns {uid: completed request}
         (each with `out` = final cropped fields and `states` = the
-        streamed per-step snapshots).
+        streamed per-step snapshots; a quarantined request comes back
+        with ``status == "quarantined"``, `error` set, and ``out=None``).
 
-        `lose_device_at=k` simulates a device loss after the k-th
-        mega-step: the engine re-shards onto `reshard_to` slots (default:
-        half, at least 1) and keeps serving — the fault-injection hook,
-        mirroring `train_loop(inject_nan_at=...)`."""
+        `fault_plan` (a `FaultPlan` or spec string) replaces the
+        engine's injector for this run. `lose_device_at=k` is the
+        DEPRECATED one-fault alias: it builds a plan with a single
+        device-loss fault after the k-th mega-step re-sharding onto
+        `reshard_to` slots (default: half, at least 1)."""
         if lose_device_at is not None:
-            if reshard_to is None:
-                reshard_to = max(self.B // 2, 1)
+            if fault_plan is not None:
+                raise ValueError("pass either fault_plan or the deprecated "
+                                 "lose_device_at, not both")
             if lose_device_at < 1:
                 raise ValueError(f"lose_device_at must be >= 1, got "
                                  f"{lose_device_at}")
+            n = reshard_to if reshard_to is not None else max(self.B // 2, 1)
+            fault_plan = FaultPlan((Fault(
+                "device_loss", at_step=self.steps_run + lose_device_at,
+                reshard_to=n),))
+        if fault_plan is not None:
+            if isinstance(fault_plan, str):
+                fault_plan = FaultPlan.parse(fault_plan)
+            self._injector = FaultInjector(fault_plan)
         queue: List[Any] = list(requests)
         done: Dict[int, StencilRequest] = {}
-        steps = 0
         while queue or self.slots.any_live():
+            if (self._snapshot_every is not None
+                    and self.steps_run % self._snapshot_every == 0):
+                self._take_snapshot(queue, done)
             for s in self.slots.idle_slots():
                 if not queue:
                     break
@@ -323,28 +661,67 @@ class StencilServingEngine:
                     self._resume(s, item)
                 elif self._prime(s, item):
                     done[item.uid] = item
+            self._apply_faults(queue)
             if not self.slots.any_live():
                 continue
-            self._mega_step()
-            steps += 1
+            step_idx = self.steps_run
+            self._guarded_mega_step(queue)
+            bad = [b for b in self.slots.live_slots()
+                   if not self._last_ok[b]]
+            if bad:
+                fresh = [b for b in bad
+                         if (self.slots.request(b).uid, step_idx)
+                         not in self._suspects]
+                if fresh and self._snap is not None:
+                    # first sighting at this (uid, step) site: assume a
+                    # transient, roll back and replay. A fault that
+                    # re-fires on the replay is persistent — the replay
+                    # lands here again with the site already suspect and
+                    # falls through to quarantine.
+                    for b in bad:
+                        self._suspects.add(
+                            (self.slots.request(b).uid, step_idx))
+                    self._rollback(queue, done,
+                                   reason=f"non-finite guard at step "
+                                          f"{step_idx}, slots {bad}")
+                    continue
+                for b in bad:
+                    req = self._quarantine(
+                        b, f"non-finite field detected at step {step_idx}")
+                    done[req.uid] = req
             for s in self.slots.live_slots():
                 req = self.slots.request(s)
                 state = self._crop(s)
                 req.states.append(state)
                 if self.slots.tick(s):
                     req.out = state
+                    req.status = "done"
                     done[req.uid] = req
                     self.slots.release(s)
                     self._clear(s)
-            if lose_device_at is not None and steps == lose_device_at:
-                # displaced jobs resume ahead of queued fresh work
-                queue[:0] = self.reshard(reshard_to)
-                lose_device_at = None
         return done
 
     # -- accounting --------------------------------------------------------
     def cache_stats(self) -> Dict[str, int]:
         return self.cache.stats()
+
+    def health(self) -> Dict[str, Any]:
+        """The fault/recovery counters surface: everything the injector
+        recorded (faults seen, retries, quarantines, rollbacks,
+        degradations, reshards, snapshots) plus the live exchange rung,
+        the quarantined uids, and the executable-cache stats. Printed by
+        `launch/serve.py` and gated by `benchmarks/fault_sweep.py`."""
+        h = self._injector.health()
+        h["exchange"] = self._ladder.current
+        h["quarantined_uids"] = sorted(self._quarantined)
+        h["cache"] = self.cache_stats()
+        return h
+
+    def guard_bytes_per_step(self) -> int:
+        """Extra HBM bytes the finite-guard pass adds to one mega-launch
+        (`roofline.guard_bytes_model` at the current batch size)."""
+        return dataclasses.replace(self.domain,
+                                   batch=self.B).guard_bytes_per_step()
 
     def modelled_throughput(self) -> float:
         """Domains/s of this engine's mega-launch per

@@ -315,6 +315,20 @@ class AdvectionDomain:
                                       y_tile=self.y_tile, halo=halo
                                       ) * self.batch
 
+    def guard_bytes_per_step(self) -> int:
+        """Extra HBM bytes per mega-launch of the finite-guard pass
+        (`roofline.guard_bytes_model`): one read pass over the three
+        advanced fields plus X flag words per packed slot. The serving
+        tier's fault detection priced next to the field bytes it watches
+        — half the fused six-array pass, amortised over the fuse_T Euler
+        steps each pass carries, and gated counted == modelled EXACTLY
+        in BENCH_faults.json."""
+        if self.variant != "fused":
+            raise ValueError("the finite guard rides the fused kernel; "
+                             f"variant={self.variant!r} has no guard path")
+        return R.guard_bytes_model(self.X, self.Y, self.Z,
+                                   batch=self.batch)
+
     def serving_throughput(self) -> float:
         """Modelled domains/s of serving `batch` independent copies of
         this domain per mega-launch (`roofline.serving_throughput_model`):

@@ -626,6 +626,43 @@ def count_pallas_hbm_bytes(fn, *args) -> int:
     return total
 
 
+def count_guard_bytes(fn, *args) -> int:
+    """HBM bytes of the finite-guard pass: for every `pallas_call` in
+    `fn`'s (recursively walked) jaxpr whose results are ALL rank < 3 —
+    the guard kernel's signature; flags are (X,) / vmapped (B, X) while
+    every field-moving kernel emits rank >= 3 results — sum the sizes of
+    its operands AND results: the field re-read plus the flag words.
+
+    The advection kernels proper are never miscounted (their field
+    results are rank >= 3, counted by `count_pallas_hbm_bytes` and
+    untouched by guarding), so this isolates exactly the detection
+    traffic. Gated in BENCH_faults.json against
+    `roofline.guard_bytes_model` EXACTLY — the recovery tier's detection
+    traffic priced under the same model-equals-counted discipline as the
+    field and wire bytes.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    total = 0
+
+    def nbytes(var):
+        aval = var.aval
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+
+    def walk(jaxpr):
+        nonlocal total
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call" and all(
+                    getattr(v.aval, "ndim", 3) < 3 for v in eqn.outvars):
+                total += sum(nbytes(v) for v in eqn.invars)
+                total += sum(nbytes(v) for v in eqn.outvars)
+            for pval in eqn.params.values():
+                for sub in _iter_jaxprs(pval):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return total
+
+
 def reference_global(u, v, w, params: AdvectParams):
     """Single-device oracle for the distributed version."""
     return pw_advect_ref(u, v, w, params)

@@ -153,7 +153,8 @@ def test_cache_unit():
     f = c.get("k1", lambda: calls.append(1) or (lambda: 7))
     g = c.get("k1", lambda: calls.append(1) or (lambda: 9))
     assert f is g and calls == [1]
-    assert c.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    assert c.stats() == {"hits": 1, "misses": 1, "entries": 1,
+                         "evictions": 0}
 
 
 def test_device_loss_reshard_bitwise_resume():
