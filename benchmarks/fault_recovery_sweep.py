@@ -1,0 +1,334 @@
+"""Checksummed halo exchange + checkpointed elastic recovery sweep,
+gated end to end, written to ``BENCH_recovery.json``.
+
+The distributed run only earns its data-movement wins if the moved bytes
+can be TRUSTED and the run can survive losing them: this sweep prices
+and gates the integrity layer, the checkpoint/resume path, and the
+elastic (mesh-shrink/regrow) recovery of
+`serving.faults.resilient_distributed_run` on 4 forced host devices
+(the scaling2d subprocess idiom).
+
+Row families:
+
+  * ``integrity[]`` — per (mesh, T, engine): the jaxpr-counted checksum
+    wire bytes of a `verify_integrity=True` step
+    (`stencil.distributed.count_integrity_bytes`) gated ==
+    `roofline.integrity_bytes_model` EXACTLY (hop-count dependent,
+    payload independent: one uint32 word per band message per side per
+    field); the verified step's field outputs gated BITWISE-equal to the
+    unchecked step with zero mismatch flags; the FIELD wire bytes gated
+    verify-invariant; and an injected wire corruption
+    (`corrupt_halo=`) gated DETECTED (non-zero receiver-side flags).
+  * ``checkpoint[]`` — `make_distributed_run(checkpoint_every=k)`
+    interrupted mid-run and continued by `resume_distributed_run`,
+    gated BITWISE-equal to the uninterrupted run.
+  * ``recovery[]`` — a halo-corruption plan through
+    `resilient_distributed_run`: gated detected by the band checksums
+    (not the NaN guard), rolled back EXACTLY once, replay overhead
+    bounded by the snapshot interval, final fields bitwise-clean.
+  * ``elastic[]`` — a device-loss shrink (4 -> 2 shards) followed by a
+    device-return regrow (2 -> 4): gated BITWISE-equal both to the
+    never-interrupted 4-shard run and to the single-device global
+    oracle (the fused kernel's fixed y_tile keeps per-tile arithmetic
+    shard-shape independent, so elasticity is bitwise-invisible).
+
+Every gate is an explicit ``SystemExit`` raise (python -O safe). CI runs
+``--quick`` in the benchmark-smoke job;
+`scripts/check_bench_trends.py` compares the artifact against
+``benchmarks/baselines.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+try:                        # package context (benchmarks.run / -m)
+    from benchmarks import _bootstrap
+except ImportError:         # script context: benchmarks/ is sys.path[0]
+    import _bootstrap
+
+from benchmarks.common import emit
+
+GRID = (6, 16, 12)
+DT = 0.005
+N_BLOCKS = 5
+CKPT_EVERY = 2
+
+_SUB_CODE = textwrap.dedent("""
+    import json, os, sys, tempfile, time
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.roofline import integrity_bytes_model
+    from repro.kernels.advection.ref import default_params
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.serving import faults as F
+    from repro.stencil import distributed as D
+    from repro.stencil.advection import stratus_fields
+
+    cfg = json.loads(sys.argv[1])
+    X, Y, Z = cfg["grid"]
+    DT = cfg["dt"]
+    u, v, w = stratus_fields(X, Y, Z)
+    p = default_params(Z)
+
+    def bitdiff(a, b):
+        return max(float(jnp.max(jnp.abs(jnp.asarray(np.asarray(x))
+                                         - jnp.asarray(np.asarray(y)))))
+                   for x, y in zip(a, b))
+
+    def clock(fn, *args):
+        jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[1] * 1e6
+
+    out = {"integrity": []}
+    for nx, ny, T, ex in cfg["integrity_cases"]:
+        mesh = make_stencil_mesh(nx, ny)
+        kw = dict(axis="y", x_axis=("x" if nx > 1 else None), T=T, dt=DT)
+        step0 = D.make_distributed_step(mesh, p, exchange=ex, **kw)
+        stepv = D.make_distributed_step(mesh, p, exchange=ex,
+                                        verify_integrity=True, **kw)
+        o0 = step0(u, v, w)
+        *ov, fl = stepv(u, v, w)
+        stepc = D.make_distributed_step(mesh, p, exchange=ex,
+                                        verify_integrity=True,
+                                        corrupt_halo=(1, 1, float("nan")),
+                                        **kw)
+        *_, flc = stepc(u, v, w)
+        out["integrity"].append({
+            "mesh": [nx, ny], "T": T, "exchange": ex,
+            "counted_integrity_bytes": D.count_integrity_bytes(
+                stepv, u, v, w),
+            "modelled_integrity_bytes": integrity_bytes_model(
+                X, Y, Z, nx=nx, ny=ny, T=T),
+            "unchecked_integrity_bytes": D.count_integrity_bytes(
+                step0, u, v, w),
+            "wire_bytes_unchecked": D.count_exchange_wire_bytes(
+                step0, u, v, w),
+            "wire_bytes_verified": D.count_exchange_wire_bytes(
+                stepv, u, v, w),
+            "bitwise_diff_verified": bitdiff(o0, ov),
+            "clean_mismatch_flags": int(np.sum(np.asarray(fl))),
+            "corrupt_mismatch_flags": int(np.sum(np.asarray(flc))),
+            "us_unchecked": clock(step0, u, v, w),
+            "us_verified": clock(stepv, u, v, w),
+        })
+
+    K = cfg["n_blocks"]; every = cfg["ckpt_every"]
+    mesh = make_stencil_mesh(1, 4)
+    kw = dict(axis="y", x_axis=None, T=2, dt=DT, exchange="remote_dma")
+    full = D.make_distributed_run(mesh, p, n_blocks=K, **kw)(u, v, w)
+    cut = K - 2
+    with tempfile.TemporaryDirectory() as d:
+        D.make_distributed_run(mesh, p, n_blocks=cut, checkpoint_every=every,
+                               checkpoint_dir=d, **kw)(u, v, w)
+        n_snaps = len([x for x in os.listdir(d) if x.startswith("step_")])
+        res = D.resume_distributed_run(mesh, p, u, v, w, n_blocks=K,
+                                       checkpoint_dir=d,
+                                       checkpoint_every=every, **kw)
+    out["checkpoint"] = {
+        "n_blocks": K, "interrupted_at": cut, "checkpoint_every": every,
+        "snapshots_on_disk": n_snaps,
+        "bitwise_diff_resumed": bitdiff(full, res),
+    }
+
+    rkw = dict(n_blocks=K, T=2, dt=DT, axis="y", x_axis=None,
+               checkpoint_every=every)
+    plan = F.FaultPlan.parse("halo_corruption@3:field=v")
+    got, inj = F.resilient_distributed_run(
+        mesh, p, u, v, w, injector=F.FaultInjector(plan), **rkw)
+    h = inj.health()
+    out["recovery"] = {
+        "plan": h["plan"], "checkpoint_every": every,
+        "bitwise_diff_recovered": bitdiff(full, got),
+        "rollbacks": h["rollbacks"], "replayed_blocks": h["replayed_blocks"],
+        "faults_injected": h["faults_injected"],
+        "faults_skipped": h["faults_skipped"],
+        "detected_by_checksum": any("checksum" in t
+                                    for t in h["transitions"]),
+    }
+
+    fkw = dict(n_blocks=K, T=2, dt=DT, axis="y", x_axis=None,
+               local_kernel="fused", y_tile=2)
+    clean4 = D.make_distributed_run(mesh, p, exchange="remote_dma",
+                                    **fkw)(u, v, w)
+    oracle = D.make_distributed_run(make_stencil_mesh(1, 1), p,
+                                    exchange="collective", **fkw)(u, v, w)
+    plan = F.FaultPlan.parse(
+        "device_loss@1:reshard_to=2;device_loss@3:reshard_to=4")
+    got, inj = F.resilient_distributed_run(
+        mesh, p, u, v, w, injector=F.FaultInjector(plan), **fkw)
+    h = inj.health()
+    out["elastic"] = {
+        "plan": h["plan"],
+        "bitwise_diff_vs_4shard": bitdiff(clean4, got),
+        "bitwise_diff_vs_global_oracle": bitdiff(oracle, got),
+        "device_losses": h["device_losses"], "reshards": h["reshards"],
+        "faults_skipped": h["faults_skipped"],
+        "transitions": [t for t in h["transitions"] if "re-shard" in t],
+    }
+    print(json.dumps(out))
+""")
+
+
+def _subprocess_payload(smoke: bool) -> dict:
+    cases = ([[1, 4, 2, "collective"], [1, 4, 2, "remote_dma"]]
+             if smoke else
+             [[1, 4, 2, "collective"], [1, 4, 2, "remote_dma"],
+              [1, 4, 6, "collective"], [1, 4, 6, "remote_dma"],
+              [2, 2, 2, "collective"]])
+    cfg = {"grid": list(GRID), "dt": DT, "n_blocks": N_BLOCKS,
+           "ckpt_every": CKPT_EVERY, "integrity_cases": cases}
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.update({
+        "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+        "PYTHONPATH": os.pathsep.join(
+            [os.path.join(root, "src"), root,
+             env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+    })
+    r = subprocess.run([sys.executable, "-c", _SUB_CODE, json.dumps(cfg)],
+                       capture_output=True, text=True, cwd=root, env=env,
+                       timeout=900)
+    if r.returncode != 0:
+        raise SystemExit(f"recovery subprocess failed:\n{r.stderr[-3000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _gate(payload: dict) -> None:
+    for row in payload["integrity"]:
+        tag = f"{row['mesh']}/T{row['T']}/{row['exchange']}"
+        if (row["counted_integrity_bytes"]
+                != row["modelled_integrity_bytes"]):
+            raise SystemExit(
+                f"recovery gate: counted integrity bytes "
+                f"{row['counted_integrity_bytes']} != modelled "
+                f"{row['modelled_integrity_bytes']} at {tag} — one uint32 "
+                f"word per band message per side per field, exactly")
+        if row["unchecked_integrity_bytes"] != 0:
+            raise SystemExit(
+                f"recovery gate: an UNCHECKED step carries "
+                f"{row['unchecked_integrity_bytes']} checksum bytes at "
+                f"{tag}; verification must be strictly opt-in")
+        if row["wire_bytes_unchecked"] != row["wire_bytes_verified"]:
+            raise SystemExit(
+                f"recovery gate: verification changed the FIELD wire "
+                f"bytes at {tag}: {row['wire_bytes_unchecked']} -> "
+                f"{row['wire_bytes_verified']}")
+        if row["bitwise_diff_verified"] != 0.0:
+            raise SystemExit(
+                f"recovery gate: verified step differs from unchecked by "
+                f"{row['bitwise_diff_verified']} at {tag}; checksums must "
+                f"ride beside the bands, never touch them")
+        if row["clean_mismatch_flags"] != 0:
+            raise SystemExit(
+                f"recovery gate: clean exchange raised "
+                f"{row['clean_mismatch_flags']} mismatch flags at {tag}")
+        if row["corrupt_mismatch_flags"] == 0:
+            raise SystemExit(
+                f"recovery gate: injected wire corruption NOT detected at "
+                f"{tag}; receiver-side checksums must trip")
+        emit(f"recovery.integrity.{row['exchange']}."
+             f"{row['mesh'][0]}x{row['mesh'][1]}.T{row['T']}",
+             row["us_verified"],
+             f"words_B={row['counted_integrity_bytes']};"
+             f"us_unchecked={row['us_unchecked']:.1f};"
+             f"corrupt_flags={row['corrupt_mismatch_flags']}")
+
+    ck = payload["checkpoint"]
+    if ck["bitwise_diff_resumed"] != 0.0:
+        raise SystemExit(
+            f"recovery gate: interrupt-at-{ck['interrupted_at']} + resume "
+            f"differs from the uninterrupted {ck['n_blocks']}-block run by "
+            f"{ck['bitwise_diff_resumed']}; resume must be bitwise")
+    if ck["snapshots_on_disk"] < 1:
+        raise SystemExit("recovery gate: checkpointed run left no "
+                         "snapshots on disk")
+    emit("recovery.checkpoint.resume", 0.0,
+         f"blocks={ck['n_blocks']};cut={ck['interrupted_at']};"
+         f"snapshots={ck['snapshots_on_disk']};bitwise=True")
+
+    rec = payload["recovery"]
+    if rec["bitwise_diff_recovered"] != 0.0:
+        raise SystemExit(
+            f"recovery gate: halo-corruption replay differs from the "
+            f"clean run by {rec['bitwise_diff_recovered']}")
+    if not rec["detected_by_checksum"]:
+        raise SystemExit(
+            "recovery gate: corruption must be detected by the band "
+            "checksums (transition note), not the NaN guard")
+    if rec["rollbacks"] != 1 or rec["faults_skipped"] != 0:
+        raise SystemExit(
+            f"recovery gate: one-shot corruption must roll back exactly "
+            f"once and never be skipped; health {rec}")
+    if rec["replayed_blocks"] > rec["checkpoint_every"] * rec["rollbacks"]:
+        raise SystemExit(
+            f"recovery gate: replay overhead {rec['replayed_blocks']} "
+            f"blocks exceeds the snapshot interval "
+            f"{rec['checkpoint_every']} — rollback went too far")
+    emit("recovery.replay.halo_corruption", 0.0,
+         f"rollbacks={rec['rollbacks']};"
+         f"replayed_blocks={rec['replayed_blocks']};bitwise=True")
+
+    el = payload["elastic"]
+    if el["bitwise_diff_vs_4shard"] != 0.0:
+        raise SystemExit(
+            f"recovery gate: shrink/regrow run differs from the "
+            f"never-interrupted 4-shard run by "
+            f"{el['bitwise_diff_vs_4shard']}")
+    if el["bitwise_diff_vs_global_oracle"] != 0.0:
+        raise SystemExit(
+            f"recovery gate: shrink/regrow run differs from the "
+            f"single-device global oracle by "
+            f"{el['bitwise_diff_vs_global_oracle']} — the fused kernel's "
+            f"fixed y_tile must make elasticity bitwise-invisible")
+    if el["device_losses"] != 2 or el["reshards"] != 2:
+        raise SystemExit(
+            f"recovery gate: loss+return must record 2 device_losses and "
+            f"2 reshards; health {el}")
+    if el["faults_skipped"] != 0:
+        raise SystemExit(
+            f"recovery gate: device_loss skipped "
+            f"({el['faults_skipped']}); every kind is injectable now")
+    emit("recovery.elastic.shrink_regrow", 0.0,
+         f"losses={el['device_losses']};reshards={el['reshards']};"
+         f"bitwise_vs_oracle=True")
+
+
+def run(smoke: bool = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SMOKE", "") == "1"
+    payload = _subprocess_payload(smoke)
+    _gate(payload)
+    payload["itemsize"] = 4
+    payload["contract"] = (
+        "jaxpr-counted checksum wire bytes == integrity_bytes_model "
+        "exactly per (mesh, T, engine) with the field wire bytes "
+        "verify-invariant and the verified step bitwise-equal to the "
+        "unchecked step; injected wire corruption trips the "
+        "receiver-side checksums; an interrupted checkpointed run "
+        "resumed by resume_distributed_run is bitwise-equal to the "
+        "uninterrupted run; a halo corruption through "
+        "resilient_distributed_run is detected by the checksums, rolled "
+        "back exactly once with replay bounded by the snapshot "
+        "interval, and finishes bitwise-clean; a device-loss shrink + "
+        "device-return regrow is bitwise-equal to both the 4-shard run "
+        "and the single-device global oracle")
+    out_path = os.path.join(os.getcwd(), "BENCH_recovery.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("recovery.json_written", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    run(smoke=_bootstrap.smoke_arg())

@@ -17,7 +17,8 @@ from benchmarks import common
 
 
 def main() -> None:
-    from benchmarks import (dma_overlap, fault_sweep, fig3_ladder,
+    from benchmarks import (dma_overlap, fault_recovery_sweep,
+                            fault_sweep, fig3_ladder,
                             fig5_scaling, fig7_compare, fig8_gridsize,
                             fig9_fusion, overlap_sweep, pipeline_sweep,
                             roofline_table, scaling2d_sweep, serving_sweep,
@@ -26,8 +27,8 @@ def main() -> None:
     failures = []
     for mod in (fig3_ladder, fig5_scaling, fig7_compare, fig8_gridsize,
                 fig9_fusion, tiling_sweep, scaling2d_sweep, overlap_sweep,
-                pipeline_sweep, serving_sweep, fault_sweep, dma_overlap,
-                roofline_table):
+                pipeline_sweep, serving_sweep, fault_sweep,
+                fault_recovery_sweep, dma_overlap, roofline_table):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

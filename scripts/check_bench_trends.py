@@ -1,0 +1,127 @@
+"""Benchmark trend gate: freshly generated ``BENCH_*.json`` artifacts vs
+the committed baselines in ``benchmarks/baselines.json``.
+
+The sweeps gate their own invariants (SystemExit inside each
+``benchmarks/*.py``); THIS gate pins the key derived metrics across
+commits, so a regression that each sweep individually tolerates (a
+byte count that grew but still matches a loosened model, a replay bound
+that crept up) fails CI against the recorded trend.
+
+Baseline entries (per artifact file)::
+
+    {"BENCH_recovery.json": [
+        {"path": "integrity.0.counted_integrity_bytes",
+         "direction": "eq", "value": 24, "rtol": 0.0},
+        ...]}
+
+``path`` is dot-separated into the artifact JSON (integer components
+index lists). ``direction``:
+
+  * ``eq`` — current == value exactly (invariants: byte counts, bitwise
+    diffs, flag counts);
+  * ``le`` — current <= value * (1 + rtol): the metric must not GROW
+    past the baseline (overheads, replayed blocks);
+  * ``ge`` — current >= value * (1 - rtol): the metric must not FALL
+    below the baseline (throughputs, coverage counts).
+
+Usage (from the repo root, after running the sweeps that produce the
+artifacts — CI runs the ``--quick`` sweeps first)::
+
+    python scripts/check_bench_trends.py            # gate
+    python scripts/check_bench_trends.py --update   # rewrite baselines
+
+All failures are explicit ``SystemExit`` raises (python -O safe).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(ROOT, "benchmarks", "baselines.json")
+DIRECTIONS = ("eq", "le", "ge")
+
+
+def resolve(doc, path: str):
+    """Walk a dot-separated path; integer components index lists."""
+    node = doc
+    for part in path.split("."):
+        if isinstance(node, list):
+            try:
+                node = node[int(part)]
+            except (ValueError, IndexError):
+                raise SystemExit(
+                    f"trend gate: path component {part!r} of {path!r} "
+                    f"does not index the list (len {len(node)})") from None
+        elif isinstance(node, dict):
+            if part not in node:
+                raise SystemExit(
+                    f"trend gate: path component {part!r} of {path!r} "
+                    f"missing; artifact keys: {sorted(node)[:12]}")
+            node = node[part]
+        else:
+            raise SystemExit(f"trend gate: path {path!r} descends into a "
+                             f"leaf at {part!r}")
+    if not isinstance(node, (int, float)) or isinstance(node, bool):
+        raise SystemExit(f"trend gate: path {path!r} resolves to "
+                         f"{type(node).__name__}, not a number")
+    return node
+
+
+def check(artifact: str, entries, doc) -> list:
+    failures = []
+    for e in entries:
+        cur = resolve(doc, e["path"])
+        want, rtol, d = e["value"], float(e.get("rtol", 0.0)), e["direction"]
+        if d not in DIRECTIONS:
+            raise SystemExit(f"trend gate: bad direction {d!r} for "
+                             f"{artifact}:{e['path']}")
+        ok = (cur == want if d == "eq" else
+              cur <= want * (1.0 + rtol) if d == "le" else
+              cur >= want * (1.0 - rtol))
+        status = "ok" if ok else "REGRESSED"
+        print(f"{artifact}:{e['path']}: {cur} {d} {want} "
+              f"(rtol={rtol}) {status}")
+        if not ok:
+            failures.append(f"{artifact}:{e['path']} = {cur}, baseline "
+                            f"{d} {want} (rtol={rtol})")
+    return failures
+
+
+def main(argv) -> None:
+    update = "--update" in argv
+    with open(BASELINES, encoding="utf-8") as f:
+        baselines = json.load(f)
+    if not baselines:
+        raise SystemExit(f"trend gate: no baselines in {BASELINES}")
+    failures = []
+    for artifact, entries in sorted(baselines.items()):
+        path = os.path.join(os.getcwd(), artifact)
+        if not os.path.exists(path):
+            raise SystemExit(
+                f"trend gate: {artifact} not found in {os.getcwd()} — run "
+                f"the sweep that produces it first (see benchmarks/)")
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+        if update:
+            for e in entries:
+                e["value"] = resolve(doc, e["path"])
+                print(f"{artifact}:{e['path']} <- {e['value']}")
+        else:
+            failures.extend(check(artifact, entries, doc))
+    if update:
+        with open(BASELINES, "w", encoding="utf-8") as f:
+            json.dump(baselines, f, indent=1)
+            f.write("\n")
+        print(f"baselines rewritten: {BASELINES}")
+        return
+    if failures:
+        raise SystemExit("trend gate: benchmark regressions vs committed "
+                         "baselines:\n  " + "\n  ".join(failures))
+    print(f"trend gate: {sum(len(v) for v in baselines.values())} "
+          f"baselines hold across {len(baselines)} artifacts")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

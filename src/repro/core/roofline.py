@@ -356,6 +356,44 @@ def guard_bytes_model(X: int, Y: int, Z: int, *, batch: int = 1,
     return batch * (3 * X * Y * Z * itemsize + X * GUARD_FLAG_ITEMSIZE)
 
 
+INTEGRITY_WORD_ITEMSIZE = 4   # band checksums are one uint32 word each
+
+
+def integrity_bytes_model(X: int, Y: int, Z: int, *, nx: int = 1,
+                          ny: int = 1, T: int = 1,
+                          n_fields: int = 3) -> int:
+    """Per-shard EXTRA wire bytes of the checksummed (verified) exchange.
+
+    The integrity layer (`stencil.distributed.make_distributed_step(...,
+    verify_integrity=True)`) rides one uint32 checksum word
+    (`kernels.advection.band_checksum`) on every `_band_schedule` band
+    message: per decomposed axis, per field, per hop, per side — so the
+    extra traffic is ``2 * n_fields * (hops_x + hops_y)`` words of
+    `INTEGRITY_WORD_ITEMSIZE` bytes, where ``hops_a = ceil(T / local
+    extent)`` on a decomposed axis and 0 on an undecomposed one. Unlike
+    `halo_wire_bytes_model` the cost is hop-count DEPENDENT (each hop
+    carries its own word) but payload-size independent — the whole point:
+    verifying a depth-T band costs 4 bytes on the wire, not 2x the band.
+
+    `stencil.distributed.count_integrity_bytes` recounts the executing
+    program's actual checksum ppermute operands from the jaxpr;
+    BENCH_recovery.json gates the two equal EXACTLY — the integrity rung
+    priced under the same model-equals-counted discipline as the field,
+    wire and guard bytes.
+    """
+    if nx < 1 or ny < 1:
+        raise ValueError(f"mesh shape must be >= 1, got ({nx}, {ny})")
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
+    if X % nx or Y % ny:
+        raise ValueError(f"grid ({X}, {Y}) not divisible by mesh "
+                         f"({nx}, {ny}); shard_map requires even shards")
+    Xl, Yl = X // nx, Y // ny
+    hops_x = -(-T // Xl) if nx > 1 else 0
+    hops_y = -(-T // Yl) if ny > 1 else 0
+    return 2 * n_fields * (hops_x + hops_y) * INTEGRITY_WORD_ITEMSIZE
+
+
 def stencil_tiling_bytes_factor(Y: int, y_tile: Optional[int], halo: int,
                                 *, grid_tiled: bool = True) -> float:
     """Multiplier on the compulsory per-pass HBM bytes from y-tiling.

@@ -694,6 +694,32 @@ def _band_schedule(L: int, depth: int):
     return sched
 
 
+def band_checksum(band):
+    """Integrity word over ONE `_band_schedule` message: the uint32
+    wraparound sum of the band's raw 32-bit words, shaped ``(1,)`` so it
+    can ride the same transport as the band itself.
+
+    Exact and order-independent by construction — modular integer
+    addition is associative/commutative, so sender and receiver compute
+    the IDENTICAL word from identical bytes regardless of reduction
+    order, and the verified exchange can gate BITWISE no-op against the
+    unchecked one (a float reduction could not: its rounding depends on
+    shape/order). Lives in the kernels layer beside `_band_schedule`
+    because the word is part of the band-message wire format every
+    engine shares; `stencil.distributed` verifies it per received band
+    and `roofline.integrity_bytes_model` prices one word per message.
+
+    Requires a 4-byte element type (the stencil fields are f32); other
+    widths would need a different word packing and are rejected loudly.
+    """
+    if band.dtype.itemsize != 4:
+        raise TypeError(
+            f"band_checksum packs 32-bit words; got dtype {band.dtype} "
+            f"(itemsize {band.dtype.itemsize})")
+    bits = jax.lax.bitcast_convert_type(band, jnp.uint32)
+    return jnp.sum(bits, dtype=jnp.uint32).reshape((1,))
+
+
 def _band_slice(ref, dim: int, lo: int, size: int):
     """`size` planes (dim=0) or rows (dim=1) of `ref` starting at `lo`."""
     if dim == 0:

@@ -62,6 +62,25 @@ def dma_neighbor_coords(mesh_axes, my_coords, axis: str, delta: int,
         for a, c in zip(mesh_axes, my_coords))
 
 
+def resize_stencil_mesh(nx: int, ny: int, *, x_axis: str = "x",
+                        y_axis: str = "y"):
+    """Elastic rebuild of the stencil mesh: the device-loss recovery path
+    (`serving.faults.resilient_distributed_run`) gathers to host, calls
+    this to lay out the survivors (shrink) or the returned fleet
+    (regrow), and re-shards onto the result. Same shape contract as
+    `make_stencil_mesh`, plus a CLEAR error when the requested shape
+    exceeds what this process can see — the failure mode of resharding
+    UP after a loss that was real."""
+    if nx < 1 or ny < 1:
+        raise ValueError(f"mesh shape must be >= 1, got ({nx}, {ny})")
+    avail = len(jax.devices())
+    if nx * ny > avail:
+        raise ValueError(
+            f"cannot build a ({nx}, {ny}) stencil mesh: needs {nx * ny} "
+            f"devices, {avail} available to this process")
+    return make_stencil_mesh(nx, ny, x_axis=x_axis, y_axis=y_axis)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

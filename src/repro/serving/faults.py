@@ -41,7 +41,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "FAULT_KINDS", "DEFAULT_LADDER", "ExchangeStalled", "RecoveryExhausted",
+    "FAULT_KINDS", "DEFAULT_LADDER", "ELASTIC_LADDER", "MESH_SHRINK",
+    "ExchangeStalled", "RecoveryExhausted",
     "Fault", "FaultPlan", "FaultInjector", "DegradationLadder",
     "retry_with_backoff", "resilient_distributed_run",
 ]
@@ -56,12 +57,23 @@ FAULT_KINDS = ("device_loss", "nan_poison", "halo_corruption",
 #: down to fewer slots — once both transports are exhausted.
 DEFAULT_LADDER = ("remote_dma", "collective")
 
+#: the mesh-shrink rung: not an exchange transport but the elastic last
+#: resort — gather to host, rebuild a smaller stencil mesh, re-shard,
+#: continue. `resilient_distributed_run` takes it when the ladder
+#: degrades onto it; a ladder without it (DEFAULT_LADDER) exhausts
+#: instead.
+MESH_SHRINK = "mesh_shrink"
+
+#: the distributed run's full ladder: both transports, then shrink.
+ELASTIC_LADDER = DEFAULT_LADDER + (MESH_SHRINK,)
+
 _FIELDS = ("u", "v", "w")
 _MODES = ("nan", "inf")
 
 _COUNTERS = ("faults_injected", "faults_skipped", "device_losses",
              "quarantines", "rollbacks", "retries", "degradations",
-             "reshards", "cache_evictions", "snapshots")
+             "reshards", "cache_evictions", "snapshots",
+             "replayed_blocks")
 
 
 class ExchangeStalled(RuntimeError):
@@ -175,6 +187,12 @@ class FaultPlan:
 
     @classmethod
     def parse(cls, spec: str) -> "FaultPlan":
+        """Parse ``kind@step[:key=val,...]`` clauses joined by ";".
+        Malformed specs raise ValueError NAMING the offending token —
+        the clause, the step, the option item, the key, or the value —
+        so a typo'd plan string is diagnosable from the message alone."""
+        option_keys = tuple(f.name for f in dataclasses.fields(Fault)
+                            if f.name not in ("kind", "at_step"))
         faults = []
         for clause in spec.split(";"):
             clause = clause.strip()
@@ -186,6 +204,11 @@ class FaultPlan:
                 raise ValueError(
                     f"bad fault clause {clause!r}: expected kind@step"
                     f"[:key=val,...]")
+            try:
+                at_step = int(step)
+            except ValueError:
+                raise ValueError(f"bad fault step {step!r} in {clause!r}: "
+                                 f"expected an integer") from None
             kw = {}
             if tail:
                 for item in tail.split(","):
@@ -193,8 +216,18 @@ class FaultPlan:
                     if not sep:
                         raise ValueError(f"bad fault option {item!r} in "
                                          f"{clause!r}: expected key=val")
-                    kw[key.strip()] = _parse_value(key.strip(), raw.strip())
-            faults.append(Fault(kind=kind.strip(), at_step=int(step), **kw))
+                    key = key.strip()
+                    if key not in option_keys:
+                        raise ValueError(
+                            f"unknown fault option key {key!r} in "
+                            f"{clause!r}; expected one of {option_keys}")
+                    try:
+                        kw[key] = _parse_value(key, raw.strip())
+                    except ValueError:
+                        raise ValueError(
+                            f"bad fault option value {raw.strip()!r} for "
+                            f"{key!r} in {clause!r}") from None
+            faults.append(Fault(kind=kind.strip(), at_step=at_step, **kw))
         return cls(faults=tuple(faults))
 
     @classmethod
@@ -362,16 +395,28 @@ class DegradationLadder:
 
 def retry_with_backoff(attempt: Callable[[], object], *,
                        max_retries: int = 3, backoff_s: float = 0.0,
+                       max_backoff_s: Optional[float] = None,
+                       jitter_seed: Optional[int] = None,
                        sleeper: Callable[[float], None] = time.sleep,
                        on_retry: Optional[Callable[[int, Exception],
                                                    None]] = None):
     """One initial try plus up to `max_retries` retries of `attempt`,
-    sleeping `backoff_s * 2**k` before retry k. Only `ExchangeStalled`
-    is retryable — anything else propagates immediately. Re-raises the
-    last stall when the budget is spent (the caller degrades the
-    ladder)."""
+    sleeping `min(backoff_s * 2**k, max_backoff_s)` before retry k —
+    the ceiling keeps a deep retry budget from sleeping for `2**k`-ever
+    (`max_backoff_s=None` preserves the uncapped legacy behaviour).
+    `jitter_seed` draws a DETERMINISTIC jitter factor in [0.5, 1.0) per
+    retry from `numpy.random.default_rng(jitter_seed)` — seeded, so the
+    de-synchronised sleep schedule is still reproducible (same seed,
+    same sleeps; the tests pin the sequence through the injected
+    `sleeper`). Only `ExchangeStalled` is retryable — anything else
+    propagates immediately. Re-raises the last stall when the budget is
+    spent (the caller degrades the ladder)."""
     if max_retries < 0:
         raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+    if max_backoff_s is not None and max_backoff_s < 0:
+        raise ValueError(f"max_backoff_s must be >= 0, got {max_backoff_s}")
+    rng = (None if jitter_seed is None
+           else np.random.default_rng(jitter_seed))
     err: Optional[ExchangeStalled] = None
     for k in range(max_retries + 1):
         try:
@@ -383,7 +428,12 @@ def retry_with_backoff(attempt: Callable[[], object], *,
             if on_retry is not None:
                 on_retry(k, e)
             if backoff_s > 0:
-                sleeper(backoff_s * (2 ** k))
+                delay = backoff_s * (2 ** k)
+                if max_backoff_s is not None:
+                    delay = min(delay, max_backoff_s)
+                if rng is not None:
+                    delay *= 0.5 + 0.5 * float(rng.random())
+                sleeper(delay)
     assert err is not None
     raise err
 
@@ -399,56 +449,251 @@ def resilient_distributed_run(mesh, params, u, v, w, *, n_blocks: int,
                               ladder: Optional[DegradationLadder] = None,
                               max_retries: int = 3,
                               backoff_s: float = 0.0,
-                              sleeper: Callable[[float], None] = time.sleep):
-    """`make_distributed_step` driven block-by-block under the retry /
-    degradation discipline: at each exchange-block boundary the due
-    faults are polled, armed stalls hang the attempt, the bounded
-    retry loop absorbs transient stalls, and a persistent stall degrades
-    the ladder (`remote_dma` -> `collective`) — the step is rebuilt on
-    the fallback transport and the block REPLAYED on it, which is sound
-    because the two engines assemble bitwise-identical extended slabs
-    (the BENCH_overlap gate). Ladder exhaustion raises
-    `RecoveryExhausted`.
+                              max_backoff_s: Optional[float] = None,
+                              jitter_seed: Optional[int] = None,
+                              sleeper: Callable[[float], None] = time.sleep,
+                              checkpoint_every: int = 1,
+                              checkpoint_dir=None,
+                              keep_last: int = 3,
+                              max_replays: int = 2,
+                              verify_integrity: Optional[bool] = None,
+                              guard: bool = True):
+    """`make_distributed_step` driven block-by-block with EVERY
+    `FaultPlan` kind injectable at the exchange layer, recovering
+    through the full resilience stack:
 
-    Non-stall fault kinds in the plan are recorded as skipped — this
-    driver owns only the exchange layer; slot-level faults belong to the
-    serving engine. Returns ``(u, v, w), injector`` so callers can
-    assert on `health()`.
+      * exchange_stall   — armed stalls hang the attempt; the bounded
+        retry loop (capped/jittered backoff) absorbs transients; a
+        persistent stall degrades the ladder, rebuilding the step on the
+        fallback transport and replaying the block — sound because both
+        engines assemble bitwise-identical extended slabs (the
+        BENCH_overlap gate). The ELASTIC_LADDER's final `mesh_shrink`
+        rung halves the y-shard count instead of exhausting.
+      * halo_corruption  — a band of the faulted field is damaged ON THE
+        WIRE for that block (`corrupt_halo` in the emulated engines);
+        the checksummed exchange (`verify_integrity`, default on in
+        interpret mode) flags it and the driver rolls back to the last
+        checkpoint and replays — bounded: `replayed_blocks` <=
+        `rollbacks * checkpoint_every`. On a 1-shard mesh there is no
+        wire, so the damage lands on the slab edge rows the band would
+        have been (still injected, never skipped).
+      * nan_poison       — a shard's owned rows of the faulted field are
+        poisoned before the block; the finite guard (`guard=True`,
+        host-side `isfinite` over the advanced fields — the priced
+        in-graph guard kernel belongs to the serving engine) detects it
+        after the block, and rollback + replay recovers. A PERSISTENT
+        poison re-fires on every replay; after `max_replays` replays of
+        the same block the driver raises `RecoveryExhausted` (rollback
+        cannot out-run a poisoned source — quarantining is the serving
+        tier's job).
+      * device_loss      — gather to host, rebuild a smaller mesh via
+        `launch.mesh.resize_stencil_mesh` (ny -> `reshard_to`, default
+        half), re-shard, continue; a later device_loss with a LARGER
+        `reshard_to` models device return and re-shards up. Sound
+        because the fused tiled kernel's per-tile arithmetic is
+        shard-shape independent (BENCH_recovery.json gates the
+        shrink/regrow run BITWISE against the uninterrupted one on the
+        original mesh; the jnp reference kernel re-fuses per shape and
+        only tracks to ~1 ulp).
+      * cache_evict      — drops the compiled step cache; the next block
+        re-traces (counted, bitwise-invisible).
+
+    Snapshots are taken every `checkpoint_every` blocks — in host memory
+    by default, through `training.checkpoint`'s atomic on-disk writes
+    when `checkpoint_dir` is given. Ladder exhaustion and unclearable
+    faults raise `RecoveryExhausted`. On a clean plan the result is
+    BITWISE what `make_distributed_run` produces (the regression gate:
+    the step parity alternates with the block index, it is never pinned
+    to slot 0). Returns ``(u, v, w), injector`` so callers can assert on
+    `health()`.
     """
-    from repro.stencil.distributed import make_distributed_step
+    import jax.numpy as jnp
+
+    from repro.launch import mesh as LM
+    from repro.stencil import distributed as D
+    from repro.training import checkpoint as CKPT
 
     injector = injector or FaultInjector()
-    ladder = ladder or DegradationLadder()
+    ladder = ladder or DegradationLadder(ELASTIC_LADDER)
+    if ladder.current not in D.EXCHANGES:
+        raise ValueError(f"ladder must start on an exchange rung "
+                         f"{D.EXCHANGES}, got {ladder.current!r}")
+    if checkpoint_every < 1:
+        raise ValueError(f"checkpoint_every must be >= 1, "
+                         f"got {checkpoint_every}")
+    if max_replays < 0:
+        raise ValueError(f"max_replays must be >= 0, got {max_replays}")
+    verify = interpret if verify_integrity is None else verify_integrity
 
-    def build(rung):
-        return make_distributed_step(
-            mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+    X, Y, _ = np.shape(u)
+    n_y = mesh.shape[axis]
+    n_x = mesh.shape[x_axis] if x_axis is not None else 1
+    cur_mesh = mesh
+    fields = tuple(jnp.asarray(np.asarray(f)) for f in (u, v, w))
+    rung = ladder.current
+    steps: Dict[Tuple[str, int], Callable] = {}
+
+    def build_step(rng_, parity, corrupt):
+        return D.make_distributed_step(
+            cur_mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
             local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
-            exchange=rung, dma_block_index=0)
+            exchange=rng_, dma_block_index=parity,
+            verify_integrity=verify, corrupt_halo=corrupt)
 
-    step = build(ladder.current)
-    for block in range(n_blocks):
+    def get_step(parity, corrupt):
+        if corrupt is not None:           # one-off, never cached
+            return build_step(rung, parity, corrupt)
+        key = (rung, parity)
+        if key not in steps:
+            steps[key] = build_step(rung, parity, None)
+        return steps[key]
+
+    # -- snapshot / rollback (in-memory, optionally disk-backed) ----------
+    snap: Dict[str, np.ndarray] = {}
+    snap_block = 0
+
+    def take_snapshot(b):
+        nonlocal snap, snap_block
+        snap = {"u": np.asarray(fields[0]), "v": np.asarray(fields[1]),
+                "w": np.asarray(fields[2]),
+                "block": np.int64(b), "parity": np.int64(b % 2)}
+        snap_block = b
+        if checkpoint_dir is not None:
+            CKPT.save(checkpoint_dir, snap, b, keep_last=keep_last)
+        injector.record("snapshots")
+
+    def rollback(b, reason):
+        nonlocal fields
+        arrays = snap
+        if checkpoint_dir is not None:
+            arrays, _ = CKPT.restore(checkpoint_dir, snap, step=snap_block)
+        fields = tuple(jnp.asarray(arrays[k]) for k in ("u", "v", "w"))
+        injector.record("rollbacks")
+        if b > snap_block:
+            injector.record("replayed_blocks", b - snap_block)
+        injector.note(f"block {b}: rollback to block {snap_block} "
+                      f"({reason})")
+        return snap_block
+
+    # -- fault applicators -------------------------------------------------
+    def poison_rows(flds, fi, row_lo, rows, value):
+        arr = np.array(np.asarray(flds[fi]))
+        arr[:, row_lo:row_lo + rows, :] = value
+        return tuple(jnp.asarray(arr) if j == fi else flds[j]
+                     for j in range(3))
+
+    def do_reshard(target, b, why):
+        nonlocal cur_mesh, n_y, fields
+        if Y % target:
+            raise ValueError(f"cannot re-shard to ny={target}: global "
+                             f"Y={Y} is not divisible")
+        host = tuple(np.asarray(f) for f in fields)   # gather off the mesh
+        dummy_x = x_axis if x_axis is not None else (
+            "x" if axis != "x" else "x_")
+        cur_mesh = LM.resize_stencil_mesh(n_x, target, x_axis=dummy_x,
+                                          y_axis=axis)
+        old, n_y = n_y, target
+        fields = tuple(jnp.asarray(h) for h in host)
+        steps.clear()
+        injector.clear_stalls()   # the lost transport died with the mesh
+        injector.record("reshards")
+        injector.note(f"block {b}: {why}: re-shard ny {old} -> {target}")
+
+    take_snapshot(0)
+    replays: Dict[int, int] = {}
+    block = 0
+    while block < n_blocks:
+        corrupt = None
         for idx, f in injector.due(block):
             if f.kind == "exchange_stall":
                 injector.arm_stall(idx, f)
-                injector.mark_fired(idx)
-            else:
-                injector.skip(idx, f"{f.kind} not injectable at the "
-                                   f"exchange layer")
-        while True:
+                injector.note(f"block {block}: armed stall on "
+                              f"{f.rung} x{f.stalls}")
+            elif f.kind == "cache_evict":
+                steps.clear()
+                injector.record("cache_evictions")
+                injector.note(f"block {block}: evicted the compiled "
+                              f"step cache")
+            elif f.kind == "nan_poison":
+                fi = _FIELDS.index(f.field)
+                Yl = Y // n_y
+                fields = poison_rows(fields, fi, (f.slot % n_y) * Yl, 1,
+                                     f.value())
+                injector.note(f"block {block}: poisoned {f.field} on "
+                              f"shard {f.slot % n_y} ({f.mode})")
+            elif f.kind == "halo_corruption":
+                if n_y > 1 or n_x > 1:
+                    corrupt = (_FIELDS.index(f.field), f.depth, f.value())
+                    injector.note(f"block {block}: corrupting {f.field} "
+                                  f"halo band on the wire (depth "
+                                  f"{f.depth}, {f.mode})")
+                else:
+                    # 1-shard mesh: no wire — the band IS the slab edge
+                    fields = poison_rows(fields, _FIELDS.index(f.field),
+                                         0, f.depth, f.value())
+                    injector.note(f"block {block}: 1-shard mesh, "
+                                  f"corrupted the {f.field} edge rows "
+                                  f"the band would have carried")
+            elif f.kind == "device_loss":
+                injector.record("device_losses")
+                do_reshard(f.reshard_to or max(1, n_y // 2), block,
+                           "device loss" if (f.reshard_to or 0) <= n_y
+                           else "device return")
+            injector.mark_fired(idx)
+
+        while True:                       # stall/degrade loop
+            step = get_step(block % 2, corrupt)
+
             def attempt():
-                injector.poll_stall(ladder.current)
-                return step(u, v, w)
+                injector.poll_stall(rung)
+                return step(*fields)
 
             try:
-                u, v, w = retry_with_backoff(
+                out = retry_with_backoff(
                     attempt, max_retries=max_retries, backoff_s=backoff_s,
+                    max_backoff_s=max_backoff_s, jitter_seed=jitter_seed,
                     sleeper=sleeper,
                     on_retry=lambda k, e: injector.record("retries"))
                 break
             except ExchangeStalled as e:
-                rung = ladder.degrade(str(e))       # RecoveryExhausted up
+                nxt = ladder.degrade(str(e))    # RecoveryExhausted up
                 injector.record("degradations")
                 injector.note(f"block {block}: {ladder.transitions[-1]}")
-                step = build(rung)
-    return (u, v, w), injector
+                if nxt == MESH_SHRINK:
+                    if n_y <= 1:
+                        raise RecoveryExhausted(
+                            f"mesh-shrink rung reached with ny={n_y}: "
+                            f"nothing left to shrink") from e
+                    do_reshard(max(1, n_y // 2), block, "mesh shrink")
+                    exch = [r for r in ladder.rungs if r in D.EXCHANGES]
+                    rung = exch[-1] if exch else "collective"
+                else:
+                    rung = nxt
+
+        if verify:
+            cand, flags = out[:3], out[3]
+        else:
+            cand, flags = out, None
+
+        bad = None
+        if flags is not None and int(np.sum(np.asarray(flags))) > 0:
+            bad = "halo corruption detected by band checksums"
+        elif guard and not all(bool(np.all(np.isfinite(np.asarray(f))))
+                               for f in cand):
+            bad = "non-finite field values detected"
+        if bad is not None:
+            n_rep = replays.get(block, 0) + 1
+            replays[block] = n_rep
+            if n_rep > max_replays:
+                raise RecoveryExhausted(
+                    f"block {block}: {bad} persists after {max_replays} "
+                    f"replay(s) — a persistent fault source rollback "
+                    f"cannot clear")
+            block = rollback(block, bad)
+            continue
+
+        fields = cand
+        block += 1
+        if block % checkpoint_every == 0 or block == n_blocks:
+            take_snapshot(block)
+    return tuple(fields), injector

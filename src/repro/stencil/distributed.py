@@ -108,7 +108,39 @@ EXCHANGES = ("collective", "remote_dma")
 _band_schedule = K._band_schedule
 
 
-def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
+class HaloCorrupted(RuntimeError):
+    """A verified exchange received a band whose checksum mismatched: the
+    moved bytes are not the sent bytes, so the fields downstream of the
+    exchange are untrustworthy. Raised host-side by `check_integrity`
+    (and the resilient driver) from the per-shard mismatch flags a
+    `verify_integrity=True` step/run returns; the recovery contract is
+    roll back to the last checkpoint and replay."""
+
+
+def check_integrity(flags) -> None:
+    """Raise `HaloCorrupted` if any shard's verified exchange counted a
+    band checksum mismatch. `flags` is the uint32 mismatch-count array a
+    `verify_integrity=True` step or run returns as its last output (one
+    entry per shard; a run accumulates over its blocks)."""
+    bad = int(np.sum(np.asarray(flags), dtype=np.uint64))
+    if bad:
+        raise HaloCorrupted(
+            f"{bad} halo band checksum mismatch(es) across shards; the "
+            f"exchanged fields are not trustworthy — roll back to the "
+            f"last checkpoint and replay")
+
+
+def _corrupt_band(g, dim: int, rows: int, value: float):
+    """Fault-injection hook: overwrite the leading `rows` planes/rows of a
+    RECEIVED band with `value` — damage on the wire, after the sender's
+    checksum was computed, so a verified exchange must detect it."""
+    idx = [slice(None)] * g.ndim
+    idx[dim] = slice(0, rows)
+    return g.at[tuple(idx)].set(value)
+
+
+def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1,
+                    *, integrity_out=None, corrupt=None):
     """Fetch `depth` rows (dim=1) or planes (dim=0) per side from the ring
     of shards on mesh axis `axis`. Returns (hi_from_prev, lo_from_next):
     hi = the `depth` rows just below my slab (tails of my predecessors),
@@ -123,6 +155,15 @@ def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
     independent. The ring is periodic; rows that wrap past the global
     domain carry wrong data by construction and MUST be frozen by the
     caller's global-interior mask.
+
+    Integrity (`integrity_out` a list): every band message additionally
+    carries its `kernels.advection.band_checksum` word through the SAME
+    permutation, the receiver recomputes the word over the received band,
+    and one uint32 mismatch indicator per band is appended to the list —
+    4 extra wire bytes per band (`roofline.integrity_bytes_model`),
+    fields bit-untouched. `corrupt=(rows, value)` is the fault hook:
+    damage the hop-1 received hi band AFTER the send-side checksum, as
+    wire corruption would.
     """
     L = f.shape[dim]
     hops = -(-depth // L)
@@ -138,8 +179,22 @@ def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
         fwd = [(i, (i + k) % n) for i in range(n)]
         bwd = [(i, (i - k) % n) for i in range(n)]
         # tail of the k-away predecessor -> me; head of the k-away successor
-        hi_parts.append(jax.lax.ppermute(part(f, L - cnt, L), axis, fwd))
-        lo_parts.append(jax.lax.ppermute(part(f, 0, cnt), axis, bwd))
+        hi_band, lo_band = part(f, L - cnt, L), part(f, 0, cnt)
+        hi_recv = jax.lax.ppermute(hi_band, axis, fwd)
+        lo_recv = jax.lax.ppermute(lo_band, axis, bwd)
+        if integrity_out is not None:
+            hi_ck = jax.lax.ppermute(K.band_checksum(hi_band), axis, fwd)
+            lo_ck = jax.lax.ppermute(K.band_checksum(lo_band), axis, bwd)
+        if corrupt is not None and k == 1:
+            hi_recv = _corrupt_band(hi_recv, dim, min(corrupt[0], cnt),
+                                    corrupt[1])
+        if integrity_out is not None:
+            integrity_out.append(
+                (K.band_checksum(hi_recv) != hi_ck).astype(jnp.uint32))
+            integrity_out.append(
+                (K.band_checksum(lo_recv) != lo_ck).astype(jnp.uint32))
+        hi_parts.append(hi_recv)
+        lo_parts.append(lo_recv)
     if hops == 1:
         return hi_parts[0], lo_parts[0]
     # hi: farthest predecessor first so global coordinates stay ascending
@@ -148,7 +203,8 @@ def _exchange_halos(f, axis: str, n: int, depth: int = 1, dim: int = 1):
 
 
 def _exchange_remote_dma_emulated(f, axis: str, n: int, depth: int,
-                                  dim: int):
+                                  dim: int, *, integrity_out=None,
+                                  corrupt=None):
     """Interpret-mode transport for the `remote_dma` engine: the DMA
     kernel's exact schedule — one contiguous band message per (side, hop),
     each landing at its `_band_schedule` recv-slab offset in a
@@ -159,6 +215,10 @@ def _exchange_remote_dma_emulated(f, axis: str, n: int, depth: int,
     collective one. Returns the extended slab directly (the engine owns
     its assembly, unlike `_exchange_halos`' (hi, lo) contract); the tests
     gate it bitwise-equal against the collective concatenation.
+
+    `integrity_out` / `corrupt` mean what they mean on `_exchange_halos`:
+    one checksum word rides each band message, the receiver verifies it
+    after the (optional) injected wire damage to the hop-1 hi band.
     """
     L = f.shape[dim]
 
@@ -180,10 +240,22 @@ def _exchange_remote_dma_emulated(f, axis: str, n: int, depth: int,
     for k, cnt, hi_off, lo_off in _band_schedule(L, depth):
         fwd = [(i, (i + k) % n) for i in range(n)]
         bwd = [(i, (i - k) % n) for i in range(n)]
-        ext = place(ext, jax.lax.ppermute(band(f, L - cnt, L), axis, fwd),
-                    hi_off)
-        ext = place(ext, jax.lax.ppermute(band(f, 0, cnt), axis, bwd),
-                    lo_off)
+        hi_band, lo_band = band(f, L - cnt, L), band(f, 0, cnt)
+        hi_recv = jax.lax.ppermute(hi_band, axis, fwd)
+        lo_recv = jax.lax.ppermute(lo_band, axis, bwd)
+        if integrity_out is not None:
+            hi_ck = jax.lax.ppermute(K.band_checksum(hi_band), axis, fwd)
+            lo_ck = jax.lax.ppermute(K.band_checksum(lo_band), axis, bwd)
+        if corrupt is not None and k == 1:
+            hi_recv = _corrupt_band(hi_recv, dim, min(corrupt[0], cnt),
+                                    corrupt[1])
+        if integrity_out is not None:
+            integrity_out.append(
+                (K.band_checksum(hi_recv) != hi_ck).astype(jnp.uint32))
+            integrity_out.append(
+                (K.band_checksum(lo_recv) != lo_ck).astype(jnp.uint32))
+        ext = place(ext, hi_recv, hi_off)
+        ext = place(ext, lo_recv, lo_off)
     return ext
 
 
@@ -279,15 +351,55 @@ def _check_step_config(T: int, local_kernel: str, exchange: str,
                 "for the schedule-faithful emulation.")
 
 
+def _check_integrity_config(verify_integrity: bool, corrupt_halo,
+                            exchange: str, interpret: bool) -> None:
+    """Build-time validation of the integrity layer's knobs."""
+    if exchange == "remote_dma" and not interpret:
+        if verify_integrity:
+            raise RuntimeError(
+                "verify_integrity=True rides checksum words on the "
+                "ppermute transports (collective engine and the "
+                "remote-DMA emulation); the compiled Mosaic DMA kernel "
+                "carries no checksum channel yet. Use interpret=True or "
+                "exchange='collective'.")
+        if corrupt_halo is not None:
+            raise RuntimeError(
+                "corrupt_halo injects wire damage in the ppermute "
+                "transports; the compiled Mosaic DMA kernel has no "
+                "injection hook. Use interpret=True.")
+    if corrupt_halo is not None:
+        fi, depth, _ = corrupt_halo
+        if not (0 <= int(fi) <= 2):
+            raise ValueError(f"corrupt_halo field index must be 0..2 "
+                             f"(u, v, w), got {fi}")
+        if int(depth) < 1:
+            raise ValueError(f"corrupt_halo depth must be >= 1, "
+                             f"got {depth}")
+
+
+def _flag_shape(x_axis: Optional[str]):
+    """Per-shard shape of the integrity mismatch count (out_spec puts one
+    entry per shard in the global array)."""
+    return (1,) if x_axis is None else (1, 1)
+
+
 def _build_local_block(mesh: Mesh, params: AdvectParams, *, axis: str,
                        x_axis: Optional[str], T: int, dt: float,
                        local_kernel: str, y_tile: Optional[int],
-                       interpret: bool, overlap: bool, exchange: str):
+                       interpret: bool, overlap: bool, exchange: str,
+                       verify_integrity: bool = False,
+                       corrupt_halo=None):
     """The per-shard substep-block body shared by `make_distributed_step`
     (one block, static `dma_block_index`) and `make_distributed_run`
     (K blocks, the block counter a traced `fori_loop` induction variable
     feeding the remote-DMA engine's recv-slot parity). Returns
-    ``local_block(u, v, w, block_index) -> (u, v, w)``.
+    ``local_block(u, v, w, block_index) -> (u, v, w)``, or with
+    `verify_integrity` ``-> (u, v, w, mismatch)`` where `mismatch` is the
+    shard's uint32 count of band-checksum mismatches this block
+    (`_flag_shape`-shaped so `_wrap_shard_map` can lay one per shard).
+    `corrupt_halo=(field_idx, rows, value)` injects wire damage into that
+    field's hop-1 hi band on the LAST exchanged phase (y when y is
+    decomposed, else x) — the detection path's fault hook.
     """
     n_y = mesh.shape[axis]
     n_x = mesh.shape[x_axis] if x_axis is not None else 1
@@ -331,26 +443,55 @@ def _build_local_block(mesh: Mesh, params: AdvectParams, *, axis: str,
         iy = jax.lax.axis_index(axis)
         ix = jax.lax.axis_index(x_axis) if dx else None
 
+        # ---- integrity / fault-injection plumbing: one mismatch word per
+        # verified band collects in `integrity_out`; `corrupt_halo` damage
+        # lands on the LAST exchanged phase so it survives into the slab.
+        integrity_out = [] if verify_integrity else None
+        corrupt_dim = None
+        if corrupt_halo is not None and (dx or dy):
+            corrupt_dim = 1 if dy else 0
+
         # ---- two-phase exchange: x first, then y on the x-extended slab
         # (phase 2's rows carry phase 1's corner columns — see module doc).
         # `_extend` is the engine dispatch; every engine returns the same
         # extended slab, so the corner contract is engine-independent.
         def _extend(fields, ax_name, n, dim, cid):
+            def _corrupt_for(fi):
+                if corrupt_dim != dim or fi != int(corrupt_halo[0]):
+                    return None
+                return (int(corrupt_halo[1]), corrupt_halo[2])
+
             if exchange == "remote_dma":
                 if interpret:
                     return tuple(
-                        _exchange_remote_dma_emulated(f, ax_name, n, T, dim)
-                        for f in fields)
+                        _exchange_remote_dma_emulated(
+                            f, ax_name, n, T, dim,
+                            integrity_out=integrity_out,
+                            corrupt=(_corrupt_for(fi)
+                                     if corrupt_halo is not None else None))
+                        for fi, f in enumerate(fields))
                 bands = K.halo_band_exchange_dma(
                     *fields, axis=ax_name, mesh_axes=mesh.axis_names,
                     n=n, depth=T, dim=dim, block_index=block_index,
                     collective_id=cid)
                 return tuple(jnp.concatenate([hi, f, lo], axis=dim)
                              for f, (hi, lo) in zip(fields, bands))
-            hs = [_exchange_halos(f, ax_name, n, depth=T, dim=dim)
-                  for f in fields]
+            hs = [_exchange_halos(f, ax_name, n, depth=T, dim=dim,
+                                  integrity_out=integrity_out,
+                                  corrupt=(_corrupt_for(fi)
+                                           if corrupt_halo is not None
+                                           else None))
+                  for fi, f in enumerate(fields)]
             return tuple(jnp.concatenate([h[0], f, h[1]], axis=dim)
                          for f, h in zip(fields, hs))
+
+        def _with_flag(out):
+            if not verify_integrity:
+                return out
+            mismatch = jnp.zeros((), jnp.uint32)
+            for m in (integrity_out or []):
+                mismatch = mismatch + m.reshape(())
+            return out + (mismatch.reshape(_flag_shape(x_axis)),)
 
         fields = (u, v, w)
         if dx:
@@ -371,7 +512,7 @@ def _build_local_block(mesh: Mesh, params: AdvectParams, *, axis: str,
         us, vs, ws = _substeps(*fields, x_int, y_int, y_tile)
         out = tuple(f[dx:dx + Xl, dy:dy + Yl, :] for f in (us, vs, ws))
         if not (overlap and (dx or dy)):
-            return out
+            return _with_flag(out)
 
         # ---- interior pass: owned slab only, no exchange dependence.
         # Shard-cut edges act as walls contaminating < T cells inward; the
@@ -391,24 +532,40 @@ def _build_local_block(mesh: Mesh, params: AdvectParams, *, axis: str,
         ok_y = jnp.ones((Yl,), jnp.bool_) if not dy else (
             ((iy == 0) | (sy >= T)) & ((iy == n_y - 1) | (sy < Yl - T)))
         sel = (ok_x[:, None] & ok_y[None, :])[:, :, None]
-        return tuple(jnp.where(sel, i, b) for i, b in zip(inner, out))
+        return _with_flag(tuple(jnp.where(sel, i, b)
+                                for i, b in zip(inner, out)))
 
     return local_block
 
 
 def _wrap_shard_map(local, mesh: Mesh, axis: str, x_axis: Optional[str],
-                    local_kernel: str, exchange: str, interpret: bool):
-    """jit(shard_map(local)) with the repo's spec/check_rep conventions."""
+                    local_kernel: str, exchange: str, interpret: bool,
+                    *, integrity: bool = False, n_scalars: int = 0,
+                    check_rep_off: bool = False):
+    """jit(shard_map(local)) with the repo's spec/check_rep conventions.
+
+    `integrity` appends the per-shard mismatch flag to the out_specs
+    (one `_flag_shape` entry per shard, laid out along the mesh axes);
+    `n_scalars` appends replicated scalar inputs (the run core's traced
+    block bounds); `check_rep_off` forces check_rep=False — the traced-
+    bounds `fori_loop` lowers to `while`, which has no shard_map
+    replication rule on the pinned jax.
+    """
     spec = (P(None, axis, None) if x_axis is None
             else P(x_axis, axis, None))
+    flag_spec = P(axis) if x_axis is None else P(x_axis, axis)
     # check_rep=False whenever a Pallas kernel runs per shard (the fused
     # local kernel, or the compiled remote-DMA exchange) — rationale in the
     # module docstring, documented once there.
     uses_pallas = (local_kernel == "fused"
                    or (exchange == "remote_dma" and not interpret))
-    fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
-                   out_specs=(spec, spec, spec),
-                   check_rep=not uses_pallas)
+    out_specs = (spec, spec, spec)
+    if integrity:
+        out_specs = out_specs + (flag_spec,)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(spec, spec, spec) + (P(),) * n_scalars,
+                   out_specs=out_specs,
+                   check_rep=not (uses_pallas or check_rep_off))
     return jax.jit(fn)
 
 
@@ -420,7 +577,9 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
                           interpret: bool = True,
                           overlap: bool = False,
                           exchange: str = "collective",
-                          dma_block_index: int = 0):
+                          dma_block_index: int = 0,
+                          verify_integrity: bool = False,
+                          corrupt_halo=None):
     """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
 
     `axis` is the mesh axis decomposing y. With `x_axis` the step runs on a
@@ -475,18 +634,118 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
     halo_wire_bytes_model`, identical for both engines), so bytes-on-wire
     per substep are flat in T while the exchange *count* falls as 1/T —
     latency-bound small halos amortise T×.
+
+    `verify_integrity=True` rides a `kernels.advection.band_checksum`
+    uint32 word on every band message of both ppermute transports and
+    returns a FOURTH output: the per-shard mismatch count (pass to
+    `check_integrity` to raise `HaloCorrupted`). The fields are
+    bit-untouched — the verified step is BITWISE-equal to the unchecked
+    one on clean wires, and the extra bytes are priced by
+    `roofline.integrity_bytes_model` / counted by
+    `count_integrity_bytes` (both gated in BENCH_recovery.json).
+    `corrupt_halo=(field_idx, rows, value)` is the matching fault hook:
+    wire damage to one received band, injected after the send-side
+    checksum so a verified step MUST flag it. Both knobs need the
+    ppermute transports (interpret mode or the collective engine); the
+    compiled Mosaic DMA path rejects them at build time.
     """
+    _check_integrity_config(verify_integrity, corrupt_halo, exchange,
+                            interpret)
     _check_step_config(T, local_kernel, exchange, interpret)
     local_block = _build_local_block(
         mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
         local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
-        overlap=overlap, exchange=exchange)
+        overlap=overlap, exchange=exchange,
+        verify_integrity=verify_integrity, corrupt_halo=corrupt_halo)
 
     def local(u, v, w):
         return local_block(u, v, w, dma_block_index)
 
     return _wrap_shard_map(local, mesh, axis, x_axis, local_kernel,
-                           exchange, interpret)
+                           exchange, interpret, integrity=verify_integrity)
+
+
+def _make_run_core(mesh: Mesh, params: AdvectParams, *, axis: str,
+                   x_axis: Optional[str], T: int, dt: float,
+                   local_kernel: str, y_tile: Optional[int],
+                   interpret: bool, overlap: bool, exchange: str,
+                   verify_integrity: bool):
+    """The span-generic run program: ``core(u, v, w, start, end)`` runs
+    blocks [start, end) with BOTH bounds traced, so one trace serves the
+    full run, every checkpoint interval, and every resume continuation —
+    interval boundaries never retrace and the per-block wire/integrity
+    counts stay span-independent (the trace-once gate). Traced bounds
+    lower `fori_loop` to `while`, hence `check_rep_off` (see
+    `_wrap_shard_map`). With `verify_integrity` the core returns a fourth
+    output: per-shard mismatch counts ACCUMULATED over the span.
+    """
+    _check_integrity_config(verify_integrity, None, exchange, interpret)
+    _check_step_config(T, local_kernel, exchange, interpret)
+    local_block = _build_local_block(
+        mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+        local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
+        overlap=overlap, exchange=exchange,
+        verify_integrity=verify_integrity)
+
+    def local(u, v, w, start, end):
+        if verify_integrity:
+            def body(k, carry):
+                uu, vv, ww, m = local_block(carry[0], carry[1], carry[2], k)
+                return (uu, vv, ww, carry[3] + m)
+            init = (u, v, w, jnp.zeros(_flag_shape(x_axis), jnp.uint32))
+        else:
+            def body(k, carry):
+                return local_block(*carry, k)
+            init = (u, v, w)
+        return jax.lax.fori_loop(start, end, body, init)
+
+    return _wrap_shard_map(local, mesh, axis, x_axis, local_kernel,
+                           exchange, interpret, integrity=verify_integrity,
+                           n_scalars=2, check_rep_off=True)
+
+
+def _run_state(u, v, w, block: int, flags) -> dict:
+    """The checkpoint leaf dict: sharded fields host-gathered, plus the
+    logical block index and the recv-slot parity the remote-DMA engine's
+    double buffering depends on (stored redundantly — `resume` refuses a
+    checkpoint whose parity disagrees with its block index)."""
+    state = {"u": np.asarray(u), "v": np.asarray(v), "w": np.asarray(w),
+             "block": np.int64(block), "parity": np.int64(block % 2)}
+    if flags is not None:
+        state["mismatches"] = np.asarray(flags, dtype=np.uint32)
+    return state
+
+
+def _checkpointed_segments(core, checkpoint_dir, u, v, w, *, start: int,
+                           n_blocks: int, every: int, verify: bool,
+                           flags, keep_last: int, save_initial: bool):
+    """Drive `core` over [start, n_blocks) in `every`-block segments,
+    checkpointing at each boundary (and the final block) through
+    `training.checkpoint`'s atomic writes. `flags` carries the mismatch
+    counts accumulated BEFORE `start` (restored on resume) so the
+    resumed run's flag output equals the uninterrupted run's."""
+    from repro.training import checkpoint as CKPT
+
+    if verify and flags is None:
+        raise ValueError("verify requires restored-or-zero flags")
+    if save_initial:
+        CKPT.save(checkpoint_dir, _run_state(u, v, w, start, flags),
+                  start, keep_last=keep_last)
+    b = start
+    while b < n_blocks:
+        e = min(b + every, n_blocks)
+        out = core(u, v, w, b, e)
+        if verify:
+            u, v, w, fl = out
+            flags = np.asarray(flags + np.asarray(fl), dtype=np.uint32)
+        else:
+            u, v, w = out
+        b = e
+        CKPT.save(checkpoint_dir, _run_state(u, v, w, b, flags), b,
+                  keep_last=keep_last)
+    if verify:
+        return u, v, w, jnp.asarray(flags)
+    return u, v, w
 
 
 def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
@@ -497,8 +756,12 @@ def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
                          y_tile: Optional[int] = None,
                          interpret: bool = True,
                          overlap: bool = False,
-                         exchange: str = "collective"):
-    """Returns jit(run): `n_blocks` substep-blocks (n_blocks * T Euler
+                         exchange: str = "collective",
+                         verify_integrity: bool = False,
+                         checkpoint_every: Optional[int] = None,
+                         checkpoint_dir=None,
+                         keep_last: int = 3):
+    """Returns run(u, v, w): `n_blocks` substep-blocks (n_blocks * T Euler
     substeps, ONE depth-T exchange per block) in ONE traced program — the
     pipelined multi-block driver the remote-DMA engine's double-buffered
     recv slabs exist for.
@@ -510,7 +773,9 @@ def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
     the kernel), so alternating parity across blocks costs NO retrace or
     recompile — the step body appears exactly once in the jaxpr for any
     `n_blocks`, and block k+1's bands always have a vacant recv slot to
-    land in while block k's interior pass computes.
+    land in while block k's interior pass computes. The loop BOUNDS are
+    traced too (`_make_run_core`), so the checkpointing driver below runs
+    every interval through the same single trace.
     `roofline.pipeline_efficiency_model` prices that INTENDED schedule
     (one fill block, steady-state hidden fraction); scope honesty: the
     traced body still orders exchange before compute within a block, so
@@ -522,23 +787,129 @@ def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
     `make_distributed_step` calls with `dma_block_index = 0..K-1` —
     bitwise, the acceptance gate.
 
+    `verify_integrity` adds the checksummed exchange of
+    `make_distributed_step` to every block; the run returns a fourth
+    output accumulating the per-shard mismatch counts over all blocks.
+
+    `checkpoint_every=k` with `checkpoint_dir=` turns the returned run
+    into a host-side driver that snapshots the sharded (u, v, w) plus the
+    logical block index and recv-slot parity through
+    `training.checkpoint`'s atomic writes at every k-block boundary (and
+    block 0 and the final block), `keep_last` bounding disk. A run killed
+    mid-way resumes via `resume_distributed_run` BITWISE-equal to the
+    uninterrupted run (the BENCH_recovery.json gate) because every
+    segment replays through the same traced core with the restored block
+    index feeding the recv-slot parity. Without checkpointing the
+    returned run is a pure jitted program (traceable — the byte-counting
+    gates `jax.make_jaxpr` it).
+
     All other arguments mean what they mean on `make_distributed_step`.
     """
     if n_blocks < 1:
         raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
-    _check_step_config(T, local_kernel, exchange, interpret)
-    local_block = _build_local_block(
+    if (checkpoint_every is None) != (checkpoint_dir is None):
+        raise ValueError("checkpoint_every and checkpoint_dir come "
+                         "together: both or neither")
+    core = _make_run_core(
         mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
         local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
-        overlap=overlap, exchange=exchange)
+        overlap=overlap, exchange=exchange,
+        verify_integrity=verify_integrity)
 
-    def local(u, v, w):
-        def body(k, carry):
-            return local_block(*carry, k)
-        return jax.lax.fori_loop(0, n_blocks, body, (u, v, w))
+    if checkpoint_every is None:
+        def run(u, v, w):
+            return core(u, v, w, 0, n_blocks)
+        return run
 
-    return _wrap_shard_map(local, mesh, axis, x_axis, local_kernel,
-                           exchange, interpret)
+    if checkpoint_every < 1:
+        raise ValueError(f"checkpoint_every must be >= 1, "
+                         f"got {checkpoint_every}")
+    flag0 = (np.zeros(_global_flag_shape(mesh, axis, x_axis), np.uint32)
+             if verify_integrity else None)
+
+    def run_ck(u, v, w):
+        return _checkpointed_segments(
+            core, checkpoint_dir, u, v, w, start=0, n_blocks=n_blocks,
+            every=checkpoint_every, verify=verify_integrity, flags=flag0,
+            keep_last=keep_last, save_initial=True)
+    return run_ck
+
+
+def _global_flag_shape(mesh: Mesh, axis: str, x_axis: Optional[str]):
+    return ((mesh.shape[axis],) if x_axis is None
+            else (mesh.shape[x_axis], mesh.shape[axis]))
+
+
+def resume_distributed_run(mesh: Mesh, params: AdvectParams, u, v, w, *,
+                           n_blocks: int, checkpoint_dir,
+                           checkpoint_every: Optional[int] = None,
+                           step: Optional[int] = None,
+                           axis: str = "data",
+                           x_axis: Optional[str] = None,
+                           T: int = 1, dt: float = 1.0,
+                           local_kernel: str = "reference",
+                           y_tile: Optional[int] = None,
+                           interpret: bool = True,
+                           overlap: bool = False,
+                           exchange: str = "collective",
+                           verify_integrity: bool = False,
+                           keep_last: int = 3):
+    """Restore the latest (or `step=`) checkpoint a checkpointing
+    `make_distributed_run` wrote under `checkpoint_dir` and continue to
+    `n_blocks`, returning what the uninterrupted run would have —
+    BITWISE (the BENCH_recovery.json gate): the restored block index
+    feeds the recv-slot parity through the same traced core, so replayed
+    intervals are the intervals the dead run would have executed.
+
+    (u, v, w) are templates for structure/dtype only — their VALUES are
+    replaced by the restored snapshot (restoring from the block-0
+    checkpoint replays the whole run). `checkpoint_every=None` continues
+    in one segment, still writing the final checkpoint. A checkpoint
+    whose stored recv-slot parity disagrees with its block index (or
+    whose manifest step disagrees with the stored block) is refused with
+    a ValueError naming the inconsistency rather than resumed into a
+    silently wrong parity. Build arguments must match the original run's.
+    """
+    from repro.training import checkpoint as CKPT
+
+    if n_blocks < 1:
+        raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+    core = _make_run_core(
+        mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+        local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
+        overlap=overlap, exchange=exchange,
+        verify_integrity=verify_integrity)
+    like = _run_state(u, v, w, 0,
+                      np.zeros(_global_flag_shape(mesh, axis, x_axis),
+                               np.uint32) if verify_integrity else None)
+    state, disk_step = CKPT.restore(checkpoint_dir, like, step=step)
+    block = int(state["block"])
+    parity = int(state["parity"])
+    if parity != block % 2:
+        raise ValueError(
+            f"checkpoint step {disk_step} under {checkpoint_dir} is "
+            f"inconsistent: stored recv-slot parity {parity} != block "
+            f"{block} % 2; refusing to resume into a wrong DMA slot")
+    if disk_step != block:
+        raise ValueError(
+            f"checkpoint step {disk_step} under {checkpoint_dir} stores "
+            f"block index {block}; refusing to resume an inconsistent "
+            f"snapshot")
+    u, v, w = (jnp.asarray(state["u"]), jnp.asarray(state["v"]),
+               jnp.asarray(state["w"]))
+    flags = (np.asarray(state["mismatches"], dtype=np.uint32)
+             if verify_integrity else None)
+    if block >= n_blocks:
+        if verify_integrity:
+            return u, v, w, jnp.asarray(flags)
+        return u, v, w
+    every = checkpoint_every if checkpoint_every else n_blocks - block
+    if every < 1:
+        raise ValueError(f"checkpoint_every must be >= 1, got {every}")
+    return _checkpointed_segments(
+        core, checkpoint_dir, u, v, w, start=block, n_blocks=n_blocks,
+        every=every, verify=verify_integrity, flags=flags,
+        keep_last=keep_last, save_initial=False)
 
 
 def _iter_jaxprs(val):
@@ -552,27 +923,10 @@ def _iter_jaxprs(val):
             yield from _iter_jaxprs(v)
 
 
-def count_exchange_wire_bytes(fn, *args) -> int:
-    """Per-shard bytes `fn` puts on the wire: the summed operand sizes of
-    every `ppermute` in its (recursively walked) jaxpr.
-
-    Inside `shard_map` tracing shapes are per-shard, so each ppermute
-    operand is exactly one shard's send buffer. This covers BOTH interpret
-    engines — the collective exchange and the remote-DMA emulation, whose
-    band messages are one ppermute operand each. The compiled remote-DMA
-    kernel's transfers live inside a `pallas_call` and are priced instead
-    by `remote_dma_schedule_wire_bytes` (the same `_band_schedule` message
-    sizes the kernel issues), which the overlap tests pin to
-    `roofline.halo_wire_bytes_model` exactly. This function is the
-    measured counterpart of that model; the scaling2d and overlap
-    benchmarks gate the two against each other exactly.
-
-    On a `make_distributed_run` program the `fori_loop` body jaxpr is
-    walked ONCE, so the count is the PER-BLOCK wire bytes independent of
-    `n_blocks` — which is itself the pipeline benchmark's trace-once
-    gate: a driver that unrolled or retraced per block would count K
-    times the model.
-    """
+def _count_ppermute_bytes(fn, args, keep) -> int:
+    """Summed sizes of the ppermute operands selected by `keep(aval)` in
+    `fn`'s recursively walked jaxpr (shared by the wire and integrity
+    counters — the two partition the ppermute traffic by rank)."""
     closed = jax.make_jaxpr(fn)(*args)
     total = 0
 
@@ -582,13 +936,60 @@ def count_exchange_wire_bytes(fn, *args) -> int:
             if eqn.primitive.name == "ppermute":
                 for var in eqn.invars:
                     aval = var.aval
-                    total += int(np.prod(aval.shape)) * aval.dtype.itemsize
+                    if keep(aval):
+                        total += (int(np.prod(aval.shape))
+                                  * aval.dtype.itemsize)
             for pval in eqn.params.values():
                 for sub in _iter_jaxprs(pval):
                     walk(sub)
 
     walk(closed.jaxpr)
     return total
+
+
+def count_exchange_wire_bytes(fn, *args) -> int:
+    """Per-shard FIELD bytes `fn` puts on the wire: the summed sizes of
+    every rank >= 3 `ppermute` operand in its (recursively walked) jaxpr.
+
+    Inside `shard_map` tracing shapes are per-shard, so each ppermute
+    operand is exactly one shard's send buffer. This covers BOTH interpret
+    engines — the collective exchange and the remote-DMA emulation, whose
+    band messages are one ppermute operand each. Rank >= 3 selects
+    exactly the (x, y, z) band payloads; the rank-1 uint32 checksum words
+    a `verify_integrity=True` program additionally permutes are counted
+    by `count_integrity_bytes` instead, so THIS count is identical with
+    verification on or off — itself a BENCH_recovery.json gate (the
+    integrity layer may not change what the band model prices). The
+    compiled remote-DMA kernel's transfers live inside a `pallas_call`
+    and are priced instead by `remote_dma_schedule_wire_bytes` (the same
+    `_band_schedule` message sizes the kernel issues), which the overlap
+    tests pin to `roofline.halo_wire_bytes_model` exactly. This function
+    is the measured counterpart of that model; the scaling2d and overlap
+    benchmarks gate the two against each other exactly.
+
+    On a `make_distributed_run` program the `fori_loop` body jaxpr is
+    walked ONCE, so the count is the PER-BLOCK wire bytes independent of
+    `n_blocks` — which is itself the pipeline benchmark's trace-once
+    gate: a driver that unrolled or retraced per block would count K
+    times the model.
+    """
+    return _count_ppermute_bytes(fn, args,
+                                 lambda aval: getattr(aval, "ndim", 0) >= 3)
+
+
+def count_integrity_bytes(fn, *args) -> int:
+    """Per-shard CHECKSUM bytes `fn` puts on the wire: the summed sizes
+    of every rank < 3 `ppermute` operand in its (recursively walked)
+    jaxpr — the `(1,)`-shaped uint32 `band_checksum` words the verified
+    exchange rides on each band message, and nothing else (field bands
+    are rank 3; `count_exchange_wire_bytes` owns them). Zero on an
+    unverified program. The measured counterpart of
+    `roofline.integrity_bytes_model`; BENCH_recovery.json gates the two
+    equal EXACTLY, per block even on a `make_distributed_run` program
+    (the fori body is walked once — same trace-once argument as the wire
+    count)."""
+    return _count_ppermute_bytes(fn, args,
+                                 lambda aval: getattr(aval, "ndim", 0) < 3)
 
 
 def count_pallas_hbm_bytes(fn, *args) -> int:

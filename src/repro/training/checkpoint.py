@@ -117,35 +117,76 @@ class AsyncCheckpointer:
                 raise self.last_error
 
 
+class CheckpointCorrupted(RuntimeError):
+    """A checkpoint on disk is unreadable (truncated write, damaged
+    archive, missing file). The message always names the offending path;
+    callers fall back to an earlier step or fail loudly — never a raw
+    unpickling traceback."""
+
+
+def _is_complete(d: Path) -> bool:
+    """A checkpoint directory is complete once BOTH files the atomic
+    rename published exist; anything else (a partial copy, a crashed
+    foreign writer) is ignored by `latest_step`."""
+    return (d / "manifest.json").exists() and (d / "arrays.npz").exists()
+
+
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
-    p = Path(ckpt_dir) / "LATEST"
-    if not p.exists():
+    """Newest COMPLETE checkpoint step, or None. Prefers the LATEST
+    pointer; a stale/partial target (e.g. a directory some other writer
+    left without its arrays.npz) falls back to scanning the complete
+    `step_*` directories — `.tmp_*` staging dirs are never candidates."""
+    ckpt_dir = Path(ckpt_dir)
+    p = ckpt_dir / "LATEST"
+    if p.exists():
+        name = p.read_text().strip()
+        if _is_complete(ckpt_dir / name):
+            return int(name.split("_")[1])
+    steps = sorted(d for d in ckpt_dir.glob("step_*")
+                   if d.is_dir() and _is_complete(d))
+    if not steps:
         return None
-    name = p.read_text().strip()
-    if not (Path(ckpt_dir) / name / "manifest.json").exists():
-        return None
-    return int(name.split("_")[1])
+    return int(steps[-1].name.split("_")[1])
 
 
 def restore(ckpt_dir: str | Path, like_state: Dict[str, Any], *,
             step: Optional[int] = None, cfg: Optional[ArchConfig] = None,
             layout=None) -> Tuple[Dict[str, Any], int]:
-    """Restore into the structure of `like_state` (elastic: any TP layout)."""
+    """Restore into the structure of `like_state` (elastic: any TP layout).
+
+    A truncated or otherwise damaged checkpoint raises
+    `CheckpointCorrupted` naming the path (np.load on a torn npz throws
+    anything from BadZipFile to EOFError depending on where the write
+    died — all normalised here); a checkpoint that simply is not there
+    raises FileNotFoundError.
+    """
     ckpt_dir = Path(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     d = ckpt_dir / f"step_{step:09d}"
-    data = np.load(d / "arrays.npz")
+    npz = d / "arrays.npz"
+    if not npz.exists():
+        raise FileNotFoundError(f"checkpoint step {step}: no arrays file "
+                                f"at {npz}")
     keys = [k for k, _ in _flatten_with_paths(like_state)]
     flat_like, tdef = jax.tree_util.tree_flatten(like_state)
-    stored_keys = set(data.files)
     vals = []
-    for k, leaf in zip(keys, flat_like):
-        if k not in stored_keys:
-            raise KeyError(f"checkpoint missing leaf {k}")
-        vals.append(np.asarray(data[k]))
+    try:
+        data = np.load(npz, allow_pickle=False)
+        stored_keys = set(data.files)
+        for k, leaf in zip(keys, flat_like):
+            if k not in stored_keys:
+                raise KeyError(f"checkpoint missing leaf {k}")
+            vals.append(np.asarray(data[k]))
+    except (KeyError, FileNotFoundError):
+        raise
+    except Exception as e:   # torn npz: BadZipFile / EOFError / OSError / ...
+        raise CheckpointCorrupted(
+            f"checkpoint archive {npz} is unreadable "
+            f"({type(e).__name__}: {e}); the write was likely truncated — "
+            f"restore an earlier step") from e
     state = jax.tree_util.tree_unflatten(tdef, vals)
     if cfg is not None and layout is not None:
         state = {**state, "params": R.from_logical(state["params"], cfg, layout)}

@@ -58,6 +58,50 @@ def test_corrupt_tmp_never_visible(tmp_path):
     assert step == 3
 
 
+def test_truncated_checkpoint_raises_corrupted_naming_path(tmp_path):
+    """A torn arrays.npz (half-written before a crash) must surface as
+    CheckpointCorrupted naming the path — never a raw zipfile/EOF
+    traceback the on-call has to reverse-engineer."""
+    state = {"x": np.arange(12, dtype=np.float32)}
+    CKPT.save(tmp_path, state, 4)
+    npz = tmp_path / "step_000000004" / "arrays.npz"
+    blob = npz.read_bytes()
+    npz.write_bytes(blob[:len(blob) // 2])        # simulate a torn write
+    with pytest.raises(CKPT.CheckpointCorrupted, match="truncated") as ei:
+        CKPT.restore(tmp_path, state)
+    assert str(npz) in str(ei.value)
+
+    # a checkpoint missing its arrays file entirely: FileNotFoundError
+    # naming the path (it is absent, not damaged)
+    npz.unlink()
+    with pytest.raises(FileNotFoundError, match="arrays"):
+        CKPT.restore(tmp_path, state, step=4)
+
+
+def test_latest_step_ignores_partial_writes(tmp_path):
+    """`latest_step` only ever returns COMPLETE checkpoints: a foreign
+    step_* directory without both published files is skipped, and a
+    stale LATEST pointer at such a directory falls back to the newest
+    complete step instead of None."""
+    state = {"x": np.arange(4, dtype=np.float32)}
+    CKPT.save(tmp_path, state, 2)
+    # a partial copy: directory exists, manifest only (no arrays.npz)
+    partial = tmp_path / "step_000000008"
+    partial.mkdir()
+    (partial / "manifest.json").write_text("{}")
+    assert CKPT.latest_step(tmp_path) == 2
+    # point LATEST at the partial dir: scan fallback still finds step 2
+    (tmp_path / "LATEST").write_text(partial.name)
+    assert CKPT.latest_step(tmp_path) == 2
+    restored, step = CKPT.restore(tmp_path, state)
+    assert step == 2
+    np.testing.assert_array_equal(restored["x"], state["x"])
+    # nothing complete at all -> None
+    import shutil
+    shutil.rmtree(tmp_path / "step_000000002")
+    assert CKPT.latest_step(tmp_path) is None
+
+
 def test_elastic_restore_across_tp(tmp_path):
     """Save under tp=1, restore under tp=4 (padded heads): loss identical."""
     cfg = tiny_cfg()

@@ -31,15 +31,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _prop import given, settings, st
 from repro.core import roofline as R
 from repro.core.dataflow import Pipeline, Stage
 from repro.kernels.advection.advection import (advect_fused,
                                                advect_fused_batched,
                                                finite_guard)
 from repro.kernels.advection.ref import default_params
-from repro.serving.faults import (DEFAULT_LADDER, DegradationLadder,
-                                  ExchangeStalled, Fault, FaultInjector,
-                                  FaultPlan, RecoveryExhausted,
+from repro.serving.faults import (DEFAULT_LADDER, FAULT_KINDS,
+                                  DegradationLadder, ExchangeStalled, Fault,
+                                  FaultInjector, FaultPlan,
+                                  RecoveryExhausted,
                                   resilient_distributed_run,
                                   retry_with_backoff)
 from repro.serving.slots import SlotManager
@@ -443,14 +445,18 @@ def test_resilient_distributed_run_degrades_bitwise():
         cu, cv, cw = step(*(jnp.asarray(a) for a in (cu, cv, cw)))
 
     inj = FaultInjector(FaultPlan.parse(
-        "exchange_stall@1:stalls=5,rung=remote_dma;nan_poison@2"))
+        "exchange_stall@1:stalls=5,rung=remote_dma;"
+        "nan_poison@2:persistent=false"))
     (ru, rv, rw), inj = resilient_distributed_run(
         mesh, p, jnp.asarray(uu), jnp.asarray(vv), jnp.asarray(ww),
         n_blocks=3, T=1, dt=DT, injector=inj,
         ladder=DegradationLadder(start="remote_dma"), max_retries=1)
     h = inj.health()
     assert h["retries"] == 1 and h["degradations"] == 1
-    assert h["faults_skipped"] == 1           # nan_poison: not this layer
+    # nan_poison is injected at the exchange layer now: the guard detects
+    # the non-finite rows and the block replays clean from its snapshot
+    assert h["faults_skipped"] == 0 and h["faults_injected"] == 2
+    assert h["rollbacks"] == 1 and h["snapshots"] >= 1
     for got, ref in ((ru, cu), (rv, cv), (rw, cw)):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
@@ -462,6 +468,138 @@ def test_resilient_distributed_run_degrades_bitwise():
             injector=FaultInjector(FaultPlan.parse(
                 "exchange_stall@0:stalls=9,rung=collective")),
             ladder=DegradationLadder(start="collective"))
+
+
+def _one_shard_setup(seed=3):
+    from repro.launch.mesh import compat_make_mesh
+    from repro.stencil.distributed import make_distributed_step
+
+    Xd, Yd, Zd = 6, 20, 12
+    u, v, w = stratus_fields(Xd, Yd, Zd, seed=seed)
+    p = default_params(Zd)
+    mesh = compat_make_mesh((1,), ("data",))
+    uu, vv, ww = (np.asarray(a) for a in (u, v, w))
+    step = make_distributed_step(mesh, p, T=1, dt=DT)
+    cu, cv, cw = uu, vv, ww
+    for _ in range(3):
+        cu, cv, cw = step(*(jnp.asarray(a) for a in (cu, cv, cw)))
+    return mesh, p, (uu, vv, ww), (cu, cv, cw)
+
+
+def test_resilient_run_persistent_poison_exhausts_replays():
+    mesh, p, (uu, vv, ww), _ = _one_shard_setup()
+    inj = FaultInjector(FaultPlan.parse("nan_poison@1"))  # persistent
+    with pytest.raises(RecoveryExhausted, match="persists after"):
+        resilient_distributed_run(
+            mesh, p, jnp.asarray(uu), jnp.asarray(vv), jnp.asarray(ww),
+            n_blocks=3, T=1, dt=DT, injector=inj, max_replays=2)
+    h = inj.health()
+    assert h["rollbacks"] == 2 and h["faults_injected"] == 3
+
+
+def test_resilient_run_all_kinds_on_one_shard_bitwise(tmp_path):
+    """Every FAULT_KINDS member is applied (never skipped) at the
+    exchange layer, even on a 1-shard mesh where halo_corruption
+    degenerates to an edge-row poison; disk-backed snapshots make the
+    rollbacks atomic on-disk, and the final fields are bitwise-equal to
+    the clean run."""
+    mesh, p, (uu, vv, ww), (cu, cv, cw) = _one_shard_setup()
+    inj = FaultInjector(FaultPlan.parse(
+        "halo_corruption@0;nan_poison@1:persistent=false;"
+        "cache_evict@1;device_loss@2:reshard_to=1;"
+        "exchange_stall@2:stalls=1,rung=remote_dma"))
+    (ru, rv, rw), inj = resilient_distributed_run(
+        mesh, p, jnp.asarray(uu), jnp.asarray(vv), jnp.asarray(ww),
+        n_blocks=3, T=1, dt=DT, injector=inj,
+        ladder=DegradationLadder(start="remote_dma"),
+        checkpoint_dir=str(tmp_path), max_retries=2)
+    h = inj.health()
+    assert h["faults_injected"] == 5 and h["faults_skipped"] == 0
+    assert h["rollbacks"] == 2        # halo_corruption + nan_poison
+    assert h["cache_evictions"] == 1 and h["reshards"] == 1
+    assert h["device_losses"] == 1 and h["retries"] == 1
+    for got, ref in ((ru, cu), (rv, cv), (rw, cw)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_retry_with_backoff_cap_and_jitter():
+    def make_flaky(n):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] <= n:
+                raise ExchangeStalled("transient")
+            return "ok"
+
+        return flaky
+
+    sleeps = []
+    assert retry_with_backoff(make_flaky(4), max_retries=5, backoff_s=0.1,
+                              max_backoff_s=0.25,
+                              sleeper=sleeps.append) == "ok"
+    assert sleeps == [0.1, 0.2, 0.25, 0.25]     # capped, never unbounded
+
+    seqs = []
+    for _ in range(2):
+        sleeps = []
+        retry_with_backoff(make_flaky(3), max_retries=4, backoff_s=0.1,
+                           jitter_seed=7, sleeper=sleeps.append)
+        seqs.append(sleeps)
+    assert seqs[0] == seqs[1]                   # seeded jitter: determinism
+    rng = np.random.default_rng(7)
+    expect = [0.1 * 2 ** k * (0.5 + 0.5 * float(rng.random()))
+              for k in range(3)]
+    assert seqs[0] == expect
+    for k, s in enumerate(seqs[0]):             # jitter stays in [1/2, 1]x
+        assert 0.05 * 2 ** k <= s <= 0.1 * 2 ** k
+
+    with pytest.raises(ValueError, match="max_backoff_s"):
+        retry_with_backoff(make_flaky(0), max_backoff_s=-1.0)
+
+
+# -- FaultPlan property tests (hypothesis via the _prop shim) ---------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_fault_plan_random_roundtrips_for_any_seed(seed):
+    plan = FaultPlan.random(seed, n_steps=7, batch=4, n_faults=5,
+                            kinds=FAULT_KINDS)
+    assert FaultPlan.parse(plan.describe()).describe() == plan.describe()
+    assert all(f.kind in FAULT_KINDS for f in plan.faults)
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=st.sampled_from(FAULT_KINDS),
+       at_step=st.integers(min_value=0, max_value=99),
+       slot=st.integers(min_value=0, max_value=7),
+       field=st.sampled_from(("u", "v", "w")),
+       mode=st.sampled_from(("nan", "inf")),
+       depth=st.integers(min_value=1, max_value=4),
+       persistent=st.booleans())
+def test_fault_describe_parse_roundtrip_all_kinds(kind, at_step, slot,
+                                                  field, mode, depth,
+                                                  persistent):
+    f = Fault(kind=kind, at_step=at_step, slot=slot, field=field,
+              mode=mode, depth=depth, persistent=persistent)
+    plan = FaultPlan(faults=(f,))
+    back = FaultPlan.parse(plan.describe())
+    assert back.faults == plan.faults
+    assert back.describe() == plan.describe()
+
+
+@pytest.mark.parametrize("spec,token", [
+    ("nan_poison", "nan_poison"),                   # missing @step
+    ("nan_poison@soon", "'soon'"),                  # non-integer step
+    ("nan_poison@1:slot", "'slot'"),                # option without =
+    ("nan_poison@1:turbo=3", "'turbo'"),            # unknown key
+    ("nan_poison@1:slot=much", "'much'"),           # bad value
+    ("warp_core_breach@1", "warp_core_breach"),     # unknown kind
+])
+def test_fault_plan_parse_malformed_names_offending_token(spec, token):
+    with pytest.raises(ValueError, match="expected|unknown|bad fault") as ei:
+        FaultPlan.parse(spec)
+    assert token in str(ei.value)
 
 
 # -- the dataflow leak fix (core/dataflow.py) ------------------------------
