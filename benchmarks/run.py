@@ -22,13 +22,14 @@ def main() -> None:
                             fig5_scaling, fig7_compare, fig8_gridsize,
                             fig9_fusion, overlap_sweep, pipeline_sweep,
                             roofline_table, scaling2d_sweep, serving_sweep,
-                            tiling_sweep)
+                            stencil_sweep, tiling_sweep)
     common.header()
     failures = []
     for mod in (fig3_ladder, fig5_scaling, fig7_compare, fig8_gridsize,
                 fig9_fusion, tiling_sweep, scaling2d_sweep, overlap_sweep,
                 pipeline_sweep, serving_sweep, fault_sweep,
-                fault_recovery_sweep, dma_overlap, roofline_table):
+                fault_recovery_sweep, stencil_sweep, dma_overlap,
+                roofline_table):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

@@ -329,14 +329,15 @@ GUARD_FLAG_ITEMSIZE = 4   # the finite-guard flag output is f32
 
 
 def guard_bytes_model(X: int, Y: int, Z: int, *, batch: int = 1,
-                      itemsize: int = 4) -> int:
+                      itemsize: int = 4, n_fields: int = 3) -> int:
     """Extra HBM bytes of the serving tier's finite-guard pass.
 
     The guard (``advect_fused(..., guard=True)`` /
     ``kernels.advection.finite_guard``) is a separate pallas pass over
-    the three ADVANCED fields: it re-reads ``3 * X * Y * Z`` field words
-    and writes ``X`` f32 flag words per slot, `batch` slots per
-    mega-launch. Detection is deliberately NOT fused into the advection
+    the ADVANCED fields (`n_fields` of them — 3 for the hand-written
+    advection ladder, `spec.n_fields` for a stencil-spec operator): it
+    re-reads ``n_fields * X * Y * Z`` field words and writes ``X`` f32
+    flag words per slot, `batch` slots per mega-launch. Detection is deliberately NOT fused into the advection
     kernel — an in-loop `isfinite` probe perturbs the fused loop body's
     float contraction by one ulp, breaking the engine's bitwise
     contracts — so its price is this honest extra read pass: exactly
@@ -353,15 +354,18 @@ def guard_bytes_model(X: int, Y: int, Z: int, *, batch: int = 1,
         raise ValueError(f"batch must be >= 1, got {batch}")
     if min(X, Y, Z) < 1:
         raise ValueError(f"extents must be >= 1, got {(X, Y, Z)}")
-    return batch * (3 * X * Y * Z * itemsize + X * GUARD_FLAG_ITEMSIZE)
+    if n_fields < 1:
+        raise ValueError(f"n_fields must be >= 1, got {n_fields}")
+    return batch * (n_fields * X * Y * Z * itemsize
+                    + X * GUARD_FLAG_ITEMSIZE)
 
 
 INTEGRITY_WORD_ITEMSIZE = 4   # band checksums are one uint32 word each
 
 
 def integrity_bytes_model(X: int, Y: int, Z: int, *, nx: int = 1,
-                          ny: int = 1, T: int = 1,
-                          n_fields: int = 3) -> int:
+                          ny: int = 1, T: int = 1, n_fields: int = 3,
+                          depth: int | None = None) -> int:
     """Per-shard EXTRA wire bytes of the checksummed (verified) exchange.
 
     The integrity layer (`stencil.distributed.make_distributed_step(...,
@@ -369,8 +373,10 @@ def integrity_bytes_model(X: int, Y: int, Z: int, *, nx: int = 1,
     (`kernels.advection.band_checksum`) on every `_band_schedule` band
     message: per decomposed axis, per field, per hop, per side — so the
     extra traffic is ``2 * n_fields * (hops_x + hops_y)`` words of
-    `INTEGRITY_WORD_ITEMSIZE` bytes, where ``hops_a = ceil(T / local
-    extent)`` on a decomposed axis and 0 on an undecomposed one. Unlike
+    `INTEGRITY_WORD_ITEMSIZE` bytes, where ``hops_a = ceil(depth / local
+    extent)`` on a decomposed axis and 0 on an undecomposed one (`depth`
+    defaults to T — the hand-written advection ladder's exchange depth;
+    a stencil-spec operator passes `depth=spec.halo(T)`). Unlike
     `halo_wire_bytes_model` the cost is hop-count DEPENDENT (each hop
     carries its own word) but payload-size independent — the whole point:
     verifying a depth-T band costs 4 bytes on the wire, not 2x the band.
@@ -388,9 +394,12 @@ def integrity_bytes_model(X: int, Y: int, Z: int, *, nx: int = 1,
     if X % nx or Y % ny:
         raise ValueError(f"grid ({X}, {Y}) not divisible by mesh "
                          f"({nx}, {ny}); shard_map requires even shards")
+    D = T if depth is None else depth
+    if D < 1:
+        raise ValueError(f"depth must be >= 1, got {D}")
     Xl, Yl = X // nx, Y // ny
-    hops_x = -(-T // Xl) if nx > 1 else 0
-    hops_y = -(-T // Yl) if ny > 1 else 0
+    hops_x = -(-D // Xl) if nx > 1 else 0
+    hops_y = -(-D // Yl) if ny > 1 else 0
     return 2 * n_fields * (hops_x + hops_y) * INTEGRITY_WORD_ITEMSIZE
 
 
@@ -415,21 +424,25 @@ def stencil_tiling_bytes_factor(Y: int, y_tile: Optional[int], halo: int,
 
 def halo_wire_bytes_model(X: int, Y: int, Z: int, itemsize: int, *,
                           nx: int = 1, ny: int = 1, T: int = 1,
-                          n_fields: int = 3) -> int:
-    """Per-shard bytes SENT on the wire for ONE depth-T halo exchange of
-    the 2D (nx, ny)-decomposed stencil step (one exchange per T substeps).
+                          n_fields: int = 3,
+                          depth: int | None = None) -> int:
+    """Per-shard bytes SENT on the wire for ONE depth-`depth` halo exchange
+    of the 2D (nx, ny)-decomposed stencil step (one exchange per T
+    substeps; `depth` defaults to T — the hand-written advection ladder,
+    radius 1, one stage. A stencil-spec operator passes
+    ``depth=spec.halo(T)`` and ``n_fields=spec.n_fields``).
 
     The exchange is two-phase, x-then-y (`stencil.distributed.
-    make_distributed_step`): phase 1 trades ``2 * T * (Y/ny) * Z`` x-planes
-    of the raw shard along the x ring; phase 2 trades ``2 * T *
-    (X/nx + 2T) * Z`` y-rows of the x-EXTENDED slab — the extra ``2T``
-    columns are the four corner blocks riding phase 2, so no diagonal
-    sends exist to price. An undecomposed axis (nx==1 / ny==1) moves
-    nothing. Multi-hop depth-T exchanges send the same byte total (hop k
-    carries the k-away neighbour's share), so the model is hop-count
-    independent; `stencil.distributed.count_exchange_wire_bytes` counts
-    the implementation's actual ppermute operands and the scaling2d
-    benchmark gates the two against each other exactly.
+    make_distributed_step`): phase 1 trades ``2 * depth * (Y/ny) * Z``
+    x-planes of the raw shard along the x ring; phase 2 trades ``2 *
+    depth * (X/nx + 2*depth) * Z`` y-rows of the x-EXTENDED slab — the
+    extra ``2*depth`` columns are the four corner blocks riding phase 2,
+    so no diagonal sends exist to price. An undecomposed axis (nx==1 /
+    ny==1) moves nothing. Multi-hop exchanges send the same byte total
+    (hop k carries the k-away neighbour's share), so the model is
+    hop-count independent; `stencil.distributed.count_exchange_wire_bytes`
+    counts the implementation's actual ppermute operands and the
+    scaling2d/stencil benchmarks gate the two against each other exactly.
 
     Feeds ``RooflineTerms.ici_wire_bytes`` -> ``collective_s``: divide a
     step's wire bytes by T for the per-substep collective term.
@@ -441,10 +454,13 @@ def halo_wire_bytes_model(X: int, Y: int, Z: int, itemsize: int, *,
     if X % nx or Y % ny:
         raise ValueError(f"grid ({X}, {Y}) not divisible by mesh "
                          f"({nx}, {ny}); shard_map requires even shards")
+    D = T if depth is None else depth
+    if D < 1:
+        raise ValueError(f"depth must be >= 1, got {D}")
     Xl, Yl = X // nx, Y // ny
-    phase_x = 2 * T * Yl * Z if nx > 1 else 0
-    x_ext = Xl + (2 * T if nx > 1 else 0)
-    phase_y = 2 * T * x_ext * Z if ny > 1 else 0
+    phase_x = 2 * D * Yl * Z if nx > 1 else 0
+    x_ext = Xl + (2 * D if nx > 1 else 0)
+    phase_y = 2 * D * x_ext * Z if ny > 1 else 0
     return (phase_x + phase_y) * n_fields * itemsize
 
 

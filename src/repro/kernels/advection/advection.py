@@ -666,6 +666,206 @@ def advect_fused_batched(u, v, w, p, *, T: int = 4, dt: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
+# spec-driven generalised fused kernel (the stencil-spec frontend's engine)
+# ---------------------------------------------------------------------------
+
+
+def _pad_r(s, r: int):
+    return jnp.pad(s, ((r, r), (r, r)))
+
+
+def _kernel_stencil_fused(*refs, X, Y, TY, S, T, dt, n_fields, n_params,
+                          radius, stages, source):
+    """Generalised temporal-blocking ring: `stages*T` stacked levels of
+    `2*radius+1` slots per field, driven by a StencilSpec's source callback.
+
+    Geometry (reduces EXACTLY to `_kernel_fused` at radius=1, stages=1):
+    level 0 stores the arriving input slice x=i at slot i % W (W=2r+1);
+    level k (k=1..L, L=stages*T) computes its slice j = i - k*r from level
+    k-1's ring — level k-1's slice j+dx (|dx| <= r) was written at grid
+    step j+dx+(k-1)*r = i-r+dx, i.e. slot (i-r+dx) % W, still resident in
+    the W-deep rotation. Each level writes slot i % W; the output level L
+    emits slice j = i - D (D = r*L, the spec halo depth).
+
+    Integrators: euler spends one level per substep (new = cen + dt*src).
+    Midpoint rk2 spends two — odd levels hold the half-step state
+    g = cen + (dt/2)*src, even levels complete f_new = base + dt*src(g)
+    where `base` is the PREVIOUS FULL level's (k-2) slice j, written at
+    grid step i-2r and therefore the oldest still-resident slot
+    (i-2r) % W. Masked slices copy through unchanged at every level
+    (g=cen, f_new=base), so the startup/tail/tile-switch wall argument of
+    `_kernel_fused` carries over for any radius and either integrator.
+    """
+    P, F = n_params, n_fields
+    p_refs = refs[:P]
+    xm_ref, ym_ref = refs[P], refs[P + 1]
+    f_refs = refs[P + 2:P + 2 + F]
+    out_refs = refs[P + 2 + F:P + 2 + 2 * F]
+    bufs = refs[P + 2 + 2 * F:]
+    r = radius
+    W = 2 * r + 1
+    L = stages * T
+    D = r * L
+    t = pl.program_id(0)
+    i = pl.program_id(1)
+    pv = tuple(pr[...] for pr in p_refs)
+    row_ok = (ym_ref[...] > 0.0)[:, None]
+    slot = jax.lax.rem(i, W)
+    for buf, ref in zip(bufs, f_refs):
+        buf[0, slot] = ref[0]
+    outs = None
+    for k in range(1, L + 1):
+        lvl = k - 1
+        j = i - k * r
+
+        def sh(fi, dx, dj, dk, _lvl=lvl):
+            # (i + (W - r) + dx) % W == (i - r + dx) % W, kept non-negative
+            sl = jax.lax.rem(i + (W - r) + dx, W)
+            v = bufs[fi][_lvl, sl]
+            return v[r + dj:v.shape[0] - r + dj, r + dk:v.shape[1] - r + dk]
+
+        srcs = source(sh, pv)
+        x_ok = xm_ref[pl.ds(jnp.clip(j, 0, X - 1), 1)][0] > 0.0
+        interior = (j >= r) & (j <= X - 1 - r) & x_ok
+        cslot = jax.lax.rem(i + (W - r), W)
+        half_level = stages == 2 and k % 2 == 1
+        step_dt = 0.5 * dt if half_level else dt
+        new = []
+        for fi, s in enumerate(srcs):
+            if stages == 2 and k % 2 == 0:
+                base = bufs[fi][k - 2, jax.lax.rem(i + (W - 2 * r), W)]
+            else:
+                base = bufs[fi][lvl, cslot]
+            src = jnp.where(interior & row_ok, _pad_r(s, r),
+                            0.0).astype(base.dtype)
+            new.append(base + step_dt * src)
+        if k < L:
+            for fi, val in enumerate(new):
+                bufs[fi][k, slot] = val
+        else:
+            outs = new
+    start = _own_start(t, Y, TY, S, D)
+    for ref, val in zip(out_refs, outs):
+        ref[0] = jax.lax.dynamic_slice(val, (start, 0), (TY, val.shape[1]))
+
+
+def stencil_fused(fields, params, spec, *, T: int = 4, dt: float = 1.0,
+                  interpret: bool = True, y_tile: int | None = None,
+                  y_interior_mask=None, x_interior_mask=None):
+    """Spec-driven v4: advance a StencilSpec's fields T integrator steps in
+    ONE HBM pass — the generalisation of `advect_fused` to any operator.
+
+    `fields` is a tuple of `spec.n_fields` (X, Y, Z) arrays; `params` is
+    whatever `spec.pack_params` consumes. Ring depth, startup masks, slab
+    halo and the output lag are ALL derived from `spec.halo(T) =
+    radius * stages * T` instead of the hand kernel's hard-coded halo=1
+    per substep, so deeper stencils and multi-stage integrators ride the
+    identical grid-tiled execution contract (`y_tile`, interior masks —
+    same semantics as `advect_fused`). For the Piacsek-Williams spec this
+    function is gated BITWISE-equal to `advect_fused`: the ring rotation,
+    block specs and update arithmetic reduce exactly to `_kernel_fused`
+    at radius=1, stages=1. VMEM cost is `fused_register_bytes(...,
+    n_fields, n_slots=2r+1, n_levels=stages*T)`.
+    """
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
+    _check_y_tile(y_tile)
+    fields = tuple(fields)
+    if len(fields) != spec.n_fields:
+        raise ValueError(
+            f"spec {spec.name!r} has {spec.n_fields} fields "
+            f"({spec.fields}), got {len(fields)} arrays")
+    shape = fields[0].shape
+    for name, f in zip(spec.fields, fields):
+        if f.shape != shape:
+            raise ValueError(f"field {name!r} shape {f.shape} != {shape}")
+    X, Y, Z = shape
+    r = spec.radius
+    D = spec.halo(T)
+    L = spec.stages * T
+    TY, S, n_ty = _grid_geometry(Y, y_tile, D)
+    ym = (jnp.ones((Y,), jnp.float32) if y_interior_mask is None
+          else jnp.asarray(y_interior_mask, jnp.float32))
+    if ym.shape != (Y,):
+        raise ValueError(f"y_interior_mask must have shape ({Y},), "
+                         f"got {ym.shape}")
+    xm = (jnp.ones((X,), jnp.float32) if x_interior_mask is None
+          else jnp.asarray(x_interior_mask, jnp.float32))
+    if xm.shape != (X,):
+        raise ValueError(f"x_interior_mask must have shape ({X},), "
+                         f"got {xm.shape}")
+    pv = tuple(spec.pack_params(params))
+    for p in pv:
+        if p.ndim != 1:
+            raise ValueError(
+                f"spec {spec.name!r}: pack_params must return 1-D vectors, "
+                f"got shape {p.shape}")
+    p_specs = [pl.BlockSpec(p.shape, lambda t, i: (0,)) for p in pv]
+    in_spec = pl.BlockSpec((1, S, Z),
+                           lambda t, i: (jnp.minimum(i, X - 1),
+                                         _slab_lo(t, Y, TY, S, D), 0),
+                           indexing_mode=pl.Unblocked())
+    out_spec = pl.BlockSpec((1, TY, Z),
+                            lambda t, i: (jnp.clip(i - D, 0, X - 1),
+                                          _out_lo(t, Y, TY), 0),
+                            indexing_mode=pl.Unblocked())
+    ym_spec = pl.BlockSpec((S,), lambda t, i: (_slab_lo(t, Y, TY, S, D),),
+                           indexing_mode=pl.Unblocked())
+    xm_spec = pl.BlockSpec((X,), lambda t, i: (0,))
+    fn = pl.pallas_call(
+        functools.partial(_kernel_stencil_fused, X=X, Y=Y, TY=TY, S=S, T=T,
+                          dt=dt, n_fields=spec.n_fields, n_params=len(pv),
+                          radius=r, stages=spec.stages, source=spec.source),
+        grid=(n_ty, X + D),
+        in_specs=p_specs + [xm_spec, ym_spec] + [in_spec] * spec.n_fields,
+        out_specs=[out_spec] * spec.n_fields,
+        out_shape=[jax.ShapeDtypeStruct((X, Y, Z), fields[0].dtype)
+                   ] * spec.n_fields,
+        scratch_shapes=[pltpu.VMEM((L, 2 * r + 1, S, Z), fields[0].dtype)
+                        for _ in range(spec.n_fields)],
+        interpret=interpret,
+    )
+    out = fn(*pv, xm, ym, *fields)
+    return tuple(out) if isinstance(out, (tuple, list)) else (out,)
+
+
+def stencil_fused_batched(fields, params, spec, *, T: int = 4,
+                          dt: float = 1.0, interpret: bool = True,
+                          y_tile: int | None = None,
+                          y_interior_mask=None, x_interior_mask=None):
+    """Batched mega-launch of the spec kernel: B independent domains of any
+    StencilSpec in ONE dispatch — the serving tier's packing move
+    generalised beyond advection (cf. `advect_fused_batched`; slots stream
+    back-to-back through the same VMEM rings, startup masking walls off
+    the previous slot's stale ring content). `fields` are slot-stacked
+    ``(B, X, Y, Z)``; `params` is shared across slots; interior masks may
+    be shared ``(X,)``/``(Y,)`` or per-slot ``(B, X)``/``(B, Y)``."""
+    fields = tuple(fields)
+    for name, f in zip(spec.fields, fields):
+        if f.ndim != 4:
+            raise ValueError(f"field {name!r} must be slot-stacked "
+                             f"(B, X, Y, Z), got rank {f.ndim}")
+    shape = fields[0].shape
+    for name, f in zip(spec.fields, fields):
+        if f.shape != shape:
+            raise ValueError(f"field {name!r} shape {f.shape} != {shape}")
+    B, X, Y, Z = shape
+    xm = (jnp.ones((X,), jnp.float32) if x_interior_mask is None
+          else jnp.asarray(x_interior_mask, jnp.float32))
+    ym = (jnp.ones((Y,), jnp.float32) if y_interior_mask is None
+          else jnp.asarray(y_interior_mask, jnp.float32))
+    xm_ax, ym_ax = _batch_axis(xm, 1), _batch_axis(ym, 1)
+
+    def one(fs, xmm, ymm):
+        return stencil_fused(fs, params, spec, T=T, dt=dt,
+                             interpret=interpret, y_tile=y_tile,
+                             y_interior_mask=ymm, x_interior_mask=xmm)
+
+    return jax.vmap(one, in_axes=((0,) * len(fields), xm_ax, ym_ax))(
+        fields, xm, ym)
+
+
+# ---------------------------------------------------------------------------
 # in-kernel halo-band exchange: async remote DMA (TPU, compiled mode)
 # ---------------------------------------------------------------------------
 
@@ -895,18 +1095,27 @@ def halo_band_exchange_dma(u, v, w, *, axis: str, mesh_axes, n: int,
 
 def fused_register_bytes(T: int, y_rows: int, Z: int, itemsize: int = 4,
                          y_tile: int | None = None,
-                         halo: int | None = None) -> int:
-    """VMEM footprint of v4's shift register: 3 fields x 3T slices.
+                         halo: int | None = None, *, n_fields: int = 3,
+                         n_slots: int = 3,
+                         n_levels: int | None = None) -> int:
+    """VMEM footprint of the fused shift register: by default 3 fields x
+    3T slices (the hand-written v4 ring).
 
     With Y-tiling each resident slice has ``y_tile + 2*halo`` rows (tile +
     slab halo; halo defaults to T, the fused contamination depth) no matter
     how large the grid's Y is — the Fig. 8 scaling contract, identical for
     the in-grid and host-tiled paths. Pass ``halo=8`` (the sublane-rounded
     fetch halo) to size the `wide` grid-tiled ring with T=1.
+
+    The spec-driven generalised ring (`stencil_fused`) is sized by the
+    same formula with `n_fields=spec.n_fields`,
+    `n_slots=2*spec.radius + 1`, `n_levels=spec.stages*T` and
+    `halo=spec.halo(T)`.
     """
     h = T if halo is None else halo
+    levels = T if n_levels is None else n_levels
     rows = y_rows if y_tile is None else min(y_tile + 2 * h, y_rows)
-    return 3 * (3 * T) * rows * Z * itemsize
+    return n_fields * (n_slots * levels) * rows * Z * itemsize
 
 
 def _n_y_tiles(Y: int, y_tile: int | None) -> int:
@@ -945,8 +1154,9 @@ def _check_wide_model_tile(Y: int, y_tile: int | None,
 
 def hbm_bytes_model(X: int, Y: int, Z: int, itemsize: int, variant: str,
                     *, T: int = 1, y_tile: int | None = None,
-                    grid_tiled: bool = True,
-                    fuse_update: bool = True) -> int:
+                    grid_tiled: bool = True, fuse_update: bool = True,
+                    n_fields: int = 3,
+                    halo_depth: int | None = None) -> int:
     """Analytic HBM traffic per advection call (for the Fig. 3/9 tables).
 
     `T` is the number of explicit-Euler steps the call advances: the
@@ -973,24 +1183,39 @@ def hbm_bytes_model(X: int, Y: int, Z: int, itemsize: int, variant: str,
     dense contiguous arrays, so no lane penalty); `fuse_update=True`
     matches kernels run with their `fuse_update=True` flag (and `fused`,
     where the update is inherently in-kernel).
+
+    `n_fields` and `halo_depth` generalise the model to the stencil-spec
+    frontend: the spec-driven fused kernel streams `spec.n_fields` fields
+    per pass with a slab halo of `spec.halo(T) = radius*stages*T` (the
+    default `halo_depth=None` keeps the hand-written ladder's depths —
+    T for `fused`, 1 otherwise). HBM traffic per fused pass is
+    `n_fields`-proportional and halo-independent on the grid-tiled path:
+    one compulsory read + write of every field, exactly what the MONC
+    multi-kernel amortisation story predicts when extra operators ride
+    the same rings.
     """
     slice_b = Y * Z * itemsize
     lane_eff = 1.0 if Z % 128 == 0 else (Z % 128) / 128.0
     if variant == "wide":
         _check_wide_model_tile(Y, y_tile, grid_tiled)
-    halo = T if variant == "fused" else 1
+    if halo_depth is None:
+        halo = T if variant == "fused" else 1
+    else:
+        halo = halo_depth
     # host tiling: interior tile boundaries each re-read `halo` rows from
     # both sides; in-grid tiling serves those rows from VMEM instead
     overlap_rows = 0 if grid_tiled else _host_overlap_rows(Y, y_tile, halo)
     tiled_slice_b = (Y + overlap_rows) * Z * itemsize
     if variant == "blocked":
-        reads = T * 3 * 3 * X * tiled_slice_b  # 3 fields x 3 views x X slices
+        # n_fields x 3 views x X slices
+        reads = T * n_fields * 3 * X * tiled_slice_b
     elif variant in ("dataflow", "wide"):
-        reads = T * 3 * X * tiled_slice_b
+        reads = T * n_fields * X * tiled_slice_b
     elif variant == "fused":
-        reads = 3 * X * tiled_slice_b          # ONE pass for all T steps
+        reads = n_fields * X * tiled_slice_b   # ONE pass for all T steps
     elif variant == "pointwise":
-        reads = T * 3 * 7 * X * slice_b        # naive per-point gathers (7-point)
+        # naive per-point gathers (7-point)
+        reads = T * n_fields * 7 * X * slice_b
     else:
         raise ValueError(variant)
     # host tiling: each block's kernel writes its full slab (halo rows
@@ -998,19 +1223,20 @@ def hbm_bytes_model(X: int, Y: int, Z: int, itemsize: int, variant: str,
     # too — except pointwise, which has no tiled execution path. In-grid
     # tiling writes every output row exactly once (overlap_rows == 0).
     w_slice_b = slice_b if variant == "pointwise" else tiled_slice_b
-    writes = (1 if variant == "fused" else T) * 3 * X * w_slice_b
+    writes = (1 if variant == "fused" else T) * n_fields * X * w_slice_b
     eff = lane_eff if variant != "wide" else 1.0
     total = (reads + writes) / eff
     if not fuse_update and variant != "fused":
         # unfused host-side `f + dt*s` pass: read field + read source +
         # write field, per field per step (contiguous, no lane penalty)
-        total += T * 3 * 3 * X * slice_b
+        total += T * 3 * n_fields * X * slice_b
     return int(total)
 
 
 def vmem_halo_bytes_model(X: int, Y: int, Z: int, itemsize: int,
                           variant: str, *, T: int = 1,
-                          y_tile: int | None = None) -> int:
+                          y_tile: int | None = None, n_fields: int = 3,
+                          halo_depth: int | None = None) -> int:
     """Halo re-read bytes the in-grid path serves from VMEM instead of HBM.
 
     This is the read-side overlap the host-tiled model charges to HBM
@@ -1024,14 +1250,21 @@ def vmem_halo_bytes_model(X: int, Y: int, Z: int, itemsize: int,
     kernel runs a single full-domain tile) is mirrored, so configs with
     no tiled execution report zero. The host path's write-side overlap
     has no VMEM counterpart — in-grid outputs are simply written once.
+
+    `n_fields` / `halo_depth` generalise to the stencil-spec frontend:
+    the spec kernel's slab halo is `spec.halo(T)` deep and every one of
+    `spec.n_fields` rings re-reads it from VMEM residency.
     """
     if variant == "pointwise":
         return 0   # no tiled execution path
     if variant == "wide":
         _check_wide_model_tile(Y, y_tile, grid_tiled=True)
-    halo = {"fused": T, "wide": _WIDE_HALO}.get(variant, 1)
+    if halo_depth is None:
+        halo = {"fused": T, "wide": _WIDE_HALO}.get(variant, 1)
+    else:
+        halo = halo_depth
     _, _, n_ty = _grid_geometry(Y, y_tile, halo)
     overlap_rows = 2 * halo * (n_ty - 1)
     views = 3 if variant == "blocked" else 1
     passes = 1 if variant == "fused" else T
-    return passes * views * 3 * X * overlap_rows * Z * itemsize
+    return passes * views * n_fields * X * overlap_rows * Z * itemsize

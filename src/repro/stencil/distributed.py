@@ -98,6 +98,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.kernels.advection import advection as K
 from repro.kernels.advection.ref import (AdvectParams, pw_advect_ref,
                                          pw_step_ref)
+from repro.stencil import spec as SP
 
 EXCHANGES = ("collective", "remote_dma")
 
@@ -569,6 +570,164 @@ def _wrap_shard_map(local, mesh: Mesh, axis: str, x_axis: Optional[str],
     return jax.jit(fn)
 
 
+def _check_spec_step_config(spec, T: int, local_kernel: str, exchange: str,
+                            interpret: bool, verify_integrity: bool = False,
+                            corrupt_halo=None) -> None:
+    """Build-time validation of the spec-driven distributed path."""
+    _check_step_config(T, local_kernel, exchange, interpret)
+    if not isinstance(spec, SP.StencilSpec):
+        raise ValueError(f"spec must be a StencilSpec, got {type(spec)!r}")
+    if exchange == "remote_dma" and not interpret:
+        raise RuntimeError(
+            "spec-driven steps have no compiled Mosaic DMA kernel yet (the "
+            "hand-written halo_band_exchange_dma is 3-field advection-"
+            "specific); use exchange='collective', or interpret=True for "
+            "the schedule-faithful emulation.")
+    if verify_integrity or corrupt_halo is not None:
+        raise ValueError(
+            "verify_integrity / corrupt_halo are not wired to the "
+            "spec-driven path yet; build the step without spec= for the "
+            "checksummed exchange")
+
+
+def _build_spec_local_block(mesh: Mesh, spec, spec_params, *, axis: str,
+                            x_axis: Optional[str], T: int, dt: float,
+                            local_kernel: str, y_tile: Optional[int],
+                            interpret: bool, overlap: bool, exchange: str):
+    """Spec-generalised per-shard substep-block body: `spec.n_fields`
+    fields exchanged ONCE at depth `D = spec.halo(T) = radius*stages*T`
+    per T integrator steps — `_build_local_block` with every halo=T and
+    every 3-field literal replaced by the spec's radius, stage count and
+    field tuple. Both ppermute transports are already field-count- and
+    depth-generic, so the engines are reused unchanged; only the compiled
+    Mosaic DMA kernel (3-field, advection-specific) is rejected at build
+    time. Returns ``local_block(fields, block_index) -> fields``.
+    """
+    n_y = mesh.shape[axis]
+    n_x = mesh.shape[x_axis] if x_axis is not None else 1
+    r = spec.radius
+    D = spec.halo(T)
+
+    def _substeps(fields, x_int, y_int, tile):
+        """T masked integrator steps on a (halo'd) slab; None mask =
+        all-interior (slab edge then walls structurally, zero_source)."""
+        if local_kernel == "fused":
+            return K.stencil_fused(
+                fields, spec_params, spec, T=T, dt=dt, interpret=interpret,
+                y_tile=tile,
+                x_interior_mask=(None if x_int is None
+                                 else x_int.astype(jnp.float32)),
+                y_interior_mask=(None if y_int is None
+                                 else y_int.astype(jnp.float32)))
+        m = jnp.ones((), jnp.bool_)
+        if x_int is not None:
+            m = m & x_int[:, None, None]
+        if y_int is not None:
+            m = m & y_int[None, :, None]
+        half = 0.5 * dt
+        for _ in range(T):
+            if spec.integrator == "rk2":
+                s0 = SP.spec_sources(fields, spec_params, spec)
+                g = tuple(f + half * jnp.where(m, s, 0.0)
+                          for f, s in zip(fields, s0))
+                s1 = SP.spec_sources(g, spec_params, spec)
+                fields = tuple(f + dt * jnp.where(m, s, 0.0)
+                               for f, s in zip(fields, s1))
+            else:
+                srcs = SP.spec_sources(fields, spec_params, spec)
+                fields = tuple(f + dt * jnp.where(m, s, 0.0)
+                               for f, s in zip(fields, srcs))
+        return fields
+
+    def local_block(fields, block_index):
+        del block_index  # no double-buffered DMA slots on the spec path yet
+        Xl, Yl, Z = fields[0].shape
+        X_g, Y_g = n_x * Xl, n_y * Yl
+        dx = D if n_x > 1 else 0
+        dy = D if n_y > 1 else 0
+        if dy and D > Y_g - 2 * r:
+            raise ValueError(
+                f"halo depth spec.halo(T)={D} exceeds the decomposable "
+                f"global Y extent ({Y_g} rows, interior {Y_g - 2 * r}); "
+                f"lower T")
+        if dx and D > X_g - 2 * r:
+            raise ValueError(
+                f"halo depth spec.halo(T)={D} exceeds the decomposable "
+                f"global X extent ({X_g} planes, interior {X_g - 2 * r}); "
+                f"lower T")
+        iy = jax.lax.axis_index(axis)
+        ix = jax.lax.axis_index(x_axis) if dx else None
+
+        # ---- two-phase x-then-y exchange at depth D; same engine dispatch
+        # and corner contract as `_build_local_block` (module docstring).
+        def _extend(fs, ax_name, n, dim):
+            if exchange == "remote_dma":
+                return tuple(
+                    _exchange_remote_dma_emulated(f, ax_name, n, D, dim)
+                    for f in fs)
+            hs = [_exchange_halos(f, ax_name, n, depth=D, dim=dim)
+                  for f in fs]
+            return tuple(jnp.concatenate([h[0], f, h[1]], axis=dim)
+                         for f, h in zip(fs, hs))
+
+        ext = tuple(fields)
+        if dx:
+            ext = _extend(ext, x_axis, n_x, 0)
+        if dy:
+            ext = _extend(ext, axis, n_y, 1)
+
+        # ---- global-interior masks: the wall is `radius` cells wide (a
+        # radius-r stencil cannot carry values past r frozen cells).
+        x_int = y_int = None
+        if dx:
+            gx = ix * Xl - dx + jnp.arange(Xl + 2 * dx)
+            x_int = (gx >= r) & (gx <= X_g - 1 - r)
+        if dy:
+            gy = iy * Yl - dy + jnp.arange(Yl + 2 * dy)
+            y_int = (gy >= r) & (gy <= Y_g - 1 - r)
+
+        outs = _substeps(ext, x_int, y_int, y_tile)
+        out = tuple(f[dx:dx + Xl, dy:dy + Yl, :] for f in outs)
+        if not (overlap and (dx or dy)):
+            return out
+
+        # ---- interior pass (no exchange dependence); shard-cut walls
+        # contaminate < D cells inward, the select discards those bands.
+        ox_int = oy_int = None
+        if dx:
+            ogx = ix * Xl + jnp.arange(Xl)
+            ox_int = (ogx >= r) & (ogx <= X_g - 1 - r)
+        if dy:
+            ogy = iy * Yl + jnp.arange(Yl)
+            oy_int = (ogy >= r) & (ogy <= Y_g - 1 - r)
+        inner = _substeps(tuple(fields), ox_int, oy_int, y_tile)
+        sx = jnp.arange(Xl)
+        ok_x = jnp.ones((Xl,), jnp.bool_) if not dx else (
+            ((ix == 0) | (sx >= D)) & ((ix == n_x - 1) | (sx < Xl - D)))
+        sy = jnp.arange(Yl)
+        ok_y = jnp.ones((Yl,), jnp.bool_) if not dy else (
+            ((iy == 0) | (sy >= D)) & ((iy == n_y - 1) | (sy < Yl - D)))
+        sel = (ok_x[:, None] & ok_y[None, :])[:, :, None]
+        return tuple(jnp.where(sel, i, b) for i, b in zip(inner, out))
+
+    return local_block
+
+
+def _wrap_spec_shard_map(local, mesh: Mesh, axis: str,
+                         x_axis: Optional[str], local_kernel: str,
+                         n_fields: int, *, n_scalars: int = 0,
+                         check_rep_off: bool = False):
+    """`_wrap_shard_map` for an n-field spec program (no integrity flag —
+    the spec path rejects verify_integrity at build time)."""
+    p = (P(None, axis, None) if x_axis is None else P(x_axis, axis, None))
+    uses_pallas = local_kernel == "fused"
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(p,) * n_fields + (P(),) * n_scalars,
+                   out_specs=(p,) * n_fields,
+                   check_rep=not (uses_pallas or check_rep_off))
+    return jax.jit(fn)
+
+
 def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
                           axis: str = "data", x_axis: Optional[str] = None,
                           T: int = 1, dt: float = 1.0,
@@ -579,8 +738,18 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
                           exchange: str = "collective",
                           dma_block_index: int = 0,
                           verify_integrity: bool = False,
-                          corrupt_halo=None):
+                          corrupt_halo=None,
+                          spec=None, spec_params=None):
     """Returns jit(step): T Euler substeps per ONE depth-T halo exchange.
+
+    `spec=` (a `stencil.spec.StencilSpec`, with `spec_params=` whatever its
+    `pack_params` consumes) generalises the step beyond PW advection: the
+    returned jit takes `spec.n_fields` slabs and the ONE exchange runs at
+    depth `spec.halo(T) = radius * stages * T` — deeper stencils and the
+    RK2 integrator simply exchange deeper, through the same two-phase
+    engines (`params` is ignored; pass the spec's params via
+    `spec_params`). The spec path rejects the compiled Mosaic DMA kernel
+    and the integrity knobs at build time (`_check_spec_step_config`).
 
     `axis` is the mesh axis decomposing y. With `x_axis` the step runs on a
     2D (x, y) device mesh — each shard owns an (X/nx, Y/ny, Z) slab and the
@@ -649,6 +818,19 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
     ppermute transports (interpret mode or the collective engine); the
     compiled Mosaic DMA path rejects them at build time.
     """
+    if spec is not None:
+        _check_spec_step_config(spec, T, local_kernel, exchange, interpret,
+                                verify_integrity, corrupt_halo)
+        spec_block = _build_spec_local_block(
+            mesh, spec, spec_params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+            local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
+            overlap=overlap, exchange=exchange)
+
+        def spec_local(*fields):
+            return spec_block(fields, dma_block_index)
+
+        return _wrap_spec_shard_map(spec_local, mesh, axis, x_axis,
+                                    local_kernel, spec.n_fields)
     _check_integrity_config(verify_integrity, corrupt_halo, exchange,
                             interpret)
     _check_step_config(T, local_kernel, exchange, interpret)
@@ -760,7 +942,8 @@ def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
                          verify_integrity: bool = False,
                          checkpoint_every: Optional[int] = None,
                          checkpoint_dir=None,
-                         keep_last: int = 3):
+                         keep_last: int = 3,
+                         spec=None, spec_params=None):
     """Returns run(u, v, w): `n_blocks` substep-blocks (n_blocks * T Euler
     substeps, ONE depth-T exchange per block) in ONE traced program — the
     pipelined multi-block driver the remote-DMA engine's double-buffered
@@ -810,6 +993,34 @@ def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
     if (checkpoint_every is None) != (checkpoint_dir is None):
         raise ValueError("checkpoint_every and checkpoint_dir come "
                          "together: both or neither")
+    if spec is not None:
+        if checkpoint_every is not None:
+            raise ValueError(
+                "checkpointing is not wired to the spec-driven run yet "
+                "(the snapshot leaf dict is (u, v, w)-specific); run "
+                "without spec= or without checkpoint_every=")
+        _check_spec_step_config(spec, T, local_kernel, exchange, interpret,
+                                verify_integrity, None)
+        spec_block = _build_spec_local_block(
+            mesh, spec, spec_params, axis=axis, x_axis=x_axis, T=T, dt=dt,
+            local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
+            overlap=overlap, exchange=exchange)
+
+        def spec_local(*args):
+            fields, start, end = args[:-2], args[-2], args[-1]
+
+            def body(k, carry):
+                return spec_block(carry, k)
+
+            return jax.lax.fori_loop(start, end, body, tuple(fields))
+
+        spec_core = _wrap_spec_shard_map(
+            spec_local, mesh, axis, x_axis, local_kernel, spec.n_fields,
+            n_scalars=2, check_rep_off=True)
+
+        def spec_run(*fields):
+            return spec_core(*fields, 0, n_blocks)
+        return spec_run
     core = _make_run_core(
         mesh, params, axis=axis, x_axis=x_axis, T=T, dt=dt,
         local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
@@ -1075,3 +1286,12 @@ def reference_global_step(u, v, w, params: AdvectParams, *, T: int = 1,
     for _ in range(T):
         u, v, w = pw_step_ref(u, v, w, params, dt)
     return u, v, w
+
+
+def reference_global_spec_step(fields, spec_params, spec, *, T: int = 1,
+                               dt: float = 1.0):
+    """Single-device T-step oracle for the spec-driven distributed step:
+    `spec_multistep`'s zero_source wall is exactly the global-interior
+    mask every shard applies, so the sharded program must reproduce this
+    BITWISE for any mesh shape."""
+    return SP.spec_multistep(fields, spec_params, spec, T, dt)

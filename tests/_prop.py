@@ -65,6 +65,13 @@ except ImportError:
 
             return _Strategy(draw)
 
+        @staticmethod
+        def tuples(*elements: _Strategy) -> _Strategy:
+            """Fixed-arity tuple of per-position strategies (hypothesis
+            `st.tuples` compatible)."""
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elements))
+
     st = _Strategies()
 
     def settings(*_args, **_kwargs):

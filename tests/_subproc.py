@@ -6,6 +6,10 @@ lives HERE, once: JAX_PLATFORMS=cpu is pinned both in the child env and
 (belt-and-braces) by the code blocks themselves — without it the scrubbed
 env lets jax probe a TPU backend and libtpu burns ~2 minutes on
 GCP-metadata retries before the CPU fallback (the old timeout flake).
+
+Failures re-raise WITH the child's captured stdout+stderr: a bare
+returncode assert hides the actual shard_map traceback, and a timeout
+used to discard everything the child printed before hanging.
 """
 import subprocess
 import sys
@@ -14,10 +18,33 @@ ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
        "JAX_PLATFORMS": "cpu"}
 
 
+def _report(label: str, r_stdout: str, r_stderr: str) -> str:
+    return (f"{label}\n"
+            f"--- child stdout (tail) ---\n{(r_stdout or '')[-2000:]}\n"
+            f"--- child stderr (tail) ---\n{(r_stderr or '')[-3000:]}")
+
+
 def run_ok(code: str, timeout: int = 600) -> None:
     """Run `code` in a child interpreter; assert exit 0 and an OK sentinel
-    (so a child that dies before its asserts still fails the test)."""
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, cwd=".", timeout=timeout, env=dict(ENV))
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "OK" in r.stdout, r.stdout[-2000:]
+    (so a child that dies before its asserts still fails the test). On a
+    nonzero exit or a timeout the raised error carries the child's
+    captured stdout AND stderr, so the real traceback survives."""
+    assert ENV.get("JAX_PLATFORMS") == "cpu", (
+        "subprocess env contract broken: JAX_PLATFORMS=cpu must be pinned "
+        f"in the child env, got {ENV!r}")
+    try:
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, cwd=".",
+                           timeout=timeout, env=dict(ENV))
+    except subprocess.TimeoutExpired as e:
+        out = e.stdout.decode() if isinstance(e.stdout, bytes) else e.stdout
+        err = e.stderr.decode() if isinstance(e.stderr, bytes) else e.stderr
+        raise AssertionError(
+            _report(f"child timed out after {timeout}s", out, err)) from e
+    if r.returncode != 0:
+        raise AssertionError(
+            _report(f"child exited {r.returncode}", r.stdout, r.stderr))
+    if "OK" not in r.stdout:
+        raise AssertionError(
+            _report("child exited 0 without printing the OK sentinel",
+                    r.stdout, r.stderr))

@@ -1,0 +1,138 @@
+"""Property tests for the stencil-spec frontend (via the `tests/_prop.py`
+shim: hypothesis when installed, fixed-seed sweep otherwise).
+
+  * random well-formed `StencilSpec`s round-trip validation and report
+    the radius/stages/halo the offsets imply;
+  * malformed specs are rejected with errors NAMING the offending field
+    and offset (the error is the API — callers debug specs through it);
+  * the halo invariant: `exchange depth == max|offset| * stages * T`,
+    checked against `_band_schedule`'s partition of the exchanged bands
+    (the per-hop counts must sum to exactly `spec.halo(T)` and tile the
+    hi/lo halo regions gaplessly for ANY local extent).
+"""
+import jax.numpy as jnp
+import pytest
+
+from _prop import given, settings, st
+
+from repro.kernels.advection.advection import _band_schedule
+from repro.stencil import spec as SP
+
+OFF = st.tuples(st.integers(-2, 2), st.integers(-2, 2), st.integers(-2, 2))
+
+
+def _src_one(sh, pv):
+    return (sh(0, 0, 0, 0),)
+
+
+def _make_spec(offs, integrator="euler", fields=("a",)):
+    return SP.StencilSpec(
+        name="prop", fields=tuple(fields),
+        offsets={f: tuple(offs) for f in fields},
+        source=_src_one, pack_params=lambda p: (p,),
+        integrator=integrator)
+
+
+# ---------------------------------------------------------------------------
+# round-trip: well-formed specs validate and expose the implied geometry
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(offs=st.lists(OFF, min_size=1, max_size=6),
+       integrator=st.sampled_from(["euler", "rk2"]),
+       T=st.integers(1, 5),
+       n_fields=st.integers(1, 4))
+def test_spec_roundtrip_and_halo_formula(offs, integrator, T, n_fields):
+    offs = [tuple(int(c) for c in o) for o in offs]
+    if not any(c != 0 for o in offs for c in o):
+        offs.append((0, 1, 0))
+    fields = tuple(f"f{i}" for i in range(n_fields))
+    spec = _make_spec(offs, integrator, fields)
+    r = max(abs(c) for o in offs for c in o)
+    s = 2 if integrator == "rk2" else 1
+    assert spec.radius == r
+    assert spec.stages == s
+    assert spec.n_fields == n_fields
+    assert spec.halo(T) == r * s * T
+    with pytest.raises(ValueError, match="T must be"):
+        spec.halo(0)
+
+
+# ---------------------------------------------------------------------------
+# rejection: the error names the offending field / offset
+# ---------------------------------------------------------------------------
+
+
+def test_rejects_malformed_offset_naming_field_and_offset():
+    with pytest.raises(ValueError, match=r"'a'.*\(1, 0\).*3-tuple"):
+        _make_spec([(1, 0)])
+    with pytest.raises(ValueError, match=r"'a'.*True.*bool"):
+        _make_spec([(True, 0, 0)])
+    with pytest.raises(ValueError, match=r"'a'.*1\.5.*float"):
+        _make_spec([(1.5, 0, 0)])
+
+
+def test_rejects_structural_spec_errors():
+    with pytest.raises(ValueError, match="duplicate field name 'a'"):
+        _make_spec([(1, 0, 0)], fields=("a", "a"))
+    with pytest.raises(ValueError, match="'b' has no stencil offsets"):
+        SP.StencilSpec(name="x", fields=("a", "b"),
+                       offsets={"a": ((1, 0, 0),)},
+                       source=_src_one, pack_params=lambda p: (p,))
+    with pytest.raises(ValueError, match="unknown field 'ghost'"):
+        SP.StencilSpec(name="x", fields=("a",),
+                       offsets={"a": ((1, 0, 0),), "ghost": ((1, 0, 0),)},
+                       source=_src_one, pack_params=lambda p: (p,))
+    with pytest.raises(ValueError, match="'a': offsets must be non-empty"):
+        _make_spec([])
+    with pytest.raises(ValueError, match="integrator must be one of"):
+        _make_spec([(1, 0, 0)], integrator="rk9")
+    with pytest.raises(ValueError, match="radius >= 1"):
+        _make_spec([(0, 0, 0)])
+    with pytest.raises(ValueError, match="boundary must be one of"):
+        SP.StencilSpec(name="x", fields=("a",),
+                       offsets={"a": ((1, 0, 0),)}, source=_src_one,
+                       pack_params=lambda p: (p,), boundary="periodic")
+
+
+def test_accessor_rejects_reads_beyond_declared_radius():
+    """A source reaching past the declared star is a spec bug; the error
+    names the field and the offending offset."""
+
+    def greedy(sh, pv):
+        return (sh(0, 2, 0, 0),)
+
+    spec = SP.StencilSpec(name="x", fields=("a",),
+                          offsets={"a": ((1, 0, 0),)}, source=greedy,
+                          pack_params=lambda p: ())
+    with pytest.raises(ValueError, match=r"'a'.*\(2, 0, 0\).*radius 1"):
+        SP.spec_sources((jnp.zeros((6, 6, 6)),), None, spec)
+
+
+# ---------------------------------------------------------------------------
+# halo invariant vs the band schedule's partition
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(radius=st.integers(1, 3), T=st.integers(1, 6), L=st.integers(1, 8),
+       integrator=st.sampled_from(["euler", "rk2"]))
+def test_band_schedule_partitions_spec_halo(radius, T, L, integrator):
+    spec = _make_spec([(radius, 0, 0)], integrator)
+    D = spec.halo(T)
+    sched = _band_schedule(L, D)
+    # exchanged rows sum to exactly the spec's halo depth, in ceil(D/L) hops
+    assert sum(cnt for _, cnt, _, _ in sched) == D
+    assert len(sched) == -(-D // L)
+    assert all(1 <= cnt <= L for _, cnt, _, _ in sched)
+    # the hi bands tile [0, D) and the lo bands tile [D+L, D+L+D) of the
+    # extended slab — gapless, non-overlapping, in ring order
+    hi = sorted((off, off + cnt) for _, cnt, off, _ in sched)
+    lo = sorted((off, off + cnt) for _, cnt, _, off in sched)
+    assert hi[0][0] == 0 and hi[-1][1] == D
+    assert lo[0][0] == D + L and lo[-1][1] == D + L + D
+    for (a0, a1), (b0, b1) in zip(hi, hi[1:]):
+        assert a1 == b0
+    for (a0, a1), (b0, b1) in zip(lo, lo[1:]):
+        assert a1 == b0
