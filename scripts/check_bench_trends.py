@@ -43,8 +43,11 @@ BASELINES = os.path.join(ROOT, "benchmarks", "baselines.json")
 DIRECTIONS = ("eq", "le", "ge")
 
 
-def resolve(doc, path: str):
-    """Walk a dot-separated path; integer components index lists."""
+def resolve(doc, path: str, artifact: str = "<artifact>"):
+    """Walk a dot-separated path; integer components index lists. Every
+    failure names the ARTIFACT the path was resolved against — a stale
+    baseline path must point the operator at the sweep to re-run, not
+    at this script."""
     node = doc
     for part in path.split("."):
         if isinstance(node, list):
@@ -52,39 +55,73 @@ def resolve(doc, path: str):
                 node = node[int(part)]
             except (ValueError, IndexError):
                 raise SystemExit(
-                    f"trend gate: path component {part!r} of {path!r} "
-                    f"does not index the list (len {len(node)})") from None
+                    f"trend gate: {artifact}: path component {part!r} of "
+                    f"{path!r} does not index the list (len {len(node)}) "
+                    f"— rerun the sweep that writes {artifact}, or fix "
+                    f"the baseline path") from None
         elif isinstance(node, dict):
             if part not in node:
                 raise SystemExit(
-                    f"trend gate: path component {part!r} of {path!r} "
-                    f"missing; artifact keys: {sorted(node)[:12]}")
+                    f"trend gate: {artifact}: path component {part!r} of "
+                    f"{path!r} missing; artifact keys: {sorted(node)[:12]}")
             node = node[part]
         else:
-            raise SystemExit(f"trend gate: path {path!r} descends into a "
-                             f"leaf at {part!r}")
+            raise SystemExit(
+                f"trend gate: {artifact}: path {path!r} descends into a "
+                f"leaf at {part!r}")
     if not isinstance(node, (int, float)) or isinstance(node, bool):
-        raise SystemExit(f"trend gate: path {path!r} resolves to "
-                         f"{type(node).__name__}, not a number")
+        raise SystemExit(
+            f"trend gate: {artifact}: path {path!r} resolves to "
+            f"{type(node).__name__}, not a number")
     return node
+
+
+def entry_fields(artifact: str, e):
+    """Validate one baseline entry's schema, naming the artifact on any
+    gap (a hand-edited baselines.json must fail with the offending file,
+    not a bare KeyError)."""
+    if not isinstance(e, dict):
+        raise SystemExit(f"trend gate: {artifact}: baseline entry is "
+                         f"{type(e).__name__}, not an object: {e!r}")
+    missing = [k for k in ("path", "value", "direction") if k not in e]
+    if missing:
+        raise SystemExit(
+            f"trend gate: {artifact}: baseline entry missing key(s) "
+            f"{missing}: {e!r}")
+    return e["path"], e["value"], e["direction"]
+
+
+def load_artifact(path: str, artifact: str):
+    """Parse one BENCH artifact, converting a JSON syntax error into a
+    named SystemExit (a truncated sweep run must not surface as a
+    traceback)."""
+    with open(path, encoding="utf-8") as f:
+        try:
+            return json.load(f)
+        except json.JSONDecodeError as exc:
+            raise SystemExit(
+                f"trend gate: {artifact} is not valid JSON ({exc}) — the "
+                f"sweep that writes it may have been interrupted; rerun "
+                f"it") from None
 
 
 def check(artifact: str, entries, doc) -> list:
     failures = []
     for e in entries:
-        cur = resolve(doc, e["path"])
-        want, rtol, d = e["value"], float(e.get("rtol", 0.0)), e["direction"]
+        p, want, d = entry_fields(artifact, e)
+        cur = resolve(doc, p, artifact)
+        rtol = float(e.get("rtol", 0.0))
         if d not in DIRECTIONS:
             raise SystemExit(f"trend gate: bad direction {d!r} for "
-                             f"{artifact}:{e['path']}")
+                             f"{artifact}:{p}")
         ok = (cur == want if d == "eq" else
               cur <= want * (1.0 + rtol) if d == "le" else
               cur >= want * (1.0 - rtol))
         status = "ok" if ok else "REGRESSED"
-        print(f"{artifact}:{e['path']}: {cur} {d} {want} "
+        print(f"{artifact}:{p}: {cur} {d} {want} "
               f"(rtol={rtol}) {status}")
         if not ok:
-            failures.append(f"{artifact}:{e['path']} = {cur}, baseline "
+            failures.append(f"{artifact}:{p} = {cur}, baseline "
                             f"{d} {want} (rtol={rtol})")
     return failures
 
@@ -102,12 +139,12 @@ def main(argv) -> None:
             raise SystemExit(
                 f"trend gate: {artifact} not found in {os.getcwd()} — run "
                 f"the sweep that produces it first (see benchmarks/)")
-        with open(path, encoding="utf-8") as f:
-            doc = json.load(f)
+        doc = load_artifact(path, artifact)
         if update:
             for e in entries:
-                e["value"] = resolve(doc, e["path"])
-                print(f"{artifact}:{e['path']} <- {e['value']}")
+                p, _, _ = entry_fields(artifact, e)
+                e["value"] = resolve(doc, p, artifact)
+                print(f"{artifact}:{p} <- {e['value']}")
         else:
             failures.extend(check(artifact, entries, doc))
     if update:

@@ -1,0 +1,51 @@
+"""Static data-movement analysis: audit any traced driver WITHOUT
+executing it.
+
+The repo's whole discipline is "counted == modelled EXACTLY" — every
+BENCH gate prices moved bytes against an analytic model. This package
+is that discipline turned into a reusable subsystem: one shared jaxpr
+walker (`jaxpr`), a byte-attribution ledger plus model-coverage gate
+(`ledger`), a static-value-leak / retrace detector (`retrace`), a
+build-time VMEM budget (`vmem`) and a Pallas tiling-contract linter
+(`tiling`), all registered in `passes` and driven over the ladder's
+representative configs by `scripts/lint_movement.py` (emitting
+BENCH_analysis.json). See docs/static-analysis.md for the pass
+catalogue and how the ledger categories map to the paper's profiling
+table.
+"""
+from repro.analysis.jaxpr import (aval_bytes, fingerprint_parts,
+                                  iter_jaxprs, structural_fingerprint,
+                                  walk_jaxpr)
+from repro.analysis.ledger import (CATEGORIES, CoverageFailure,
+                                   CoverageReport, ModelCoverageError,
+                                   MovementLedger, MovementRecord,
+                                   audit_movement, check_model_coverage,
+                                   count_ppermute_bytes)
+from repro.analysis.passes import (PASSES, AnalysisPass, available,
+                                   get_pass, register_pass)
+from repro.analysis.retrace import (Perturbation, RetraceFinding,
+                                    RetraceReport, detect_retrace,
+                                    driver_fingerprint,
+                                    make_static_parity_driver,
+                                    make_traced_parity_driver)
+from repro.analysis.tiling import (LANE, SUBLANE, TilingIssue,
+                                   TilingReport, lint_tiling)
+from repro.analysis.vmem import (VmemBudgetExceeded, VmemBuffer, VmemPlan,
+                                 distributed_block_plan, fused_ring_plan,
+                                 plan_max_batch, serving_ring_plan)
+
+__all__ = [
+    "iter_jaxprs", "walk_jaxpr", "aval_bytes", "fingerprint_parts",
+    "structural_fingerprint",
+    "CATEGORIES", "MovementRecord", "MovementLedger", "audit_movement",
+    "count_ppermute_bytes",
+    "CoverageFailure", "CoverageReport", "ModelCoverageError",
+    "check_model_coverage",
+    "Perturbation", "RetraceFinding", "RetraceReport", "detect_retrace",
+    "driver_fingerprint", "make_static_parity_driver",
+    "make_traced_parity_driver",
+    "VmemBudgetExceeded", "VmemBuffer", "VmemPlan", "fused_ring_plan",
+    "distributed_block_plan", "serving_ring_plan", "plan_max_batch",
+    "TilingIssue", "TilingReport", "lint_tiling", "SUBLANE", "LANE",
+    "AnalysisPass", "PASSES", "register_pass", "available", "get_pass",
+]

@@ -1,0 +1,169 @@
+"""Retrace detector: flag config knobs that leak static Python values
+into a traced driver.
+
+The PR 5 bug class: `make_distributed_run`'s recv-slot parity was once
+selected with static Python `block_index % 2`, so every block baked a
+DIFFERENT trace — a silent recompile per config that no test saw until
+the pipeline gate counted K× the wire bytes. The fix threads the index
+as a traced `lax.fori_loop` induction variable (`lax.rem` + dynamic
+indexing); this pass is the regression gate for the whole class.
+
+Mechanism: trace the driver a factory builds at each value of a config
+knob and compare `structural_fingerprint`s. Literal operand VALUES are
+abstracted (they are cache-compatible when passed as arguments), so two
+configs fingerprint equal exactly when the knob stayed out of the trace
+structure. Each perturbation declares what it expects:
+
+  expect="shared"    the knob must NOT change the trace (block parity,
+                     n_blocks): divergence == a leaked static value,
+                     reported with the first structurally differing
+                     equation — kind "leak".
+  expect="distinct"  the knob MUST change the trace (y_tile changes the
+                     Pallas grid): identical fingerprints mean the knob
+                     is silently ignored — kind "inert".
+
+Both verdicts are bugs; `detect_retrace` returns a report naming knob,
+values and the diverging equation, and `RetraceReport.ok` is the gate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr import fingerprint_parts, structural_fingerprint
+
+__all__ = [
+    "Perturbation", "RetraceFinding", "RetraceReport", "detect_retrace",
+    "driver_fingerprint", "make_static_parity_driver",
+    "make_traced_parity_driver",
+]
+
+
+@dataclass(frozen=True)
+class Perturbation:
+    """Sweep `knob` over `values`; `expect` declares whether the traces
+    must be shared (retrace-free) or distinct (the knob must matter)."""
+    knob: str
+    values: Tuple
+    expect: str = "shared"
+
+    def __post_init__(self):
+        if self.expect not in ("shared", "distinct"):
+            raise ValueError(f"expect must be 'shared' or 'distinct', "
+                             f"got {self.expect!r}")
+        if len(self.values) < 2:
+            raise ValueError(f"perturbation {self.knob!r} needs >= 2 "
+                             f"values to compare")
+
+
+@dataclass(frozen=True)
+class RetraceFinding:
+    knob: str
+    kind: str          # "leak" | "inert"
+    values: Tuple
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] knob {self.knob!r} over {self.values}: " \
+               f"{self.detail}"
+
+
+@dataclass
+class RetraceReport:
+    ok: bool
+    findings: Tuple[RetraceFinding, ...]
+    fingerprints: Dict[Tuple[str, object], str] = field(default_factory=dict)
+
+    def raise_if_failed(self) -> None:
+        if not self.ok:
+            lines = "\n  ".join(str(f) for f in self.findings)
+            raise AssertionError(
+                f"retrace detector failed ({len(self.findings)} "
+                f"finding(s)):\n  {lines}")
+
+
+def driver_fingerprint(fn, *args) -> str:
+    """Structural fingerprint of `fn(*args)`'s trace (never executed)."""
+    return structural_fingerprint(jax.make_jaxpr(fn)(*args))
+
+
+def _first_divergence(parts_a: Sequence[str], parts_b: Sequence[str]) -> str:
+    for i, (a, b) in enumerate(zip(parts_a, parts_b)):
+        if a != b:
+            return (f"first divergence at equation #{i}: "
+                    f"{a.strip()!r} vs {b.strip()!r}")
+    return (f"traces differ in length: {len(parts_a)} vs {len(parts_b)} "
+            f"equations")
+
+
+def detect_retrace(factory: Callable,
+                   perturbations: Sequence[Perturbation]) -> RetraceReport:
+    """`factory(**{knob: value}) -> (fn, args)` builds the driver under
+    one config override; each perturbation's values are traced and the
+    fingerprints compared against its expectation. All traces happen
+    under `jax.make_jaxpr` — nothing executes, nothing compiles."""
+    findings = []
+    fingerprints: Dict[Tuple[str, object], str] = {}
+    for pert in perturbations:
+        traces = []
+        for value in pert.values:
+            fn, args = factory(**{pert.knob: value})
+            closed = jax.make_jaxpr(fn)(*args)
+            parts = fingerprint_parts(closed.jaxpr)
+            fp = structural_fingerprint(closed)
+            fingerprints[(pert.knob, value)] = fp
+            traces.append((value, fp, parts))
+        base_value, base_fp, base_parts = traces[0]
+        for value, fp, parts in traces[1:]:
+            if pert.expect == "shared" and fp != base_fp:
+                findings.append(RetraceFinding(
+                    pert.knob, "leak", (base_value, value),
+                    "a static Python value leaked into the trace — jit "
+                    "retraces per config; "
+                    + _first_divergence(base_parts, parts)))
+            elif pert.expect == "distinct" and fp == base_fp:
+                findings.append(RetraceFinding(
+                    pert.knob, "inert", (base_value, value),
+                    "expected the knob to change the traced program but "
+                    "the fingerprints are identical — the config is "
+                    "silently ignored"))
+    return RetraceReport(ok=not findings, findings=tuple(findings),
+                         fingerprints=fingerprints)
+
+
+# ---- fixtures ----------------------------------------------------------
+
+def make_static_parity_driver(block_index: int = 0,
+                              shape: Tuple[int, int, int] = (4, 6, 8)):
+    """Deliberately-BROKEN fixture reintroducing the PR 5 bug class: the
+    double-buffered recv slot is selected with static Python parity
+    (`slots[block_index % 2]` resolved at trace time), so even and odd
+    blocks bake different slice params into the trace and every parity
+    flip retraces. The detector must flag this as a "leak" — the red
+    half of its acceptance gate. Returns `(fn, args)` for
+    `detect_retrace`'s factory protocol."""
+    slot = int(block_index) % 2   # the bug: parity resolved in Python
+
+    def step(u):
+        slots = jnp.stack([u, jnp.roll(u, 1, axis=1)])
+        return slots[slot] * 0.5
+
+    return step, (jnp.zeros(shape, jnp.float32),)
+
+
+def make_traced_parity_driver(block_index: int = 0,
+                              shape: Tuple[int, int, int] = (4, 6, 8)):
+    """The FIXED counterpart of `make_static_parity_driver`: the parity
+    is computed from a traced operand (`lax.rem` + dynamic indexing, the
+    PR 5 fix), so every block index shares one trace. The detector must
+    report it retrace-free — the green half of the fixture pair."""
+    def step(u, k):
+        slots = jnp.stack([u, jnp.roll(u, 1, axis=1)])
+        parity = jax.lax.rem(k, jnp.int32(2))
+        return jax.lax.dynamic_index_in_dim(
+            slots, parity, axis=0, keepdims=False) * 0.5
+
+    return step, (jnp.zeros(shape, jnp.float32), jnp.int32(block_index))

@@ -356,8 +356,21 @@ def guard_bytes_model(X: int, Y: int, Z: int, *, batch: int = 1,
         raise ValueError(f"extents must be >= 1, got {(X, Y, Z)}")
     if n_fields < 1:
         raise ValueError(f"n_fields must be >= 1, got {n_fields}")
-    return batch * (n_fields * X * Y * Z * itemsize
-                    + X * GUARD_FLAG_ITEMSIZE)
+    parts = guard_bytes_model_parts(X, Y, Z, batch=batch,
+                                    itemsize=itemsize, n_fields=n_fields)
+    return parts["field_reads"] + parts["flag_words"]
+
+
+def guard_bytes_model_parts(X: int, Y: int, Z: int, *, batch: int = 1,
+                            itemsize: int = 4,
+                            n_fields: int = 3) -> dict:
+    """`guard_bytes_model` split into its two movement categories —
+    ``{"field_reads": ..., "flag_words": ...}`` — matching the
+    analysis ledger's `guard_field_reads` / `guard_flag_words`
+    attribution, so the model-coverage pass can claim each category
+    exactly (their sum IS `guard_bytes_model`; a test pins it)."""
+    return {"field_reads": batch * n_fields * X * Y * Z * itemsize,
+            "flag_words": batch * X * GUARD_FLAG_ITEMSIZE}
 
 
 INTEGRITY_WORD_ITEMSIZE = 4   # band checksums are one uint32 word each

@@ -1118,6 +1118,27 @@ def fused_register_bytes(T: int, y_rows: int, Z: int, itemsize: int = 4,
     return n_fields * (n_slots * levels) * rows * Z * itemsize
 
 
+def dma_slab_bytes(shape, depth: int, dim: int, itemsize: int = 4, *,
+                   n_fields: int = 3) -> tuple[int, int]:
+    """Static sizes of the remote-DMA exchange's on-chip slabs for one
+    phase over a `shape` shard: ``(staged_send, recv)`` bytes, exactly
+    the scratch/out shapes `halo_band_exchange_dma` declares —
+    per-hop ``(n_fields, 2 sides) x stage_shape(cnt)`` VMEM staging
+    slabs (the hop band counts partition `depth`, so the sum is
+    depth-exact regardless of hop count) and ``n_fields x 2 sides x
+    2 recv slots`` of the full depth band. The analysis layer's
+    `vmem.distributed_block_plan` budgets these against
+    `roofline.VMEM_PER_CORE` before anything compiles."""
+    other = 1
+    for d, s in enumerate(shape):
+        if d != dim:
+            other *= s
+    staged = sum(n_fields * 2 * cnt * other * itemsize
+                 for _, cnt, _, _ in _band_schedule(shape[dim], depth))
+    recv = n_fields * 2 * 2 * depth * other * itemsize
+    return staged, recv
+
+
 def _n_y_tiles(Y: int, y_tile: int | None) -> int:
     if y_tile is None or y_tile >= Y:
         return 1

@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import vmem as AV
 from repro.kernels.advection import advection as K
 from repro.kernels.advection.ref import AdvectParams
 from repro.serving.faults import (DEFAULT_LADDER, DegradationLadder,
@@ -262,6 +263,13 @@ class StencilServingEngine:
     def _alloc(self, batch_size: int) -> None:
         d = self.domain
         dt = np.dtype(d.dtype)
+        # static VMEM budget BEFORE any allocation or compile: the
+        # batched slot rings must fit VMEM_PER_CORE (the analysis
+        # layer's generalisation of roofline.serving_max_batch — same
+        # bound, but the error names the buffer and its sizing)
+        AV.serving_ring_plan(d.Y, d.Z, batch=batch_size, T=d.fuse_T,
+                             itemsize=dt.itemsize, y_tile=d.y_tile,
+                             context="serving engine slot rings").check()
         self.B = batch_size
         self.slots = SlotManager(batch_size)
         shape = (batch_size, d.X, d.Y, d.Z)

@@ -353,8 +353,11 @@ def _check_step_config(T: int, local_kernel: str, exchange: str,
 
 
 def _check_integrity_config(verify_integrity: bool, corrupt_halo,
-                            exchange: str, interpret: bool) -> None:
-    """Build-time validation of the integrity layer's knobs."""
+                            exchange: str, interpret: bool,
+                            n_fields: int = 3) -> None:
+    """Build-time validation of the integrity layer's knobs. `n_fields`
+    bounds `corrupt_halo`'s field index — 3 (u, v, w) on the legacy
+    path, `spec.n_fields` on a spec-driven build."""
     if exchange == "remote_dma" and not interpret:
         if verify_integrity:
             raise RuntimeError(
@@ -370,9 +373,9 @@ def _check_integrity_config(verify_integrity: bool, corrupt_halo,
                 "injection hook. Use interpret=True.")
     if corrupt_halo is not None:
         fi, depth, _ = corrupt_halo
-        if not (0 <= int(fi) <= 2):
-            raise ValueError(f"corrupt_halo field index must be 0..2 "
-                             f"(u, v, w), got {fi}")
+        if not (0 <= int(fi) < n_fields):
+            raise ValueError(f"corrupt_halo field index must be "
+                             f"0..{n_fields - 1}, got {fi}")
         if int(depth) < 1:
             raise ValueError(f"corrupt_halo depth must be >= 1, "
                              f"got {depth}")
@@ -441,6 +444,19 @@ def _build_local_block(mesh: Mesh, params: AdvectParams, *, axis: str,
             raise ValueError(
                 f"halo depth T={T} exceeds the decomposable global X "
                 f"extent ({X_g} planes, interior {X_g - 2}); lower T")
+        if local_kernel == "fused" or (exchange == "remote_dma"
+                                       and not interpret):
+            # static VMEM budget: ring registers + DMA slabs summed
+            # against VMEM_PER_CORE at trace time, so an over-budget
+            # config fails BEFORE compile with the buffer named
+            # (the analysis layer's vmem pass, generalising the
+            # serving-only serving_max_batch check to every rung)
+            from repro.analysis import vmem as _vmem
+            _vmem.distributed_block_plan(
+                (Xl, Yl, Z), T=T, itemsize=u.dtype.itemsize,
+                local_kernel=local_kernel, exchange=exchange,
+                interpret=interpret, y_tile=y_tile, nx=n_x, ny=n_y,
+                context="distributed block").check()
         iy = jax.lax.axis_index(axis)
         ix = jax.lax.axis_index(x_axis) if dx else None
 
@@ -583,17 +599,19 @@ def _check_spec_step_config(spec, T: int, local_kernel: str, exchange: str,
             "hand-written halo_band_exchange_dma is 3-field advection-"
             "specific); use exchange='collective', or interpret=True for "
             "the schedule-faithful emulation.")
-    if verify_integrity or corrupt_halo is not None:
-        raise ValueError(
-            "verify_integrity / corrupt_halo are not wired to the "
-            "spec-driven path yet; build the step without spec= for the "
-            "checksummed exchange")
+    # verify_integrity / corrupt_halo ride the ppermute transports, which
+    # are field-count-generic (`band_checksum` works on any band) — the
+    # knobs plumb straight through; only the field-index bound changes.
+    _check_integrity_config(verify_integrity, corrupt_halo, exchange,
+                            interpret, n_fields=spec.n_fields)
 
 
 def _build_spec_local_block(mesh: Mesh, spec, spec_params, *, axis: str,
                             x_axis: Optional[str], T: int, dt: float,
                             local_kernel: str, y_tile: Optional[int],
-                            interpret: bool, overlap: bool, exchange: str):
+                            interpret: bool, overlap: bool, exchange: str,
+                            verify_integrity: bool = False,
+                            corrupt_halo=None):
     """Spec-generalised per-shard substep-block body: `spec.n_fields`
     fields exchanged ONCE at depth `D = spec.halo(T) = radius*stages*T`
     per T integrator steps — `_build_local_block` with every halo=T and
@@ -601,7 +619,12 @@ def _build_spec_local_block(mesh: Mesh, spec, spec_params, *, axis: str,
     field tuple. Both ppermute transports are already field-count- and
     depth-generic, so the engines are reused unchanged; only the compiled
     Mosaic DMA kernel (3-field, advection-specific) is rejected at build
-    time. Returns ``local_block(fields, block_index) -> fields``.
+    time. Returns ``local_block(fields, block_index) -> fields``, or
+    with `verify_integrity` ``-> fields + (mismatch,)`` — the
+    checksummed exchange of `_build_local_block` at the spec's field
+    count and depth (`corrupt_halo=(field_idx, rows, value)` is the
+    matching fault hook; `integrity_bytes_model(n_fields=spec.n_fields,
+    depth=spec.halo(T))` prices the extra words).
     """
     n_y = mesh.shape[axis]
     n_x = mesh.shape[x_axis] if x_axis is not None else 1
@@ -645,6 +668,16 @@ def _build_spec_local_block(mesh: Mesh, spec, spec_params, *, axis: str,
         X_g, Y_g = n_x * Xl, n_y * Yl
         dx = D if n_x > 1 else 0
         dy = D if n_y > 1 else 0
+        if local_kernel == "fused":
+            # static VMEM budget: refuse an over-budget ring at trace
+            # time, naming the buffer (analysis layer's vmem pass)
+            from repro.analysis import vmem as _vmem
+            _vmem.distributed_block_plan(
+                (Xl, Yl, Z), T=T, itemsize=fields[0].dtype.itemsize,
+                local_kernel=local_kernel, exchange=exchange,
+                interpret=interpret, y_tile=y_tile, nx=n_x, ny=n_y,
+                spec=spec, context="spec-driven distributed block"
+            ).check()
         if dy and D > Y_g - 2 * r:
             raise ValueError(
                 f"halo depth spec.halo(T)={D} exceeds the decomposable "
@@ -658,17 +691,46 @@ def _build_spec_local_block(mesh: Mesh, spec, spec_params, *, axis: str,
         iy = jax.lax.axis_index(axis)
         ix = jax.lax.axis_index(x_axis) if dx else None
 
+        # ---- integrity / fault-injection plumbing (as in
+        # `_build_local_block`): one mismatch word per verified band,
+        # injected damage on the LAST exchanged phase.
+        integrity_out = [] if verify_integrity else None
+        corrupt_dim = None
+        if corrupt_halo is not None and (dx or dy):
+            corrupt_dim = 1 if dy else 0
+
         # ---- two-phase x-then-y exchange at depth D; same engine dispatch
         # and corner contract as `_build_local_block` (module docstring).
         def _extend(fs, ax_name, n, dim):
+            def _corrupt_for(fi):
+                if corrupt_dim != dim or fi != int(corrupt_halo[0]):
+                    return None
+                return (int(corrupt_halo[1]), corrupt_halo[2])
+
             if exchange == "remote_dma":
                 return tuple(
-                    _exchange_remote_dma_emulated(f, ax_name, n, D, dim)
-                    for f in fs)
-            hs = [_exchange_halos(f, ax_name, n, depth=D, dim=dim)
-                  for f in fs]
+                    _exchange_remote_dma_emulated(
+                        f, ax_name, n, D, dim,
+                        integrity_out=integrity_out,
+                        corrupt=(_corrupt_for(fi)
+                                 if corrupt_halo is not None else None))
+                    for fi, f in enumerate(fs))
+            hs = [_exchange_halos(f, ax_name, n, depth=D, dim=dim,
+                                  integrity_out=integrity_out,
+                                  corrupt=(_corrupt_for(fi)
+                                           if corrupt_halo is not None
+                                           else None))
+                  for fi, f in enumerate(fs)]
             return tuple(jnp.concatenate([h[0], f, h[1]], axis=dim)
                          for f, h in zip(fs, hs))
+
+        def _with_flag(out):
+            if not verify_integrity:
+                return out
+            mismatch = jnp.zeros((), jnp.uint32)
+            for m in (integrity_out or []):
+                mismatch = mismatch + m.reshape(())
+            return tuple(out) + (mismatch.reshape(_flag_shape(x_axis)),)
 
         ext = tuple(fields)
         if dx:
@@ -689,7 +751,7 @@ def _build_spec_local_block(mesh: Mesh, spec, spec_params, *, axis: str,
         outs = _substeps(ext, x_int, y_int, y_tile)
         out = tuple(f[dx:dx + Xl, dy:dy + Yl, :] for f in outs)
         if not (overlap and (dx or dy)):
-            return out
+            return _with_flag(out)
 
         # ---- interior pass (no exchange dependence); shard-cut walls
         # contaminate < D cells inward, the select discards those bands.
@@ -708,22 +770,29 @@ def _build_spec_local_block(mesh: Mesh, spec, spec_params, *, axis: str,
         ok_y = jnp.ones((Yl,), jnp.bool_) if not dy else (
             ((iy == 0) | (sy >= D)) & ((iy == n_y - 1) | (sy < Yl - D)))
         sel = (ok_x[:, None] & ok_y[None, :])[:, :, None]
-        return tuple(jnp.where(sel, i, b) for i, b in zip(inner, out))
+        return _with_flag(tuple(jnp.where(sel, i, b)
+                                for i, b in zip(inner, out)))
 
     return local_block
 
 
 def _wrap_spec_shard_map(local, mesh: Mesh, axis: str,
                          x_axis: Optional[str], local_kernel: str,
-                         n_fields: int, *, n_scalars: int = 0,
+                         n_fields: int, *, integrity: bool = False,
+                         n_scalars: int = 0,
                          check_rep_off: bool = False):
-    """`_wrap_shard_map` for an n-field spec program (no integrity flag —
-    the spec path rejects verify_integrity at build time)."""
+    """`_wrap_shard_map` for an n-field spec program. `integrity`
+    appends the per-shard mismatch flag to the out_specs — the same
+    `_flag_shape` layout as the legacy path."""
     p = (P(None, axis, None) if x_axis is None else P(x_axis, axis, None))
+    flag_spec = P(axis) if x_axis is None else P(x_axis, axis)
     uses_pallas = local_kernel == "fused"
+    out_specs = (p,) * n_fields
+    if integrity:
+        out_specs = out_specs + (flag_spec,)
     fn = shard_map(local, mesh=mesh,
                    in_specs=(p,) * n_fields + (P(),) * n_scalars,
-                   out_specs=(p,) * n_fields,
+                   out_specs=out_specs,
                    check_rep=not (uses_pallas or check_rep_off))
     return jax.jit(fn)
 
@@ -824,13 +893,15 @@ def make_distributed_step(mesh: Mesh, params: AdvectParams, *,
         spec_block = _build_spec_local_block(
             mesh, spec, spec_params, axis=axis, x_axis=x_axis, T=T, dt=dt,
             local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
-            overlap=overlap, exchange=exchange)
+            overlap=overlap, exchange=exchange,
+            verify_integrity=verify_integrity, corrupt_halo=corrupt_halo)
 
         def spec_local(*fields):
             return spec_block(fields, dma_block_index)
 
         return _wrap_spec_shard_map(spec_local, mesh, axis, x_axis,
-                                    local_kernel, spec.n_fields)
+                                    local_kernel, spec.n_fields,
+                                    integrity=verify_integrity)
     _check_integrity_config(verify_integrity, corrupt_halo, exchange,
                             interpret)
     _check_step_config(T, local_kernel, exchange, interpret)
@@ -1004,19 +1075,27 @@ def make_distributed_run(mesh: Mesh, params: AdvectParams, *,
         spec_block = _build_spec_local_block(
             mesh, spec, spec_params, axis=axis, x_axis=x_axis, T=T, dt=dt,
             local_kernel=local_kernel, y_tile=y_tile, interpret=interpret,
-            overlap=overlap, exchange=exchange)
+            overlap=overlap, exchange=exchange,
+            verify_integrity=verify_integrity)
 
         def spec_local(*args):
             fields, start, end = args[:-2], args[-2], args[-1]
 
-            def body(k, carry):
-                return spec_block(carry, k)
-
-            return jax.lax.fori_loop(start, end, body, tuple(fields))
+            if verify_integrity:
+                def body(k, carry):
+                    out = spec_block(carry[:-1], k)
+                    return out[:-1] + (carry[-1] + out[-1],)
+                init = tuple(fields) + (
+                    jnp.zeros(_flag_shape(x_axis), jnp.uint32),)
+            else:
+                def body(k, carry):
+                    return spec_block(carry, k)
+                init = tuple(fields)
+            return jax.lax.fori_loop(start, end, body, init)
 
         spec_core = _wrap_spec_shard_map(
             spec_local, mesh, axis, x_axis, local_kernel, spec.n_fields,
-            n_scalars=2, check_rep_off=True)
+            integrity=verify_integrity, n_scalars=2, check_rep_off=True)
 
         def spec_run(*fields):
             return spec_core(*fields, 0, n_blocks)
@@ -1123,39 +1202,16 @@ def resume_distributed_run(mesh: Mesh, params: AdvectParams, u, v, w, *,
         keep_last=keep_last, save_initial=False)
 
 
-def _iter_jaxprs(val):
-    core = jax.core
-    if isinstance(val, core.ClosedJaxpr):
-        yield val.jaxpr
-    elif isinstance(val, core.Jaxpr):
-        yield val
-    elif isinstance(val, (list, tuple)):
-        for v in val:
-            yield from _iter_jaxprs(v)
-
-
-def _count_ppermute_bytes(fn, args, keep) -> int:
-    """Summed sizes of the ppermute operands selected by `keep(aval)` in
-    `fn`'s recursively walked jaxpr (shared by the wire and integrity
-    counters — the two partition the ppermute traffic by rank)."""
-    closed = jax.make_jaxpr(fn)(*args)
-    total = 0
-
-    def walk(jaxpr):
-        nonlocal total
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "ppermute":
-                for var in eqn.invars:
-                    aval = var.aval
-                    if keep(aval):
-                        total += (int(np.prod(aval.shape))
-                                  * aval.dtype.itemsize)
-            for pval in eqn.params.values():
-                for sub in _iter_jaxprs(pval):
-                    walk(sub)
-
-    walk(closed.jaxpr)
-    return total
+# The jaxpr traversal and byte attribution live in `repro.analysis` now
+# (ONE walker instead of four copies); re-exported under the old private
+# names so existing callers and tests need no edits, and the four
+# counters below are thin wrappers whose values are byte-identical to
+# the pre-refactor implementations (the BENCH gates are the regression
+# test; tests/test_analysis_ledger.py pins the equivalence directly).
+from repro.analysis.jaxpr import iter_jaxprs as _iter_jaxprs  # noqa: E402
+from repro.analysis.ledger import (  # noqa: E402
+    MovementLedger as _MovementLedger,
+    count_ppermute_bytes as _count_ppermute_bytes)
 
 
 def count_exchange_wire_bytes(fn, *args) -> int:
@@ -1184,8 +1240,7 @@ def count_exchange_wire_bytes(fn, *args) -> int:
     gate: a driver that unrolled or retraced per block would count K
     times the model.
     """
-    return _count_ppermute_bytes(fn, args,
-                                 lambda aval: getattr(aval, "ndim", 0) >= 3)
+    return _MovementLedger.of(fn, *args).total("ppermute_wire")
 
 
 def count_integrity_bytes(fn, *args) -> int:
@@ -1199,8 +1254,7 @@ def count_integrity_bytes(fn, *args) -> int:
     equal EXACTLY, per block even on a `make_distributed_run` program
     (the fori body is walked once — same trace-once argument as the wire
     count)."""
-    return _count_ppermute_bytes(fn, args,
-                                 lambda aval: getattr(aval, "ndim", 0) < 3)
+    return _MovementLedger.of(fn, *args).total("integrity_words")
 
 
 def count_pallas_hbm_bytes(fn, *args) -> int:
@@ -1218,24 +1272,14 @@ def count_pallas_hbm_bytes(fn, *args) -> int:
     EXACTLY (and the batched mega-launch counts B times that) — the
     measured counterpart of the model, gated in BENCH_serving.json the
     way `count_exchange_wire_bytes` is gated in BENCH_scaling2d.json.
+
+    The ledger splits the guard pass's field re-read into its own
+    category; this counter keeps the legacy semantics (EVERY
+    pallas_call's rank >= 3 operands, guard included), so it sums the
+    `pallas_hbm` and `guard_field_reads` categories.
     """
-    closed = jax.make_jaxpr(fn)(*args)
-    total = 0
-
-    def walk(jaxpr):
-        nonlocal total
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                for var in list(eqn.invars) + list(eqn.outvars):
-                    aval = var.aval
-                    if getattr(aval, "ndim", 0) >= 3:
-                        total += int(np.prod(aval.shape)) * aval.dtype.itemsize
-            for pval in eqn.params.values():
-                for sub in _iter_jaxprs(pval):
-                    walk(sub)
-
-    walk(closed.jaxpr)
-    return total
+    return _MovementLedger.of(fn, *args).total(
+        "pallas_hbm", "guard_field_reads")
 
 
 def count_guard_bytes(fn, *args) -> int:
@@ -1253,26 +1297,8 @@ def count_guard_bytes(fn, *args) -> int:
     traffic priced under the same model-equals-counted discipline as the
     field and wire bytes.
     """
-    closed = jax.make_jaxpr(fn)(*args)
-    total = 0
-
-    def nbytes(var):
-        aval = var.aval
-        return int(np.prod(aval.shape)) * aval.dtype.itemsize
-
-    def walk(jaxpr):
-        nonlocal total
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call" and all(
-                    getattr(v.aval, "ndim", 3) < 3 for v in eqn.outvars):
-                total += sum(nbytes(v) for v in eqn.invars)
-                total += sum(nbytes(v) for v in eqn.outvars)
-            for pval in eqn.params.values():
-                for sub in _iter_jaxprs(pval):
-                    walk(sub)
-
-    walk(closed.jaxpr)
-    return total
+    return _MovementLedger.of(fn, *args).total(
+        "guard_field_reads", "guard_flag_words")
 
 
 def reference_global(u, v, w, params: AdvectParams):

@@ -1,0 +1,139 @@
+"""Retrace detector: config knobs must not leak static Python values
+into the trace (the PR 5 `dma_block_index` bug class).
+
+Fast tier (1-device, runs under `-m "not slow"`):
+  * the deliberately-broken static-parity fixture is flagged RED with a
+    "leak" finding naming the first diverging equation, and its
+    traced-parity fix is GREEN — the detector's acceptance pair;
+  * expect="distinct" catches a silently-ignored knob ("inert");
+  * `Perturbation` validates its inputs; `driver_fingerprint` is
+    deterministic and literal-value-insensitive (a literal passed as an
+    argument is cache-compatible, so it must not split fingerprints).
+
+Slow tier (4-device subprocess): the real drivers —
+`make_distributed_run` shares one trace across `n_blocks` and block
+parities while `y_tile` genuinely changes it, and
+`make_distributed_step(exchange="remote_dma")` shares one trace across
+`dma_block_index` values (the regression that motivated the pass).
+"""
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+
+from _subproc import run_ok
+from repro.analysis import (Perturbation, detect_retrace,
+                            driver_fingerprint, make_static_parity_driver,
+                            make_traced_parity_driver)
+
+
+def test_static_parity_fixture_flagged_red():
+    report = detect_retrace(
+        make_static_parity_driver,
+        [Perturbation("block_index", (0, 1), expect="shared")])
+    assert not report.ok
+    assert len(report.findings) == 1
+    f = report.findings[0]
+    assert f.kind == "leak" and f.knob == "block_index"
+    assert "divergence" in f.detail or "differ" in f.detail
+    with pytest.raises(AssertionError, match="block_index"):
+        report.raise_if_failed()
+    # the two parities fingerprint differently — that IS the bug
+    assert (report.fingerprints[("block_index", 0)]
+            != report.fingerprints[("block_index", 1)])
+
+
+def test_traced_parity_fixture_green():
+    report = detect_retrace(
+        make_traced_parity_driver,
+        [Perturbation("block_index", (0, 1, 2, 3), expect="shared")])
+    assert report.ok and not report.findings
+    report.raise_if_failed()            # no-op when green
+    fps = {report.fingerprints[("block_index", k)] for k in range(4)}
+    assert len(fps) == 1
+
+
+def test_inert_knob_detected():
+    # a factory that IGNORES its knob entirely: expect="distinct" must
+    # flag the config as silently dead
+    def factory(y_tile=2):
+        del y_tile
+        return (lambda u: u * 2.0), (jnp.zeros((4, 6, 8), jnp.float32),)
+
+    report = detect_retrace(
+        factory, [Perturbation("y_tile", (2, 4), expect="distinct")])
+    assert not report.ok
+    assert report.findings[0].kind == "inert"
+    # and the same factory passes under expect="shared"
+    assert detect_retrace(
+        factory, [Perturbation("y_tile", (2, 4), expect="shared")]).ok
+
+
+def test_perturbation_validation():
+    with pytest.raises(ValueError, match="shared"):
+        Perturbation("k", (1, 2), expect="same")
+    with pytest.raises(ValueError, match=">= 2"):
+        Perturbation("k", (1,))
+
+
+def test_driver_fingerprint_deterministic_and_literal_insensitive():
+    x = jnp.ones((4, 6, 8), jnp.float32)
+    fn = lambda u: u * 2.0 + 1.0
+    assert driver_fingerprint(fn, x) == driver_fingerprint(fn, x)
+    # a different SHAPE is a different trace
+    assert (driver_fingerprint(fn, x)
+            != driver_fingerprint(fn, jnp.ones((4, 6, 16), jnp.float32)))
+    # different literal VALUES are cache-compatible: scaling by 2 vs 3
+    # shares the program structure, so the fingerprints must agree
+    assert (driver_fingerprint(lambda u: u * 2.0, x)
+            == driver_fingerprint(lambda u: u * 3.0, x))
+
+
+# --- slow tier: the real distributed drivers --------------------------------
+
+RETRACE_DRIVERS_CODE = textwrap.dedent("""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from repro.analysis import Perturbation, detect_retrace
+    from repro.launch.mesh import make_stencil_mesh
+    from repro.kernels.advection.ref import default_params
+    from repro.stencil import distributed as D
+
+    p = default_params(12)
+    mesh = make_stencil_mesh(2, 2)
+    key = jax.random.PRNGKey(0)
+    G = tuple(jax.random.normal(jax.random.fold_in(key, i),
+                                (8, 8, 12), jnp.float32) * 0.01
+              for i in range(3))
+
+    def run_factory(n_blocks=2, y_tile=None):
+        fn = D.make_distributed_run(mesh, p, n_blocks=n_blocks, axis="y",
+                                    x_axis="x", T=2, local_kernel="fused",
+                                    y_tile=y_tile)
+        return fn, G
+
+    report = detect_retrace(run_factory, [
+        Perturbation("n_blocks", (2, 3), expect="shared"),
+        Perturbation("y_tile", (2, 4), expect="distinct"),
+    ])
+    report.raise_if_failed()
+
+    def step_factory(dma_block_index=0):
+        fn = D.make_distributed_step(mesh, p, axis="y", x_axis="x", T=2,
+                                     exchange="remote_dma",
+                                     dma_block_index=dma_block_index)
+        return fn, G
+
+    report = detect_retrace(step_factory, [
+        Perturbation("dma_block_index", (0, 1), expect="shared"),
+    ])
+    report.raise_if_failed()
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_real_drivers_retrace_free_multidevice():
+    run_ok(RETRACE_DRIVERS_CODE, timeout=600)

@@ -326,3 +326,18 @@ def test_stencil_ridge_T_crosses_ridge():
         >= ridge - 1e-9
     assert Tr > 1
     assert R.stencil_arithmetic_intensity(fpc, bpc, fusion_T=Tr - 1) < ridge
+
+
+@given(X=st.integers(1, 16), Y=st.integers(1, 32), Z=st.integers(1, 256),
+       batch=st.integers(1, 8), n_fields=st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_guard_parts_sum_to_guard_bytes_model(X, Y, Z, batch, n_fields):
+    """The two-category split the analysis ledger claims
+    (`guard_field_reads` / `guard_flag_words`) recomposes
+    `guard_bytes_model` exactly, for every geometry."""
+    parts = R.guard_bytes_model_parts(X, Y, Z, batch=batch,
+                                      n_fields=n_fields)
+    assert set(parts) == {"field_reads", "flag_words"}
+    assert sum(parts.values()) == R.guard_bytes_model(X, Y, Z, batch=batch,
+                                                      n_fields=n_fields)
+    assert parts["flag_words"] == batch * X * R.GUARD_FLAG_ITEMSIZE

@@ -1,0 +1,102 @@
+"""Trend-gate script hardening (`scripts/check_bench_trends.py`): every
+failure mode of a hand-edited baselines.json or an interrupted sweep must
+be a SystemExit that NAMES the offending artifact — never a bare
+KeyError/JSONDecodeError traceback. Loaded via importlib from the
+scripts/ path (the file is a script, not a package module).
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench_trends",
+    os.path.join(os.path.dirname(__file__), os.pardir, "scripts",
+                 "check_bench_trends.py"))
+bt = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bt)
+
+DOC = {"ledger": [{"categories": {"pallas_hbm": 64, "note": "text"}}],
+       "scalar": 7}
+
+
+def test_resolve_walks_dicts_and_lists():
+    assert bt.resolve(DOC, "scalar") == 7
+    assert bt.resolve(DOC, "ledger.0.categories.pallas_hbm",
+                      "BENCH_x.json") == 64
+
+
+@pytest.mark.parametrize("path,needle", [
+    ("ledger.9.categories", "does not index the list"),
+    ("ledger.nope.categories", "does not index the list"),
+    ("missing_key", "missing"),
+    ("scalar.deeper", "descends into a leaf"),
+    ("ledger.0.categories.note", "not a number"),
+])
+def test_resolve_errors_name_the_artifact(path, needle):
+    with pytest.raises(SystemExit) as ei:
+        bt.resolve(DOC, path, "BENCH_x.json")
+    msg = str(ei.value)
+    assert "BENCH_x.json" in msg and needle in msg
+
+
+def test_entry_fields_validates_schema():
+    assert bt.entry_fields("a.json", {"path": "p", "value": 1,
+                                      "direction": "eq"}) == ("p", 1, "eq")
+    with pytest.raises(SystemExit, match="a.json.*not an object"):
+        bt.entry_fields("a.json", ["path", "value"])
+    with pytest.raises(SystemExit) as ei:
+        bt.entry_fields("a.json", {"path": "p", "value": 1})
+    assert "a.json" in str(ei.value) and "direction" in str(ei.value)
+
+
+def test_load_artifact_names_file_on_malformed_json(tmp_path):
+    good = tmp_path / "BENCH_ok.json"
+    good.write_text(json.dumps({"x": 1}))
+    assert bt.load_artifact(str(good), "BENCH_ok.json") == {"x": 1}
+    bad = tmp_path / "BENCH_trunc.json"
+    bad.write_text('{"x": [1, 2')        # an interrupted sweep's artifact
+    with pytest.raises(SystemExit) as ei:
+        bt.load_artifact(str(bad), "BENCH_trunc.json")
+    msg = str(ei.value)
+    assert "BENCH_trunc.json" in msg and "not valid JSON" in msg
+    assert "rerun" in msg
+
+
+def test_check_directions_pass_and_fail():
+    doc = {"v": 10}
+    mk = lambda d, want, **kw: dict({"path": "v", "direction": d,
+                                     "value": want}, **kw)
+    assert bt.check("a.json", [mk("eq", 10), mk("le", 10),
+                               mk("ge", 10)], doc) == []
+    assert bt.check("a.json", [mk("le", 9, rtol=0.2)], doc) == []
+    fails = bt.check("a.json", [mk("eq", 9), mk("le", 8), mk("ge", 11)],
+                     doc)
+    assert len(fails) == 3 and all("a.json:v" in f for f in fails)
+    with pytest.raises(SystemExit, match="bad direction"):
+        bt.check("a.json", [mk("lt", 9)], doc)
+
+
+def test_main_gate_and_update_roundtrip(tmp_path, monkeypatch, capsys):
+    baselines = tmp_path / "baselines.json"
+    baselines.write_text(json.dumps(
+        {"BENCH_t.json": [{"path": "v", "direction": "eq", "value": 3}]}))
+    monkeypatch.setattr(bt, "BASELINES", str(baselines))
+    monkeypatch.chdir(tmp_path)
+
+    # missing artifact: named, with the remedy
+    with pytest.raises(SystemExit, match="BENCH_t.json not found"):
+        bt.main([])
+    (tmp_path / "BENCH_t.json").write_text(json.dumps({"v": 3}))
+    bt.main([])                                         # gate passes
+    assert "1 baselines hold" in capsys.readouterr().out
+
+    # regression -> SystemExit listing the failing path
+    (tmp_path / "BENCH_t.json").write_text(json.dumps({"v": 4}))
+    with pytest.raises(SystemExit, match="BENCH_t.json:v"):
+        bt.main([])
+    # --update rewrites the baseline to the current value
+    bt.main(["--update"])
+    assert json.loads(baselines.read_text())["BENCH_t.json"][0]["value"] == 4
+    bt.main([])                                         # and now it gates

@@ -1,0 +1,133 @@
+"""HLO-text collective inventory (`core.hlo`): checked-in HLO fixtures
+pin the ring-algorithm wire accounting, replica-group span classification
+(ici vs dcn under `pod_size`), async -start/-done dedup, and the op
+census — no device or compile needed, the module is pure text analysis.
+"""
+import pytest
+
+from repro.core.hlo import (collective_summary, op_census,
+                            parse_collectives, total_wire_bytes)
+
+# A hand-written HLO module exercising all five collective kinds. Byte
+# math: all-reduce f32[128,64] = 32768 B over a 4-group; all-gather
+# f32[256] = 1024 B over iota [2,4]<=[8]; reduce-scatter f32[64] = 256 B
+# over a 4-group; all-to-all f32[32,32] = 4096 B over a pair;
+# collective-permute f32[8,12] = 384 B (no replica_groups -> unknown).
+FIVE_KINDS = """\
+HloModule jit_step
+
+%sum {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %ar = f32[128,64]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = f32[256]{0} all-gather(%p0), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(%p0), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%sum
+  %a2a = f32[32,32]{1,0} all-to-all(%p0), replica_groups={{0,1}}, dimensions={0}
+  %cp = f32[8,12]{1,0} collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+
+def test_ring_accounting_per_kind():
+    ops = {o.name: o for o in parse_collectives(FIVE_KINDS)}
+    assert set(ops) == {"ar", "ag", "rs", "a2a", "cp"}
+    # all-reduce: 2(n-1)/n * B = 2 * 3/4 * 32768
+    assert ops["ar"].out_bytes == 32768 and ops["ar"].wire_bytes == 49152.0
+    # all-gather: (n-1)/n * B_out = 3/4 * 1024, group size from iota form
+    assert ops["ag"].group_size == 4 and ops["ag"].wire_bytes == 768.0
+    # reduce-scatter: (n-1) * B_out = 3 * 256
+    assert ops["rs"].wire_bytes == 768.0
+    # all-to-all: (n-1)/n * B = 1/2 * 4096
+    assert ops["a2a"].group_size == 2 and ops["a2a"].wire_bytes == 2048.0
+    # collective-permute: B, and no replica_groups means span unknown
+    assert ops["cp"].wire_bytes == 384.0
+    assert ops["cp"].group_span == "unknown"
+
+
+def test_span_classification_and_filtered_totals():
+    # pod_size=0 (unknown topology): grouped ops default to ici
+    assert all(o.group_span == "ici" for o in parse_collectives(FIVE_KINDS)
+               if o.name != "cp")
+    # pod_size=2: the 4-wide groups straddle pods, the pair {0,1} does not
+    ops = parse_collectives(FIVE_KINDS, pod_size=2)
+    spans = {o.name: o.group_span for o in ops}
+    assert spans == {"ar": "dcn", "ag": "dcn", "rs": "dcn",
+                     "a2a": "ici", "cp": "unknown"}
+    assert total_wire_bytes(ops, span="ici") == 2048.0
+    assert total_wire_bytes(ops, span="dcn") == 49152.0 + 768.0 + 768.0
+    assert total_wire_bytes(ops) == pytest.approx(53120.0)
+
+
+def test_iota_groups_pod_size_boundary():
+    # iota [2,4]<=[8]: stride 1, span 4 — intra-pod iff pod_size >= 4
+    line = ("%ag = f32[256]{0} all-gather(%p0), "
+            "replica_groups=[2,4]<=[8], dimensions={0}\n")
+    assert parse_collectives(line, pod_size=8)[0].group_span == "ici"
+    assert parse_collectives(line, pod_size=4)[0].group_span == "ici"
+    assert parse_collectives(line, pod_size=2)[0].group_span == "dcn"
+
+
+def test_explicit_groups_pod_size_boundary():
+    # {0,4} stays in one 8-chip pod but crosses 4-chip pods
+    line = ("%ar2 = f32[16]{0} all-reduce(%p0), "
+            "replica_groups={{0,4},{1,5}}, to_apply=%sum\n")
+    ici = parse_collectives(line, pod_size=8)[0]
+    dcn = parse_collectives(line, pod_size=4)[0]
+    assert ici.group_span == "ici" and dcn.group_span == "dcn"
+    assert ici.group_size == 2
+    assert ici.wire_bytes == 64.0       # 2 * 1/2 * 64 B
+
+
+def test_async_start_counted_done_skipped_and_name_dedup():
+    text = """\
+  %all-gather-start.3 = (f32[64]{0}, f32[256]{0}) all-gather-start(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %all-gather-done.3 = f32[256]{0} all-gather-done(%all-gather-start.3)
+  %ar = f32[16]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%sum
+  %ar = f32[16]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%sum
+"""
+    ops = parse_collectives(text)
+    # -done carries no new bytes; the duplicated %ar line is deduped
+    assert [o.name for o in ops] == ["all-gather-start.3", "ar"]
+    # tuple output (f32[64], f32[256]) = 1280 B, 4-ring: 3/4 * 1280
+    assert ops[0].out_bytes == 1280 and ops[0].wire_bytes == 960.0
+
+
+def test_malformed_lines_are_ignored():
+    text = """\
+this line is not HLO at all
+  %weird = all-reduce
+  all-gather without an assignment
+  %ok = f32[8]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%sum
+"""
+    ops = parse_collectives(text)
+    assert [o.name for o in ops] == ["ok"]
+    assert ops[0].wire_bytes == 32.0    # 2 * 1/2 * 32 B
+
+
+def test_collective_summary_keys_and_counts():
+    summary = collective_summary(parse_collectives(FIVE_KINDS, pod_size=2))
+    assert summary["all-reduce/dcn"] == {"count": 1, "wire_bytes": 49152.0}
+    assert summary["all-to-all/ici"] == {"count": 1, "wire_bytes": 2048.0}
+    assert summary["collective-permute/unknown"]["count"] == 1
+    assert sum(v["count"] for v in summary.values()) == 5
+
+
+def test_op_census_counts_compute_and_layout_ops():
+    text = """\
+  %d = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+  %f = f32[8,8]{1,0} fusion(%a), kind=kLoop, calls=%fused_computation
+  %c = f32[8,8]{1,0} copy(%a)
+  %t = f32[8,8]{1,0} transpose(%a), dimensions={1,0}
+  %ar = f32[8,8]{1,0} all-reduce(%a), replica_groups={{0,1}}, to_apply=%sum
+"""
+    census = op_census(text)
+    assert census["dot"] == 1
+    assert census["fusion"] == 1
+    assert census["layout_change"] == 2         # copy + transpose
+    assert census["all-reduce"] == 1
+    assert op_census("no ops here\n") == {}

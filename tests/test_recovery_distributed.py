@@ -6,7 +6,8 @@ Fast tier (1-device wiring, runs under `-m "not slow"`):
     message);
   * a verified step on an undecomposed mesh is BITWISE-equal to the
     unchecked step, reports zero mismatch flags, and counts zero
-    integrity bytes == the model;
+    integrity bytes == the model (on the hand-written AND the
+    stencil-spec path — the integrity layer rides `spec=` builds too);
   * the integrity layer's build-time config errors (compiled Mosaic DMA
     has no checksum channel / injection hook);
   * `make_distributed_run(checkpoint_every=, checkpoint_dir=)` +
@@ -16,7 +17,9 @@ Fast tier (1-device wiring, runs under `-m "not slow"`):
 
 Slow tier (4-device subprocess sweeps, the bench-gate contracts at test
 size): counted integrity bytes == model EXACTLY on both ppermute
-engines, checksummed clean run bitwise == unchecked, injected corruption
+engines (hand-written advection AND the spec-driven tracer operator, at
+`n_fields=spec.n_fields` / `depth=spec.halo(T)`), checksummed clean run
+bitwise == unchecked, injected corruption
 detected (`HaloCorrupted`), multi-device checkpoint/resume bitwise, the
 resilient driver's clean plan == `make_distributed_run` (the
 dma_block_index parity regression), and elastic shrink/regrow bitwise.
@@ -126,6 +129,38 @@ def test_integrity_config_build_time_errors():
     with pytest.raises(ValueError, match="depth"):
         D.make_distributed_step(mesh, p, axis="data", x_axis=None, T=T,
                                 dt=DT, corrupt_halo=(0, 0, float("nan")))
+
+
+def test_spec_verified_step_one_device_bitwise_and_priced():
+    # the integrity layer rides the SPEC path too: n_fields slabs, one
+    # extra uint32 flag output, fields bitwise-identical to unchecked
+    from repro.stencil.spec import tracer_advection_spec
+    mesh, p, _ = _setup()
+    spec = tracer_advection_spec()
+    fields = stratus_fields(X, Y, Z, seed=1)
+    fields = tuple(fields) + tuple(
+        f * 0.5 for f in fields[:spec.n_fields - 3])
+    kw = dict(axis="data", x_axis=None, T=T, dt=DT, spec=spec,
+              spec_params=p)
+    step0 = D.make_distributed_step(mesh, p, **kw)
+    stepv = D.make_distributed_step(mesh, p, verify_integrity=True, **kw)
+    o0 = step0(*fields)
+    *ov, flags = stepv(*fields)
+    assert len(ov) == spec.n_fields
+    for a, b in zip(o0, ov):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    D.check_integrity(flags)
+    assert int(np.sum(np.asarray(flags))) == 0
+    # undecomposed: zero words counted == modelled at the spec's field
+    # count and halo depth
+    assert D.count_integrity_bytes(stepv, *fields) == 0
+    assert R.integrity_bytes_model(X, Y, Z, nx=1, ny=1, T=T,
+                                   n_fields=spec.n_fields,
+                                   depth=spec.halo(T)) == 0
+    # the spec path validates corrupt_halo against spec.n_fields
+    with pytest.raises(ValueError, match="field index"):
+        D.make_distributed_step(
+            mesh, p, corrupt_halo=(spec.n_fields, 1, float("nan")), **kw)
 
 
 def test_resize_stencil_mesh_validates():
@@ -340,9 +375,66 @@ RESILIENT_CODE = _PRELUDE + textwrap.dedent("""
 """)
 
 
+SPEC_INTEGRITY_CODE = _PRELUDE + textwrap.dedent("""
+    from repro.stencil.spec import tracer_advection_spec
+
+    spec = tracer_advection_spec()
+    mesh2 = make_stencil_mesh(2, 2)
+    GX, GY = 8, 8
+    key = jax.random.PRNGKey(3)
+    fields = tuple(jax.random.normal(jax.random.fold_in(key, i),
+                                     (GX, GY, Z), jnp.float32) * 0.01
+                   for i in range(spec.n_fields))
+    skw = dict(axis="y", x_axis="x", T=1, dt=DT, spec=spec, spec_params=p)
+    model = RL.integrity_bytes_model(GX, GY, Z, nx=2, ny=2, T=1,
+                                     n_fields=spec.n_fields,
+                                     depth=spec.halo(1))
+    for ex in ("collective", "remote_dma"):
+        step0 = D.make_distributed_step(mesh2, p, exchange=ex, **skw)
+        stepv = D.make_distributed_step(mesh2, p, exchange=ex,
+                                        verify_integrity=True, **skw)
+        o0 = step0(*fields)
+        *ov, fl = stepv(*fields)
+        bw(o0, ov)                       # checksums change nothing
+        assert int(np.sum(np.asarray(fl))) == 0, ex
+        counted = D.count_integrity_bytes(stepv, *fields)
+        assert counted == model > 0, (ex, counted, model)
+        # field wire bytes are verify-invariant at the spec's depth
+        assert (D.count_exchange_wire_bytes(step0, *fields)
+                == D.count_exchange_wire_bytes(stepv, *fields)), ex
+        # injected wire damage on the LAST (tracer) field is caught
+        stepc = D.make_distributed_step(
+            mesh2, p, exchange=ex, verify_integrity=True,
+            corrupt_halo=(spec.n_fields - 1, 1, float("nan")), **skw)
+        *oc, flc = stepc(*fields)
+        assert int(np.sum(np.asarray(flc))) > 0, ex
+        try:
+            D.check_integrity(flc)
+            raise SystemExit("spec corruption not raised")
+        except D.HaloCorrupted:
+            pass
+    # the verified RUN accumulates flags across blocks and stays bitwise
+    run0 = D.make_distributed_run(mesh2, p, n_blocks=3, **skw)
+    runv = D.make_distributed_run(mesh2, p, n_blocks=3,
+                                  verify_integrity=True, **skw)
+    o0 = run0(*fields)
+    *ov, fl = runv(*fields)
+    bw(o0, ov)
+    assert int(np.sum(np.asarray(fl))) == 0
+    # ONE traced block: the run's per-block words == the step's
+    assert D.count_integrity_bytes(runv, *fields) == model
+    print("OK")
+""")
+
+
 @pytest.mark.slow
 def test_integrity_counted_equals_model_multidevice():
     run_ok(INTEGRITY_CODE, timeout=600)
+
+
+@pytest.mark.slow
+def test_spec_integrity_counted_equals_model_multidevice():
+    run_ok(SPEC_INTEGRITY_CODE, timeout=600)
 
 
 @pytest.mark.slow
